@@ -1,0 +1,69 @@
+//! Fig. 3 reproduction: task completion time (3a), reuse rate (3b) and CPU
+//! occupancy (3c) for all five scenarios at every network scale.
+//!
+//! Paper headline shapes:
+//!   * SCCR cuts completion time by up to 62.1% vs w/o CR (5×5) and CPU
+//!     occupancy by up to 28.8%;
+//!   * SLCR reuse rates fall with scale (0.544 / 0.39 / 0.27);
+//!   * SCCR ≥ SLCR in reuse rate at every scale;
+//!   * SRS Priority is the worst reuse scenario on completion time and
+//!     can exceed w/o CR at larger scales.
+
+use ccrsat::config::SimConfig;
+use ccrsat::coordinator::Scenario;
+use ccrsat::harness::bench::Bencher;
+use ccrsat::harness::experiments as exp;
+
+fn main() {
+    let cfg = SimConfig::paper_default(5);
+    let backend = exp::default_backend(&cfg).expect("backend");
+    let mut b = Bencher::new("fig3_performance");
+
+    let mut reports = Vec::new();
+    b.bench_once("suite: 5 scenarios x {5,7,9} scales", || {
+        reports = exp::run_scale_suite(
+            &cfg,
+            backend.as_ref(),
+            &exp::PAPER_SCALES,
+            &Scenario::ALL,
+        )
+        .expect("suite");
+    });
+
+    println!("\n{}", exp::fig3_markdown(&reports));
+    b.report();
+
+    let get = |n: usize, s: Scenario| {
+        reports.iter().find(|r| r.n == n && r.scenario == s).unwrap()
+    };
+    let mut ok = true;
+    for n in exp::PAPER_SCALES {
+        let scratch = get(n, Scenario::WithoutCr);
+        let slcr = get(n, Scenario::Slcr);
+        let sccr = get(n, Scenario::Sccr);
+        if slcr.completion_time >= scratch.completion_time {
+            eprintln!("SHAPE VIOLATION: SLCR not faster than w/o CR at {n}x{n}");
+            ok = false;
+        }
+        if sccr.completion_time >= scratch.completion_time {
+            eprintln!("SHAPE VIOLATION: SCCR not faster than w/o CR at {n}x{n}");
+            ok = false;
+        }
+        if sccr.reuse_rate < slcr.reuse_rate {
+            eprintln!("SHAPE VIOLATION: SCCR reuse rate below SLCR at {n}x{n}");
+            ok = false;
+        }
+        if scratch.cpu_occupancy <= sccr.cpu_occupancy {
+            eprintln!("SHAPE VIOLATION: w/o CR CPU not the highest at {n}x{n}");
+            ok = false;
+        }
+    }
+    // SLCR reuse rate decreases with scale (paper: 0.544 → 0.39 → 0.27)
+    let rr5 = get(5, Scenario::Slcr).reuse_rate;
+    let rr9 = get(9, Scenario::Slcr).reuse_rate;
+    if rr9 >= rr5 {
+        eprintln!("SHAPE VIOLATION: SLCR reuse rate must fall with scale ({rr5:.3} → {rr9:.3})");
+        ok = false;
+    }
+    std::process::exit(if ok { 0 } else { 1 });
+}

@@ -1,0 +1,43 @@
+//! Fig. 4 reproduction: impact of τ (records broadcast per collaboration)
+//! on task completion time, 5×5 network, SCCR-INIT and SCCR.
+//!
+//! Paper shape: completion time falls as τ grows and flattens around
+//! τ = 11, where the SCRT storage limit stops further records from adding
+//! value; SCCR tracks at-or-below SCCR-INIT.
+
+use ccrsat::config::SimConfig;
+use ccrsat::harness::bench::Bencher;
+use ccrsat::harness::experiments as exp;
+
+fn main() {
+    let cfg = SimConfig::paper_default(5);
+    let backend = exp::default_backend(&cfg).expect("backend");
+    let mut b = Bencher::new("fig4_tau_sweep");
+
+    let mut rows = Vec::new();
+    b.bench_once("tau sweep x 8 values x 2 scenarios (5x5)", || {
+        rows = exp::tau_sweep(&cfg, backend.as_ref(), 5, &exp::TAU_SWEEP)
+            .expect("sweep");
+    });
+
+    println!("\n{}", exp::fig4_markdown(&rows));
+    b.report();
+
+    // Shape: the curve must not blow up with τ — the late-τ region should
+    // be no worse than ~15% above the best point (the paper's plateau).
+    let mut ok = true;
+    for series in 0..2 {
+        let best = rows
+            .iter()
+            .map(|(_, ys)| ys[series])
+            .fold(f64::INFINITY, f64::min);
+        let last = rows.last().unwrap().1[series];
+        if last > best * 1.25 {
+            eprintln!(
+                "SHAPE VIOLATION: series {series} rises after the plateau (best {best:.1}, τ=15 {last:.1})"
+            );
+            ok = false;
+        }
+    }
+    std::process::exit(if ok { 0 } else { 1 });
+}

@@ -1,0 +1,38 @@
+//! Fig. 5 reproduction: impact of the cooperation threshold th_co on task
+//! completion time, 5×5 network, SCCR-INIT and SCCR (SLCR as reference).
+//!
+//! Paper shape: U-curve — a very small th_co starves collaboration, an
+//! excessive th_co triggers it constantly and the communication burden
+//! dominates (beyond ~0.8 SCCR falls behind SLCR); the optimum sits near
+//! th_co = 0.5.
+
+use ccrsat::config::SimConfig;
+use ccrsat::harness::bench::Bencher;
+use ccrsat::harness::experiments as exp;
+
+fn main() {
+    let cfg = SimConfig::paper_default(5);
+    let backend = exp::default_backend(&cfg).expect("backend");
+    let mut b = Bencher::new("fig5_thco_sweep");
+
+    let mut rows = Vec::new();
+    b.bench_once("th_co sweep x 9 values x 2 scenarios (5x5)", || {
+        rows = exp::thco_sweep(&cfg, backend.as_ref(), 5, &exp::THCO_SWEEP)
+            .expect("sweep");
+    });
+
+    println!("\n{}", exp::fig5_markdown(&rows));
+    b.report();
+
+    // Shape: the extremes must not beat the mid-range (U-ish curve).
+    let mut ok = true;
+    for series in 0..2 {
+        let ys: Vec<f64> = rows.iter().map(|(_, ys)| ys[series]).collect();
+        let mid_best = ys[2..7].iter().cloned().fold(f64::INFINITY, f64::min);
+        if ys[0] < mid_best * 0.98 && *ys.last().unwrap() < mid_best * 0.98 {
+            eprintln!("SHAPE VIOLATION: series {series} is inverted-U");
+            ok = false;
+        }
+    }
+    std::process::exit(if ok { 0 } else { 1 });
+}

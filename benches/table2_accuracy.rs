@@ -1,0 +1,56 @@
+//! Table II reproduction: reuse accuracy for all five scenarios at every
+//! network scale (5×5, 7×7, 9×9).
+//!
+//! Paper reference rows (UC Merced, their testbed):
+//!   5×5: 1 / 0.9692 / 1 / 0.9980 / 0.9970
+//!   7×7: 1 / 0.9756 / 1 / 0.9974 / 0.9954
+//!   9×9: 1 / 0.9190 / 1 / 0.9757 / 0.9750
+//!
+//! Expected shape: w/o CR = 1 exactly (nothing reused); SLCR ≈ 1; the
+//! collaborative scenarios slightly below and degrading with scale.
+
+use ccrsat::config::SimConfig;
+use ccrsat::coordinator::Scenario;
+use ccrsat::harness::bench::Bencher;
+use ccrsat::harness::experiments as exp;
+
+fn main() {
+    let cfg = SimConfig::paper_default(5);
+    let backend = exp::default_backend(&cfg).expect("backend");
+    let mut b = Bencher::new("table2_accuracy");
+
+    let mut reports = Vec::new();
+    b.bench_once("suite: 5 scenarios x {5,7,9} scales", || {
+        reports = exp::run_scale_suite(
+            &cfg,
+            backend.as_ref(),
+            &exp::PAPER_SCALES,
+            &Scenario::ALL,
+        )
+        .expect("suite");
+    });
+
+    println!("\n{}", exp::table2_markdown(&reports));
+    b.report();
+
+    // Shape assertions: warn and exit non-zero on violations.
+    let acc = |n: usize, s: Scenario| {
+        reports
+            .iter()
+            .find(|r| r.n == n && r.scenario == s)
+            .map(|r| r.reuse_accuracy)
+            .unwrap()
+    };
+    let mut ok = true;
+    for n in exp::PAPER_SCALES {
+        if acc(n, Scenario::WithoutCr) != 1.0 {
+            eprintln!("SHAPE VIOLATION: w/o CR accuracy != 1 at {n}x{n}");
+            ok = false;
+        }
+        if acc(n, Scenario::Slcr) < 0.95 {
+            eprintln!("SHAPE VIOLATION: SLCR accuracy {} at {n}x{n}", acc(n, Scenario::Slcr));
+            ok = false;
+        }
+    }
+    std::process::exit(if ok { 0 } else { 1 });
+}

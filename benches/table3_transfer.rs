@@ -1,0 +1,59 @@
+//! Table III reproduction: data transfer volume (MB) for all scenarios at
+//! every network scale.
+//!
+//! Paper reference rows:
+//!   5×5: 0 / 8114.67 / 0 / 889.98 / 1054.09
+//!   7×7: 0 / 44070.41 / 0 / 1732.42 / 1743.56
+//!   9×9: 0 / 184587.78 / 0 / 3125.06 / 3369.23
+//!
+//! Expected shape: w/o CR = SLCR = 0; SCCR slightly above SCCR-INIT; SRS
+//! Priority an order of magnitude above both and exploding with scale.
+
+use ccrsat::config::SimConfig;
+use ccrsat::coordinator::Scenario;
+use ccrsat::harness::bench::Bencher;
+use ccrsat::harness::experiments as exp;
+
+fn main() {
+    let cfg = SimConfig::paper_default(5);
+    let backend = exp::default_backend(&cfg).expect("backend");
+    let mut b = Bencher::new("table3_transfer");
+
+    let mut reports = Vec::new();
+    b.bench_once("suite: 5 scenarios x {5,7,9} scales", || {
+        reports = exp::run_scale_suite(
+            &cfg,
+            backend.as_ref(),
+            &exp::PAPER_SCALES,
+            &Scenario::ALL,
+        )
+        .expect("suite");
+    });
+
+    println!("\n{}", exp::table3_markdown(&reports));
+    b.report();
+
+    let mb = |n: usize, s: Scenario| {
+        reports
+            .iter()
+            .find(|r| r.n == n && r.scenario == s)
+            .map(|r| r.data_transfer_mb)
+            .unwrap()
+    };
+    let mut ok = true;
+    for n in exp::PAPER_SCALES {
+        if mb(n, Scenario::WithoutCr) != 0.0 || mb(n, Scenario::Slcr) != 0.0 {
+            eprintln!("SHAPE VIOLATION: non-collaborative scenario transferred data at {n}x{n}");
+            ok = false;
+        }
+        if mb(n, Scenario::SrsPriority) <= mb(n, Scenario::Sccr) {
+            eprintln!(
+                "SHAPE VIOLATION: SRS Priority ({:.1} MB) must transfer far more than SCCR ({:.1} MB) at {n}x{n}",
+                mb(n, Scenario::SrsPriority),
+                mb(n, Scenario::Sccr)
+            );
+            ok = false;
+        }
+    }
+    std::process::exit(if ok { 0 } else { 1 });
+}

@@ -1,0 +1,60 @@
+//! Domain scenario: disaster monitoring with a hot region.
+//!
+//! The intro of the paper motivates computation reuse with real-time
+//! applications such as disaster warning: during an event, many satellites
+//! repeatedly image the *same* affected area, so the task stream becomes
+//! extremely redundant. This example models that by raising the dwell
+//! probability and the spatial-correlation knobs and compares SLCR vs SCCR
+//! under increasing redundancy — showing where collaborative reuse starts
+//! to pay for its communication.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example disaster_monitoring
+//! ```
+
+use ccrsat::compute::{ComputeBackend, NativeBackend, PjrtBackend};
+use ccrsat::config::SimConfig;
+use ccrsat::coordinator::Scenario;
+use ccrsat::simulator::Simulation;
+
+fn main() -> ccrsat::Result<()> {
+    let base = SimConfig::paper_default(5);
+    let backend: Box<dyn ComputeBackend> =
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            Box::new(PjrtBackend::from_dir("artifacts")?)
+        } else {
+            eprintln!("note: no artifacts found, using the native backend");
+            Box::new(NativeBackend::new(&base))
+        };
+
+    println!("disaster-monitoring sweep: redundancy ramps up as the event");
+    println!("unfolds (dwell probability ↑, scene diversity ↓)\n");
+    println!(
+        "{:<10} {:>12} {:>12} {:>10} {:>10} {:>12}",
+        "dwell", "T_slcr (s)", "T_sccr (s)", "rr_slcr", "rr_sccr", "xfer (MB)"
+    );
+
+    for dwell in [0.3, 0.5, 0.7, 0.85] {
+        let mut cfg = base.clone();
+        cfg.workload.scene_repeat_prob = dwell;
+        cfg.workload.repeat_prob_spread = 0.2;
+        cfg.workload.scenes_per_satellite = 4; // few scenes: the hot area
+        cfg.validate()?;
+
+        let slcr = Simulation::new(&cfg, backend.as_ref(), Scenario::Slcr).run()?;
+        let sccr = Simulation::new(&cfg, backend.as_ref(), Scenario::Sccr).run()?;
+        println!(
+            "{:<10.2} {:>12.1} {:>12.1} {:>10.3} {:>10.3} {:>12.1}",
+            dwell,
+            slcr.completion_time,
+            sccr.completion_time,
+            slcr.reuse_rate,
+            sccr.reuse_rate,
+            sccr.data_transfer_mb
+        );
+    }
+
+    println!("\nhigher redundancy → higher reuse rates and faster completion;");
+    println!("the redundant-event regime is where CCRSat pays off most.");
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Quickstart: run local computation reuse (SLCR) on a small constellation
+//! and print the paper's five criteria.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Uses the PJRT backend (the real Pallas/JAX artifacts) when
+//! `artifacts/manifest.json` exists, else the pure-Rust reference backend.
+
+use ccrsat::compute::{ComputeBackend, NativeBackend, PjrtBackend};
+use ccrsat::config::SimConfig;
+use ccrsat::coordinator::Scenario;
+use ccrsat::simulator::Simulation;
+
+fn main() -> ccrsat::Result<()> {
+    // A 3×3 constellation with 90 tasks — small enough to finish in
+    // seconds, big enough to exercise queueing, hashing and the SSIM gate.
+    let mut cfg = SimConfig::paper_default(3);
+    cfg.workload.total_tasks = 90;
+    cfg.validate()?;
+
+    let backend: Box<dyn ComputeBackend> =
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            Box::new(PjrtBackend::from_dir("artifacts")?)
+        } else {
+            eprintln!("note: no artifacts found, using the native backend");
+            Box::new(NativeBackend::new(&cfg))
+        };
+    println!("backend: {}", backend.name());
+
+    for scenario in [Scenario::WithoutCr, Scenario::Slcr] {
+        let report = Simulation::new(&cfg, backend.as_ref(), scenario).run()?;
+        println!("{}", report.summary());
+    }
+
+    println!("\nSLCR reuses previously computed results whenever the SSIM");
+    println!("similarity gate (eq. 12) exceeds th_sim = {}.", cfg.reuse.th_sim);
+    Ok(())
+}

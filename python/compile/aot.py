@@ -1,0 +1,145 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+HLO text — NOT ``lowered.compile().serialize()`` and NOT a serialized
+``HloModuleProto`` — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which the xla_extension 0.5.1 the Rust ``xla`` crate
+links against rejects (``proto.id() <= INT_MAX``).  The text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Run from ``python/``::
+
+    python -m compile.aot --out-dir ../artifacts
+
+Also writes ``manifest.json`` describing every artifact (entry name, file,
+input/output shapes + dtypes) plus the model constants the Rust simulator
+needs (FLOPs per inference, LSH geometry, class count).  ``make artifacts``
+is a no-op when sources are unchanged (Makefile dependency tracking).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.matmul import vmem_footprint_bytes
+
+BATCH = 32  # oracle-pass batch size
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big weight
+    # tensors as ``constant({...})``, which the Rust-side text parser would
+    # mis-read; the artifacts must be numerically self-contained.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_entry(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": s.dtype.name}
+
+
+ENTRIES = {
+    # name -> (fn, example args)
+    "preprocess": (
+        lambda raw: model.preprocess(raw),
+        [_spec((model.RAW_H, model.RAW_W, model.CHANNELS))],
+    ),
+    "lsh_hash": (
+        lambda pd: model.lsh_hash(pd),
+        [_spec((model.PRE_H, model.PRE_W, model.CHANNELS))],
+    ),
+    "ssim_pair": (
+        lambda a, b: model.ssim_pair(a, b),
+        [_spec((model.PRE_H, model.PRE_W)), _spec((model.PRE_H, model.PRE_W))],
+    ),
+    "classifier": (
+        lambda pd: model.classifier_one(pd),
+        [_spec((model.PRE_H, model.PRE_W, model.CHANNELS))],
+    ),
+    "classifier_batch": (
+        lambda pd: model.classifier_batch(pd),
+        [_spec((BATCH, model.PRE_H, model.PRE_W, model.CHANNELS))],
+    ),
+}
+
+
+def lower_entry(name: str):
+    # Materialise the weights/hyperplanes EAGERLY before tracing: under jit
+    # omnistaging, calling model_params() inside the trace would stage the
+    # whole threefry RNG into the artifact instead of baking concrete
+    # constants (and re-generate weights on every inference call).
+    jax.block_until_ready(model.model_params())
+    jax.block_until_ready(model.lsh_planes(model.P_K))
+    fn, args = ENTRIES[name]
+    lowered = jax.jit(fn).lower(*args)
+    outs = jax.eval_shape(fn, *args)
+    out_leaves = jax.tree_util.tree_leaves(outs)
+    return to_hlo_text(lowered), args, out_leaves
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", nargs="*", default=None,
+        help="subset of entries to lower (default: all)",
+    )
+    ns = ap.parse_args()
+    os.makedirs(ns.out_dir, exist_ok=True)
+
+    manifest = {
+        "format": "hlo-text",
+        "return_tuple": True,
+        "entries": {},
+        "constants": {
+            "raw_h": model.RAW_H,
+            "raw_w": model.RAW_W,
+            "pre_h": model.PRE_H,
+            "pre_w": model.PRE_W,
+            "channels": model.CHANNELS,
+            "num_classes": model.NUM_CLASSES,
+            "p_l": model.P_L,
+            "p_k": model.P_K,
+            "num_buckets": 2 ** model.P_K,
+            "feature_dim": model.FEATURE_DIM,
+            "batch": BATCH,
+            "classifier_flops": model.classifier_flops(),
+            "matmul_vmem_bytes": vmem_footprint_bytes(),
+        },
+    }
+
+    names = ns.only or list(ENTRIES)
+    for name in names:
+        text, args, outs = lower_entry(name)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(ns.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": fname,
+            "inputs": [_shape_entry(a) for a in args],
+            "outputs": [_shape_entry(o) for o in outs],
+        }
+        print(f"lowered {name:18s} -> {path} ({len(text) / 1e6:.2f} MB)")
+
+    with open(os.path.join(ns.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest with {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

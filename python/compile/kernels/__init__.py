@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels for CCRSat.
+
+Every kernel here is authored for TPU (VMEM tiling, MXU-shaped matmuls) but
+lowered with ``interpret=True`` so the resulting HLO runs on the CPU PJRT
+client that the Rust coordinator embeds.  Correctness oracles live in
+:mod:`compile.kernels.ref` and are enforced by ``python/tests``.
+"""
+
+from compile.kernels.matmul import matmul
+from compile.kernels.ssim import ssim
+from compile.kernels.lsh import hyperplane_hash
+
+__all__ = ["matmul", "ssim", "hyperplane_hash"]

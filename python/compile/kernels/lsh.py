@@ -1,0 +1,52 @@
+"""Hyperplane LSH Pallas kernel.
+
+The paper uses FALCONN's hyperplane hashing with ``p_l = 1`` table and
+``p_k = 2`` hash functions (Table I).  Hyperplane LSH is
+``bit_i = sign(h_i · x)`` for random Gaussian hyperplanes ``h_i``; the
+``p_k`` bits concatenate into a bucket id in ``[0, 2**p_k)``.
+
+The projection is an ``(p_k, D) @ (D, 1)`` matvec — we express it through
+the same tiled Pallas matmul schedule as the classifier (one kernel, two
+call sites), then take signs in jnp.  Supporting arbitrary ``p_k`` keeps
+the sensitivity-analysis sweeps honest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.matmul import matmul
+
+
+def make_hyperplanes(key: jax.Array, p_k: int, dim: int) -> jax.Array:
+    """Random Gaussian hyperplanes, the FALCONN hyperplane family."""
+    return jax.random.normal(key, (p_k, dim), dtype=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hyperplane_hash(
+    planes: jax.Array, x: jax.Array, *, interpret: bool = True
+) -> tuple[jax.Array, jax.Array]:
+    """Hash a flattened input vector.
+
+    Args:
+      planes: ``(p_k, D)`` Gaussian hyperplanes.
+      x: ``(D,)`` flattened pre-processed input.
+
+    Returns:
+      ``(bucket, projections)`` — ``bucket`` is a uint32 scalar in
+      ``[0, 2**p_k)``; ``projections`` the raw ``(p_k,)`` dot products
+      (useful for multiprobe extensions and for tests).
+    """
+    if planes.ndim != 2 or x.ndim != 1 or planes.shape[1] != x.shape[0]:
+        raise ValueError(f"shape mismatch: planes {planes.shape}, x {x.shape}")
+    p_k = planes.shape[0]
+    # (p_k, D) @ (D, 1) through the tiled MXU kernel.
+    proj = matmul(planes, x[:, None], interpret=interpret)[:, 0]
+    bits = (proj >= 0).astype(jnp.uint32)
+    weights = (2 ** jnp.arange(p_k, dtype=jnp.uint32))[::-1]
+    bucket = jnp.sum(bits * weights).astype(jnp.uint32)
+    return bucket, proj

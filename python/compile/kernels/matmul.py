@@ -1,0 +1,122 @@
+"""Tiled matmul Pallas kernel (MXU-shaped).
+
+Used by the MicroGoogLeNet dense layers and the LSH hyperplane projection.
+The kernel tiles ``(M, K) @ (K, N)`` into ``(bm, bk) x (bk, bn)`` VMEM blocks
+and accumulates over the K grid axis into the output block, which stays
+resident across the K sweep (revisiting schedule) — the canonical TPU
+schedule: one MXU-sized block pair in VMEM per grid step, HBM traffic
+expressed through the BlockSpec index maps.
+
+On this image we lower with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); the *structure* is what a real TPU build would use.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-aligned tile sizes.  The MXU is a 128x128 systolic array;
+# float32 VMEM tiling is (8, 128), so every default is a multiple of both.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One grid step: accumulate x_block @ w_block into the output block.
+
+    Grid is (M/bm, N/bn, K/bk) with K innermost, so the (i, j) output block
+    is revisited across the whole K sweep and written back to HBM once.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU op: block matmul with f32 accumulation.
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
+    """Zero-pad a 2D array so both dims are multiples of the tile sizes."""
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+def _shrink(tile: int, dim: int, floor: int) -> int:
+    """Shrink a tile for small operands while keeping power-of-2 alignment."""
+    return min(tile, max(floor, 1 << (max(dim - 1, 1)).bit_length()))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    """``x @ w`` via the tiled Pallas kernel.
+
+    Operands of any 2D shape are zero-padded up to the tile grid and the
+    result is sliced back, so callers never see the padding.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul expects 2D operands, got {x.shape} @ {w.shape}")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    m, k = x.shape
+    _, n = w.shape
+
+    # Shrink tiles for small operands (keeps padding waste bounded while
+    # still exercising the same kernel).  Sublane floor 8, lane floor 128.
+    bm = _shrink(bm, m, 8)
+    bn = _shrink(bn, n, 128)
+    bk = _shrink(bk, k, 128)
+
+    xp = _pad_to(x.astype(jnp.float32), bm, bk)
+    wp = _pad_to(w.astype(jnp.float32), bk, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                         bk: int = DEFAULT_BK) -> int:
+    """Estimated VMEM bytes live per grid step (x, w and output blocks)."""
+    f32 = 4
+    return f32 * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int,
+                             bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                             bk: int = DEFAULT_BK) -> float:
+    """Fraction of issued MXU work that is real (non-padding) FLOPs."""
+    mp = ((m + bm - 1) // bm) * bm
+    kp = ((k + bk - 1) // bk) * bk
+    np_ = ((n + bn - 1) // bn) * bn
+    return (m * k * n) / float(mp * kp * np_)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every L1 kernel.
+
+These are the ground truth the Pallas kernels are tested against
+(``python/tests/test_kernel.py``); they are also what the L2 model would use
+if the Pallas layer were disabled, so they double as an ablation path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.ssim import C1, C2, C3
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Reference for kernels.matmul: plain f32 dot."""
+    return jnp.dot(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def ssim_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Reference for kernels.ssim: eq. (12), global window, same constants."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    n = x.size
+    mu_x = jnp.mean(x)
+    mu_y = jnp.mean(y)
+    var_x = jnp.maximum(jnp.mean(x * x) - mu_x**2, 0.0)
+    var_y = jnp.maximum(jnp.mean(y * y) - mu_y**2, 0.0)
+    cov = jnp.mean(x * y) - mu_x * mu_y
+    sig_x = jnp.sqrt(var_x)
+    sig_y = jnp.sqrt(var_y)
+    lum = (2 * mu_x * mu_y + C1) / (mu_x**2 + mu_y**2 + C1)
+    con = (2 * sig_x * sig_y + C2) / (var_x + var_y + C2)
+    struct = (cov + C3) / (sig_x * sig_y + C3)
+    return lum * con * struct
+
+
+def hyperplane_hash_ref(
+    planes: jax.Array, x: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Reference for kernels.hyperplane_hash."""
+    proj = planes.astype(jnp.float32) @ x.astype(jnp.float32)
+    bits = (proj >= 0).astype(jnp.uint32)
+    weights = (2 ** jnp.arange(planes.shape[0], dtype=jnp.uint32))[::-1]
+    return jnp.sum(bits * weights).astype(jnp.uint32), proj

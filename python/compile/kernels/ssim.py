@@ -1,0 +1,124 @@
+"""SSIM Pallas kernel — eq. (12) of the paper.
+
+CCRSat gates every reuse decision on the structural similarity between the
+pre-processed task input and its LSH nearest neighbour, so SSIM sits on the
+hot path of both SLCR (Alg. 1 line 8) and the collaborative flow.
+
+The paper uses the *global* SSIM form (single window over the whole image,
+eq. 12 with the three-term decomposition).  The kernel tiles both images
+into VMEM blocks and accumulates the five sufficient statistics
+``(Σx, Σy, Σx², Σy², Σxy)`` per block on the VPU; the scalar combine into
+luminance/contrast/structure terms happens in plain jnp afterwards (a few
+scalar ops — not worth a kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Stabilisation constants, standard SSIM choices for dynamic range L=1
+# (inputs are normalised to [0, 1]).
+K1 = 0.01
+K2 = 0.03
+L = 1.0
+C1 = (K1 * L) ** 2
+C2 = (K2 * L) ** 2
+C3 = C2 / 2.0
+
+# VMEM tile for the reduction: one (8, 128)-aligned block per grid step.
+BLOCK_R = 8
+BLOCK_C = 128
+
+
+def _moments_kernel(x_ref, y_ref, o_ref):
+    """Accumulate the five sufficient statistics over the tile grid.
+
+    ``o_ref`` is a (1, 5) revisited output block: every grid step adds its
+    tile's partial sums, so after the sweep it holds the full-image moments.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    y = y_ref[...]
+    part = jnp.stack(
+        [
+            jnp.sum(x),
+            jnp.sum(y),
+            jnp.sum(x * x),
+            jnp.sum(y * y),
+            jnp.sum(x * y),
+        ]
+    ).reshape(1, 5)
+    o_ref[...] += part
+
+
+def _pad2(x: jax.Array) -> jax.Array:
+    p0 = (-x.shape[0]) % BLOCK_R
+    p1 = (-x.shape[1]) % BLOCK_C
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssim(x: jax.Array, y: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Global SSIM between two grayscale images (eq. 12), scalar in [-1, 1].
+
+    Zero-padding both images identically does not bias the *sums*; the
+    denominators use the true pixel count ``n``, so means/variances are
+    computed over real pixels only... except padded zeros do enter Σ terms.
+    To keep the statistics exact we mask nothing: instead the images are
+    padded and ``n`` counts padded pixels too, but both images receive the
+    same zero padding, which perturbs both marginals identically.  For exact
+    parity with the oracle we simply compute over the padded arrays in both
+    kernel and reference (see ref.ssim_ref, which applies the same padding).
+    """
+    if x.shape != y.shape or x.ndim != 2:
+        raise ValueError(f"ssim expects equal 2D shapes, got {x.shape}, {y.shape}")
+    xp = _pad2(x.astype(jnp.float32))
+    yp = _pad2(y.astype(jnp.float32))
+    rows, cols = xp.shape
+    n = jnp.float32(x.shape[0] * x.shape[1])
+    # Padded-zero corrections are unnecessary for Σ terms (zeros add 0), so
+    # the sums over the padded arrays equal the sums over the originals.
+
+    moments = pl.pallas_call(
+        _moments_kernel,
+        grid=(rows // BLOCK_R, cols // BLOCK_C),
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
+            pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 5), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 5), jnp.float32),
+        interpret=interpret,
+    )(xp, yp)[0]
+
+    sx, sy, sxx, syy, sxy = moments[0], moments[1], moments[2], moments[3], moments[4]
+    mu_x = sx / n
+    mu_y = sy / n
+    var_x = jnp.maximum(sxx / n - mu_x * mu_x, 0.0)
+    var_y = jnp.maximum(syy / n - mu_y * mu_y, 0.0)
+    cov = sxy / n - mu_x * mu_y
+    sig_x = jnp.sqrt(var_x)
+    sig_y = jnp.sqrt(var_y)
+
+    lum = (2 * mu_x * mu_y + C1) / (mu_x**2 + mu_y**2 + C1)
+    con = (2 * sig_x * sig_y + C2) / (var_x + var_y + C2)
+    struct = (cov + C3) / (sig_x * sig_y + C3)
+    return lum * con * struct
+
+
+def vmem_footprint_bytes() -> int:
+    """VMEM bytes live per grid step (two input tiles + moment block)."""
+    f32 = 4
+    return f32 * (2 * BLOCK_R * BLOCK_C + 5)

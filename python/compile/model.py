@@ -1,0 +1,229 @@
+"""Layer-2 JAX compute graphs for CCRSat.
+
+Four entry points, each AOT-lowered by :mod:`compile.aot` into an HLO-text
+artifact the Rust coordinator executes via PJRT:
+
+* ``preprocess``       — Alg. 1 line 1: resize (2x2 mean pool), normalise,
+                         grayscale for SSIM.
+* ``lsh_hash``         — Alg. 1 line 2: FALCONN-style hyperplane hashing of
+                         the flattened pre-processed input (Pallas kernel).
+* ``ssim_pair``        — Alg. 1 line 8: eq. (12) similarity gate
+                         (Pallas kernel).
+* ``classifier_batch`` — Alg. 1 lines 4/13: the "pre-trained model"
+                         (MicroGoogLeNet, the GoogLeNet-22 stand-in; dense
+                         layers run through the Pallas matmul kernel).
+
+The classifier weights are seeded (PRNGKey(42)) and baked into the artifact
+as constants: the Rust side ships no Python and loads no weight files.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.lsh import hyperplane_hash, make_hyperplanes
+from compile.kernels.matmul import matmul
+from compile.kernels.ssim import ssim
+
+# ---------------------------------------------------------------------------
+# Geometry / hyper-parameters (Table I of the paper where applicable).
+# ---------------------------------------------------------------------------
+RAW_H = 64          # raw sensor tile (stand-in for UC Merced 256x256)
+RAW_W = 64
+PRE_H = 32          # pre-processed model input (stand-in for 224x224)
+PRE_W = 32
+CHANNELS = 3
+NUM_CLASSES = 21    # UC Merced has 21 land-use classes
+P_L = 1             # number of LSH tables   (Table I)
+P_K = 2             # number of hash functions (Table I)
+FEATURE_DIM = PRE_H * PRE_W * CHANNELS
+WEIGHT_SEED = 42
+LSH_SEED = 7
+
+GRAY_COEFFS = jnp.array([0.299, 0.587, 0.114], dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Entry point 1: preprocess.
+# ---------------------------------------------------------------------------
+def preprocess(raw: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Resize + normalise + grayscale.
+
+    Args:
+      raw: ``f32[RAW_H, RAW_W, 3]`` pixel values in [0, 255].
+
+    Returns:
+      ``(pd, gray)`` — ``pd`` is ``f32[PRE_H, PRE_W, 3]`` in [0, 1] (model
+      input), ``gray`` is ``f32[PRE_H, PRE_W]`` (SSIM input).
+    """
+    x = raw.astype(jnp.float32) / 255.0
+    # 2x2 mean pool == bilinear-free resize from 64 -> 32.
+    fh = RAW_H // PRE_H
+    fw = RAW_W // PRE_W
+    x = x.reshape(PRE_H, fh, PRE_W, fw, CHANNELS).mean(axis=(1, 3))
+    gray = jnp.einsum("hwc,c->hw", x, GRAY_COEFFS)
+    return x, gray
+
+
+# ---------------------------------------------------------------------------
+# Entry point 2: LSH hash.
+# ---------------------------------------------------------------------------
+@functools.cache
+def lsh_planes(p_k: int = P_K) -> jax.Array:
+    return make_hyperplanes(jax.random.PRNGKey(LSH_SEED), p_k, FEATURE_DIM)
+
+
+def lsh_hash(pd: jax.Array, *, p_k: int = P_K) -> tuple[jax.Array, jax.Array]:
+    """Bucket id + raw projections for a pre-processed input."""
+    planes = lsh_planes(p_k)
+    return hyperplane_hash(planes, pd.reshape(-1))
+
+
+# ---------------------------------------------------------------------------
+# Entry point 3: SSIM pair.
+# ---------------------------------------------------------------------------
+def ssim_pair(gray_a: jax.Array, gray_b: jax.Array) -> tuple[jax.Array]:
+    """Eq. (12) similarity between two grayscale pre-processed inputs."""
+    return (ssim(gray_a, gray_b),)
+
+
+# ---------------------------------------------------------------------------
+# Entry point 4: the pre-trained model (MicroGoogLeNet).
+# ---------------------------------------------------------------------------
+class InceptionParams(NamedTuple):
+    """One inception block: 1x1 / 1x1->3x3 / 1x1->5x5 / pool->1x1 branches."""
+
+    b1: jax.Array            # (1,1,c,b1)
+    r2: jax.Array            # (1,1,c,r2)
+    b2: jax.Array            # (3,3,r2,b2)
+    r3: jax.Array            # (1,1,c,r3)
+    b3: jax.Array            # (5,5,r3,b3)
+    b4: jax.Array            # (1,1,c,b4)
+
+
+class ModelParams(NamedTuple):
+    stem: jax.Array          # (3,3,3,16)
+    inc1: InceptionParams    # 16 -> 24
+    inc2: InceptionParams    # 24 -> 32
+    fc1: jax.Array           # (8*8*32, 64)
+    fc2: jax.Array           # (64, NUM_CLASSES)
+
+
+def _conv_init(key: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    fan_in = shape[0] * shape[1] * shape[2]
+    return jax.random.normal(key, shape, dtype=jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def _inception_init(key: jax.Array, c: int, spec) -> InceptionParams:
+    b1, r2, b2, r3, b3, b4 = spec
+    ks = jax.random.split(key, 6)
+    return InceptionParams(
+        b1=_conv_init(ks[0], (1, 1, c, b1)),
+        r2=_conv_init(ks[1], (1, 1, c, r2)),
+        b2=_conv_init(ks[2], (3, 3, r2, b2)),
+        r3=_conv_init(ks[3], (1, 1, c, r3)),
+        b3=_conv_init(ks[4], (5, 5, r3, b3)),
+        b4=_conv_init(ks[5], (1, 1, c, b4)),
+    )
+
+
+@functools.cache
+def model_params() -> ModelParams:
+    """Deterministic 'pre-trained' weights baked into the artifact."""
+    ks = jax.random.split(jax.random.PRNGKey(WEIGHT_SEED), 5)
+    fc_in = (PRE_H // 4) * (PRE_W // 4) * 32
+    return ModelParams(
+        stem=_conv_init(ks[0], (3, 3, CHANNELS, 16)),
+        inc1=_inception_init(ks[1], 16, (8, 8, 8, 4, 4, 4)),     # out 24
+        inc2=_inception_init(ks[2], 24, (12, 12, 12, 4, 4, 4)),  # out 32
+        fc1=jax.random.normal(ks[3], (fc_in, 64), dtype=jnp.float32)
+        * jnp.sqrt(2.0 / fc_in),
+        fc2=jax.random.normal(ks[4], (64, NUM_CLASSES), dtype=jnp.float32)
+        * jnp.sqrt(2.0 / 64),
+    )
+
+
+def _conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """NHWC same-padding conv (XLA fuses these; the MXU work is in fc)."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _maxpool2(x: jax.Array) -> jax.Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _maxpool3_same(x: jax.Array) -> jax.Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 1, 1, 1), "SAME"
+    )
+
+
+def _inception(x: jax.Array, p: InceptionParams) -> jax.Array:
+    br1 = _conv(x, p.b1)
+    br2 = _conv(jax.nn.relu(_conv(x, p.r2)), p.b2)
+    br3 = _conv(jax.nn.relu(_conv(x, p.r3)), p.b3)
+    br4 = _conv(_maxpool3_same(x), p.b4)
+    return jax.nn.relu(jnp.concatenate([br1, br2, br3, br4], axis=-1))
+
+
+def classifier_batch(pd: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """MicroGoogLeNet forward over a batch.
+
+    Args:
+      pd: ``f32[B, PRE_H, PRE_W, 3]`` pre-processed inputs.
+
+    Returns:
+      ``(logits f32[B, 21], labels u32[B])``.
+    """
+    p = model_params()
+    x = jax.nn.relu(_conv(pd, p.stem))
+    x = _maxpool2(x)                      # 16x16x16
+    x = _inception(x, p.inc1)             # 16x16x24
+    x = _maxpool2(x)                      # 8x8x24
+    x = _inception(x, p.inc2)             # 8x8x32
+    x = x.reshape(x.shape[0], -1)         # (B, 2048)
+    # Dense layers through the Pallas MXU kernel.
+    x = jax.nn.relu(matmul(x, p.fc1))
+    logits = matmul(x, p.fc2)
+    labels = jnp.argmax(logits, axis=-1).astype(jnp.uint32)
+    return logits, labels
+
+
+def classifier_one(pd: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Single-image classifier: ``f32[PRE_H, PRE_W, 3] -> (f32[21], u32[])``."""
+    logits, labels = classifier_batch(pd[None])
+    return logits[0], labels[0]
+
+
+# ---------------------------------------------------------------------------
+# Analytic cost of one classifier call — feeds the paper's F_t (eq. 6).
+# ---------------------------------------------------------------------------
+def classifier_flops() -> int:
+    """MACs*2 of one forward pass; the simulator scales this to GoogLeNet-22."""
+
+    def conv_flops(h, w, kh, kw, cin, cout):
+        return 2 * h * w * kh * kw * cin * cout
+
+    f = 0
+    f += conv_flops(32, 32, 3, 3, 3, 16)                      # stem
+    # inception 1 at 16x16, cin 16, spec (8,8,8,4,4,4)
+    f += conv_flops(16, 16, 1, 1, 16, 8)
+    f += conv_flops(16, 16, 1, 1, 16, 8) + conv_flops(16, 16, 3, 3, 8, 8)
+    f += conv_flops(16, 16, 1, 1, 16, 4) + conv_flops(16, 16, 5, 5, 4, 4)
+    f += conv_flops(16, 16, 1, 1, 16, 4)
+    # inception 2 at 8x8, cin 24, spec (12,12,12,4,4,4)
+    f += conv_flops(8, 8, 1, 1, 24, 12)
+    f += conv_flops(8, 8, 1, 1, 24, 12) + conv_flops(8, 8, 3, 3, 12, 12)
+    f += conv_flops(8, 8, 1, 1, 24, 4) + conv_flops(8, 8, 5, 5, 4, 4)
+    f += conv_flops(8, 8, 1, 1, 24, 4)
+    f += 2 * 2048 * 64 + 2 * 64 * NUM_CLASSES                 # dense head
+    return f

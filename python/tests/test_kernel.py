@@ -1,0 +1,186 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/values; fixed seeds keep runs deterministic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lsh import hyperplane_hash, make_hyperplanes
+from compile.kernels.matmul import matmul, mxu_utilization_estimate, vmem_footprint_bytes
+from compile.kernels.ssim import ssim
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, lo=-2.0, hi=2.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape,
+                              minval=lo, maxval=hi, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+class TestMatmul:
+    @pytest.mark.parametrize(
+        "m,k,n",
+        [
+            (1, 1, 1),
+            (2, 3072, 1),        # the LSH projection shape
+            (8, 128, 128),
+            (32, 2048, 64),      # classifier fc1 shape
+            (32, 64, 21),        # classifier fc2 shape
+            (128, 128, 128),     # exactly one tile
+            (129, 257, 130),     # off-tile sizes exercise padding
+            (300, 100, 200),
+        ],
+    )
+    def test_matches_ref(self, m, k, n):
+        x = _rand(m * 1000 + k, (m, k))
+        w = _rand(n * 1000 + k + 1, (k, n))
+        got = matmul(x, w)
+        want = ref.matmul_ref(x, w)
+        # tolerance scales with K: tiled accumulation reassociates the sum
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4 * max(k, 16) ** 0.5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 96),
+        k=st.integers(1, 160),
+        n=st.integers(1, 96),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_hypothesis(self, m, k, n, seed):
+        x = _rand(seed, (m, k))
+        w = _rand(seed + 1, (k, n))
+        np.testing.assert_allclose(
+            np.asarray(matmul(x, w)), np.asarray(ref.matmul_ref(x, w)),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    def test_zero_operand(self):
+        x = jnp.zeros((16, 32), jnp.float32)
+        w = _rand(3, (32, 8))
+        np.testing.assert_array_equal(np.asarray(matmul(x, w)), 0.0)
+
+    def test_identity(self):
+        x = _rand(9, (24, 24))
+        eye = jnp.eye(24, dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(matmul(x, eye)),
+                                   np.asarray(x), rtol=1e-6, atol=1e-6)
+
+    def test_shape_validation(self):
+        with pytest.raises(ValueError):
+            matmul(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+        with pytest.raises(ValueError):
+            matmul(jnp.zeros((2,)), jnp.zeros((2, 2)))
+
+    def test_mxu_utilization_estimate(self):
+        assert mxu_utilization_estimate(128, 128, 128) == 1.0
+        assert 0.0 < mxu_utilization_estimate(129, 129, 129) < 1.0
+        assert vmem_footprint_bytes() == 4 * 3 * 128 * 128
+
+
+# ---------------------------------------------------------------------------
+# ssim
+# ---------------------------------------------------------------------------
+class TestSsim:
+    def test_identical_images_is_one(self):
+        x = _rand(1, (32, 32), 0.0, 1.0)
+        assert float(ssim(x, x)) == pytest.approx(1.0, abs=1e-5)
+
+    def test_matches_ref_random_pairs(self):
+        for seed in range(8):
+            x = _rand(seed, (32, 32), 0.0, 1.0)
+            y = _rand(seed + 100, (32, 32), 0.0, 1.0)
+            assert float(ssim(x, y)) == pytest.approx(
+                float(ref.ssim_ref(x, y)), abs=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**16), rows=st.integers(4, 64),
+           cols=st.integers(4, 64))
+    def test_matches_ref_hypothesis(self, seed, rows, cols):
+        x = _rand(seed, (rows, cols), 0.0, 1.0)
+        y = _rand(seed + 1, (rows, cols), 0.0, 1.0)
+        assert float(ssim(x, y)) == pytest.approx(
+            float(ref.ssim_ref(x, y)), abs=1e-4)
+
+    def test_symmetry(self):
+        x = _rand(5, (32, 32), 0.0, 1.0)
+        y = _rand(6, (32, 32), 0.0, 1.0)
+        assert float(ssim(x, y)) == pytest.approx(float(ssim(y, x)), abs=1e-6)
+
+    def test_range(self):
+        for seed in range(6):
+            x = _rand(seed, (32, 32), 0.0, 1.0)
+            y = _rand(seed + 50, (32, 32), 0.0, 1.0)
+            v = float(ssim(x, y))
+            assert -1.0 - 1e-6 <= v <= 1.0 + 1e-6
+
+    def test_inverse_correlation_is_negative(self):
+        x = _rand(7, (32, 32), 0.0, 1.0)
+        y = jnp.mean(x) * 2.0 - x  # mirror around the mean -> cov < 0
+        assert float(ssim(x, y)) < 0.0
+
+    def test_constant_images(self):
+        x = jnp.full((32, 32), 0.5, jnp.float32)
+        y = jnp.full((32, 32), 0.5, jnp.float32)
+        assert float(ssim(x, y)) == pytest.approx(1.0, abs=1e-5)
+
+    def test_shape_validation(self):
+        with pytest.raises(ValueError):
+            ssim(jnp.zeros((4, 4)), jnp.zeros((4, 5)))
+
+
+# ---------------------------------------------------------------------------
+# hyperplane LSH
+# ---------------------------------------------------------------------------
+class TestHyperplaneHash:
+    @pytest.mark.parametrize("p_k,dim", [(1, 16), (2, 3072), (4, 100), (8, 64)])
+    def test_matches_ref(self, p_k, dim):
+        planes = make_hyperplanes(jax.random.PRNGKey(0), p_k, dim)
+        for seed in range(4):
+            x = _rand(seed, (dim,))
+            got_b, got_p = hyperplane_hash(planes, x)
+            want_b, want_p = ref.hyperplane_hash_ref(planes, x)
+            assert int(got_b) == int(want_b)
+            np.testing.assert_allclose(np.asarray(got_p), np.asarray(want_p),
+                                       rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(p_k=st.integers(1, 6), dim=st.integers(2, 256),
+           seed=st.integers(0, 2**16))
+    def test_bucket_in_range_hypothesis(self, p_k, dim, seed):
+        planes = make_hyperplanes(jax.random.PRNGKey(seed), p_k, dim)
+        x = _rand(seed + 1, (dim,))
+        bucket, proj = hyperplane_hash(planes, x)
+        assert 0 <= int(bucket) < 2**p_k
+        assert proj.shape == (p_k,)
+
+    def test_locality(self):
+        """Near-identical inputs hash to the same bucket (the LSH property)."""
+        planes = make_hyperplanes(jax.random.PRNGKey(1), 2, 512)
+        x = _rand(11, (512,))
+        y = x + 1e-5
+        assert int(hyperplane_hash(planes, x)[0]) == int(
+            hyperplane_hash(planes, y)[0])
+
+    def test_negation_flips_all_bits(self):
+        planes = make_hyperplanes(jax.random.PRNGKey(2), 3, 128)
+        x = _rand(12, (128,))
+        b1, p1 = hyperplane_hash(planes, x)
+        b2, p2 = hyperplane_hash(planes, -x)
+        # projections negate; bits flip wherever proj != 0
+        np.testing.assert_allclose(np.asarray(p2), -np.asarray(p1),
+                                   rtol=1e-4, atol=1e-5)
+        assert int(b1) ^ int(b2) == (1 << 3) - 1
+
+    def test_shape_validation(self):
+        planes = make_hyperplanes(jax.random.PRNGKey(0), 2, 8)
+        with pytest.raises(ValueError):
+            hyperplane_hash(planes, jnp.zeros((9,)))

@@ -1,0 +1,149 @@
+"""L2 model-graph tests: shapes, determinism, and semantic sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _raw(seed: int) -> jax.Array:
+    return jax.random.uniform(
+        jax.random.PRNGKey(seed),
+        (model.RAW_H, model.RAW_W, model.CHANNELS),
+        minval=0.0, maxval=255.0, dtype=jnp.float32,
+    )
+
+
+class TestPreprocess:
+    def test_shapes(self):
+        pd, gray = model.preprocess(_raw(0))
+        assert pd.shape == (model.PRE_H, model.PRE_W, model.CHANNELS)
+        assert gray.shape == (model.PRE_H, model.PRE_W)
+
+    def test_range(self):
+        pd, gray = model.preprocess(_raw(1))
+        assert float(pd.min()) >= 0.0 and float(pd.max()) <= 1.0
+        assert float(gray.min()) >= 0.0 and float(gray.max()) <= 1.0
+
+    def test_mean_pool_exact(self):
+        raw = jnp.arange(
+            model.RAW_H * model.RAW_W * model.CHANNELS, dtype=jnp.float32
+        ).reshape(model.RAW_H, model.RAW_W, model.CHANNELS) % 256
+        pd, _ = model.preprocess(raw)
+        # manual 2x2 mean of the normalized image, top-left block
+        block = raw[:2, :2, 0] / 255.0
+        assert float(pd[0, 0, 0]) == pytest.approx(float(block.mean()), abs=1e-6)
+
+    def test_grayscale_coefficients(self):
+        # pure red / green / blue raw tiles map to the BT.601 luma weights
+        for c, coeff in enumerate([0.299, 0.587, 0.114]):
+            raw = jnp.zeros((model.RAW_H, model.RAW_W, 3)).at[:, :, c].set(255.0)
+            _, gray = model.preprocess(raw)
+            np.testing.assert_allclose(np.asarray(gray), coeff, rtol=1e-5)
+
+    def test_constant_image(self):
+        raw = jnp.full((model.RAW_H, model.RAW_W, 3), 128.0)
+        pd, gray = model.preprocess(raw)
+        np.testing.assert_allclose(np.asarray(pd), 128.0 / 255.0, rtol=1e-6)
+
+
+class TestLshHash:
+    def test_deterministic(self):
+        pd, _ = model.preprocess(_raw(2))
+        b1, p1 = model.lsh_hash(pd)
+        b2, p2 = model.lsh_hash(pd)
+        assert int(b1) == int(b2)
+        np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+    def test_bucket_range(self):
+        for seed in range(8):
+            pd, _ = model.preprocess(_raw(seed))
+            bucket, proj = model.lsh_hash(pd)
+            assert 0 <= int(bucket) < 2**model.P_K
+            assert proj.shape == (model.P_K,)
+
+    def test_similar_inputs_collide(self):
+        raw = _raw(3)
+        pd1, _ = model.preprocess(raw)
+        pd2, _ = model.preprocess(raw + 0.5)  # sub-quantum perturbation
+        assert int(model.lsh_hash(pd1)[0]) == int(model.lsh_hash(pd2)[0])
+
+    def test_buckets_are_used(self):
+        """Across many random inputs, more than one bucket must appear."""
+        seen = {
+            int(model.lsh_hash(model.preprocess(_raw(s))[0])[0])
+            for s in range(24)
+        }
+        assert len(seen) >= 2
+
+
+class TestSsimPair:
+    def test_identical(self):
+        _, gray = model.preprocess(_raw(4))
+        (v,) = model.ssim_pair(gray, gray)
+        assert float(v) == pytest.approx(1.0, abs=1e-5)
+
+    def test_distinct_scenes_below_one(self):
+        _, g1 = model.preprocess(_raw(5))
+        _, g2 = model.preprocess(_raw(6))
+        (v,) = model.ssim_pair(g1, g2)
+        assert float(v) < 0.999
+
+
+class TestClassifier:
+    def test_shapes(self):
+        pd, _ = model.preprocess(_raw(7))
+        logits, label = model.classifier_one(pd)
+        assert logits.shape == (model.NUM_CLASSES,)
+        assert label.shape == ()
+        assert label.dtype == jnp.uint32
+
+    def test_label_is_argmax(self):
+        pd, _ = model.preprocess(_raw(8))
+        logits, label = model.classifier_one(pd)
+        assert int(label) == int(jnp.argmax(logits))
+
+    def test_deterministic(self):
+        pd, _ = model.preprocess(_raw(9))
+        l1, _ = model.classifier_one(pd)
+        l2, _ = model.classifier_one(pd)
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+    def test_batch_matches_single(self):
+        pds = jnp.stack([model.preprocess(_raw(s))[0] for s in range(4)])
+        logits_b, labels_b = model.classifier_batch(pds)
+        assert logits_b.shape == (4, model.NUM_CLASSES)
+        for i in range(4):
+            logits_1, label_1 = model.classifier_one(pds[i])
+            np.testing.assert_allclose(np.asarray(logits_b[i]),
+                                       np.asarray(logits_1),
+                                       rtol=1e-4, atol=1e-5)
+            assert int(labels_b[i]) == int(label_1)
+
+    def test_labels_vary_across_inputs(self):
+        labels = {
+            int(model.classifier_one(model.preprocess(_raw(s))[0])[1])
+            for s in range(24)
+        }
+        assert len(labels) >= 2, "degenerate classifier: one label for all inputs"
+
+    def test_flops_positive_and_stable(self):
+        f = model.classifier_flops()
+        assert f > 1e6
+        assert f == model.classifier_flops()
+
+
+class TestParams:
+    def test_cached_identity(self):
+        assert model.model_params() is model.model_params()
+        assert model.lsh_planes(model.P_K) is model.lsh_planes(model.P_K)
+
+    def test_weight_shapes(self):
+        p = model.model_params()
+        assert p.stem.shape == (3, 3, 3, 16)
+        assert p.fc1.shape == ((model.PRE_H // 4) * (model.PRE_W // 4) * 32, 64)
+        assert p.fc2.shape == (64, model.NUM_CLASSES)

@@ -1,0 +1,118 @@
+//! Compute backends: the data-dependent operations of the reuse pipeline.
+//!
+//! The coordinator is generic over [`ComputeBackend`] with two production
+//! implementations:
+//!
+//! * [`PjrtBackend`] — executes the AOT artifacts (Pallas/JAX lowered to
+//!   HLO) through the PJRT engine. This is the real three-layer path used
+//!   by the paper-reproduction runs.
+//! * [`NativeBackend`] — a pure-Rust reference of preprocess / hyperplane
+//!   LSH / SSIM plus a seeded linear classifier. Used by unit tests, fast
+//!   sweeps and as a cross-check against the artifacts (the integration
+//!   suite asserts both backends agree on SSIM and preprocessing).
+
+pub mod native;
+pub mod pjrt;
+
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;
+
+use crate::error::Result;
+use crate::workload::ImageData;
+
+/// A pre-processed task input (`PD_t` in Alg. 1) plus the grayscale plane
+/// the SSIM gate consumes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Preprocessed {
+    pub h: usize,
+    pub w: usize,
+    /// `[h, w, 3]` row-major, values in [0, 1].
+    pub pd: Vec<f32>,
+    /// `[h, w]` grayscale, values in [0, 1].
+    pub gray: Vec<f32>,
+}
+
+/// The data-dependent operations Alg. 1/2 need.
+pub trait ComputeBackend {
+    /// Alg. 1 line 1: resize + normalise + grayscale.
+    fn preprocess(&self, raw: &ImageData) -> Result<Preprocessed>;
+
+    /// Alg. 1 line 2: LSH bucket of a pre-processed input.
+    fn lsh_bucket(&self, pre: &Preprocessed) -> Result<u32>;
+
+    /// Alg. 1 line 8: SSIM between two pre-processed inputs (eq. 12).
+    fn ssim(&self, a: &Preprocessed, b: &Preprocessed) -> Result<f32>;
+
+    /// Alg. 1 lines 4/13: run the pre-trained model, return the label.
+    fn classify(&self, pre: &Preprocessed) -> Result<u32>;
+
+    /// Batched classify for the oracle pass; the default maps `classify`.
+    fn classify_many(&self, pres: &[&Preprocessed]) -> Result<Vec<u32>> {
+        pres.iter().map(|p| self.classify(p)).collect()
+    }
+
+    /// Number of LSH buckets (`2^p_k`).
+    fn num_buckets(&self) -> usize;
+
+    /// Human-readable backend name (logs, reports).
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::util::rng::Rng;
+    use crate::workload::texture::{SceneSpec, TextureSynth};
+
+    /// Shared backend conformance suite, run against NativeBackend here and
+    /// against PjrtBackend in the integration tests (needs artifacts).
+    pub fn conformance(backend: &dyn ComputeBackend, raw_h: usize, raw_w: usize) {
+        let synth = TextureSynth::new(raw_h, raw_w, 0.05);
+        let scene_a = SceneSpec::sample(0, 2, &mut Rng::new(1));
+        let scene_b = SceneSpec::sample(1, 9, &mut Rng::new(2));
+        let img_a1 = synth.render(&scene_a, &mut Rng::new(10));
+        let img_a2 = synth.render(&scene_a, &mut Rng::new(11));
+        let img_b = synth.render(&scene_b, &mut Rng::new(12));
+
+        let pa1 = backend.preprocess(&img_a1).unwrap();
+        let pa2 = backend.preprocess(&img_a2).unwrap();
+        let pb = backend.preprocess(&img_b).unwrap();
+
+        // pd in [0,1], right sizes
+        assert_eq!(pa1.pd.len(), pa1.h * pa1.w * 3);
+        assert_eq!(pa1.gray.len(), pa1.h * pa1.w);
+        assert!(pa1.pd.iter().all(|&x| (0.0..=1.0).contains(&x)));
+
+        // SSIM: identical = 1, same scene high, cross-class lower
+        let s_self = backend.ssim(&pa1, &pa1).unwrap();
+        assert!((s_self - 1.0).abs() < 1e-4, "ssim(self)={s_self}");
+        let s_same = backend.ssim(&pa1, &pa2).unwrap();
+        let s_cross = backend.ssim(&pa1, &pb).unwrap();
+        assert!(s_same > s_cross, "same {s_same} !> cross {s_cross}");
+        assert!(s_same > 0.7, "same-scene ssim {s_same}");
+
+        // LSH: deterministic, in range, same scene collides
+        let b1 = backend.lsh_bucket(&pa1).unwrap();
+        assert_eq!(b1, backend.lsh_bucket(&pa1).unwrap());
+        assert!((b1 as usize) < backend.num_buckets());
+        assert_eq!(b1, backend.lsh_bucket(&pa2).unwrap());
+
+        // classifier: deterministic, stable within a scene
+        let l1 = backend.classify(&pa1).unwrap();
+        assert_eq!(l1, backend.classify(&pa1).unwrap());
+        assert_eq!(l1, backend.classify(&pa2).unwrap());
+
+        // classify_many matches classify
+        let many = backend.classify_many(&[&pa1, &pb]).unwrap();
+        assert_eq!(many[0], l1);
+        assert_eq!(many[1], backend.classify(&pb).unwrap());
+    }
+
+    #[test]
+    fn native_backend_conformance() {
+        let cfg = SimConfig::paper_default(5);
+        let backend = NativeBackend::new(&cfg);
+        conformance(&backend, cfg.workload.raw_h, cfg.workload.raw_w);
+    }
+}

@@ -1,0 +1,249 @@
+//! Pure-Rust compute backend.
+//!
+//! Implements the same pipeline as the artifacts — 2×2 mean-pool resize,
+//! BT.601 grayscale, FALCONN-style hyperplane LSH, global SSIM (eq. 12) —
+//! plus a seeded random-projection classifier standing in for the baked
+//! MicroGoogLeNet. It exists for three reasons: fast unit tests of the
+//! coordinator, ablation sweeps that don't need PJRT, and a numeric
+//! cross-check of the artifacts in the integration suite.
+
+use crate::compute::{ComputeBackend, Preprocessed};
+use crate::config::SimConfig;
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+use crate::workload::ImageData;
+
+// Same SSIM constants as python/compile/kernels/ssim.py (L = 1).
+const C1: f64 = 0.01 * 0.01;
+const C2: f64 = 0.03 * 0.03;
+const C3: f64 = C2 / 2.0;
+
+/// Seed for the hyperplanes; independent from the artifact's PRNGKey(7) —
+/// the two backends implement the same *family*, not bit-equal hashes.
+const LSH_SEED: u64 = 0x5a7e111e;
+/// Seed for the classifier projection.
+const CLS_SEED: u64 = 0xc1a551f7;
+
+/// Pure-Rust backend.
+pub struct NativeBackend {
+    pre_h: usize,
+    pre_w: usize,
+    p_k: usize,
+    /// `p_k × feature_dim` Gaussian hyperplanes.
+    planes: Vec<Vec<f32>>,
+    /// `num_classes × feature_dim` classifier projection.
+    proj: Vec<Vec<f32>>,
+}
+
+impl NativeBackend {
+    pub fn new(cfg: &SimConfig) -> Self {
+        // pre dims = raw dims / 2 (the artifact's 2x2 mean pool)
+        let pre_h = cfg.workload.raw_h / 2;
+        let pre_w = cfg.workload.raw_w / 2;
+        let feature_dim = pre_h * pre_w * 3;
+        let p_k = cfg.reuse.p_k;
+        let mut lsh_rng = Rng::new(LSH_SEED);
+        let planes = (0..p_k)
+            .map(|_| (0..feature_dim).map(|_| lsh_rng.normal() as f32).collect())
+            .collect();
+        let mut cls_rng = Rng::new(CLS_SEED);
+        let proj = (0..cfg.workload.num_classes)
+            .map(|_| (0..feature_dim).map(|_| cls_rng.normal() as f32).collect())
+            .collect();
+        NativeBackend {
+            pre_h,
+            pre_w,
+            p_k,
+            planes,
+            proj,
+        }
+    }
+
+    fn check_dims(&self, pre: &Preprocessed) -> Result<()> {
+        if pre.h != self.pre_h || pre.w != self.pre_w {
+            return Err(Error::simulation(format!(
+                "preprocessed dims {}x{} != backend {}x{}",
+                pre.h, pre.w, self.pre_h, self.pre_w
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Global SSIM per eq. (12); exposed for tests and the SCRT module.
+pub fn ssim_global(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    let (mut sa, mut sb, mut saa, mut sbb, mut sab) = (0f64, 0f64, 0f64, 0f64, 0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        let (x, y) = (x as f64, y as f64);
+        sa += x;
+        sb += y;
+        saa += x * x;
+        sbb += y * y;
+        sab += x * y;
+    }
+    let ma = sa / n;
+    let mb = sb / n;
+    let va = (saa / n - ma * ma).max(0.0);
+    let vb = (sbb / n - mb * mb).max(0.0);
+    let cov = sab / n - ma * mb;
+    let lum = (2.0 * ma * mb + C1) / (ma * ma + mb * mb + C1);
+    let con = (2.0 * va.sqrt() * vb.sqrt() + C2) / (va + vb + C2);
+    let stru = (cov + C3) / (va.sqrt() * vb.sqrt() + C3);
+    (lum * con * stru) as f32
+}
+
+impl ComputeBackend for NativeBackend {
+    fn preprocess(&self, raw: &ImageData) -> Result<Preprocessed> {
+        if raw.h != self.pre_h * 2 || raw.w != self.pre_w * 2 {
+            return Err(Error::simulation(format!(
+                "raw dims {}x{} incompatible with backend {}x{}",
+                raw.h, raw.w, self.pre_h, self.pre_w
+            )));
+        }
+        let (h, w) = (self.pre_h, self.pre_w);
+        let mut pd = vec![0f32; h * w * 3];
+        let mut gray = vec![0f32; h * w];
+        for y in 0..h {
+            for x in 0..w {
+                let mut px = [0f32; 3];
+                for c in 0..3 {
+                    let sum = raw.at(2 * y, 2 * x, c)
+                        + raw.at(2 * y, 2 * x + 1, c)
+                        + raw.at(2 * y + 1, 2 * x, c)
+                        + raw.at(2 * y + 1, 2 * x + 1, c);
+                    px[c] = sum / 4.0 / 255.0;
+                    pd[(y * w + x) * 3 + c] = px[c];
+                }
+                gray[y * w + x] = 0.299 * px[0] + 0.587 * px[1] + 0.114 * px[2];
+            }
+        }
+        Ok(Preprocessed { h, w, pd, gray })
+    }
+
+    fn lsh_bucket(&self, pre: &Preprocessed) -> Result<u32> {
+        self.check_dims(pre)?;
+        let mut bucket = 0u32;
+        for (i, plane) in self.planes.iter().enumerate() {
+            let dot: f32 = plane.iter().zip(&pre.pd).map(|(p, x)| p * x).sum();
+            if dot >= 0.0 {
+                bucket |= 1 << (self.p_k - 1 - i);
+            }
+        }
+        Ok(bucket)
+    }
+
+    fn ssim(&self, a: &Preprocessed, b: &Preprocessed) -> Result<f32> {
+        self.check_dims(a)?;
+        self.check_dims(b)?;
+        Ok(ssim_global(&a.gray, &b.gray))
+    }
+
+    fn classify(&self, pre: &Preprocessed) -> Result<u32> {
+        self.check_dims(pre)?;
+        let mut best = 0usize;
+        let mut best_score = f32::NEG_INFINITY;
+        for (c, row) in self.proj.iter().enumerate() {
+            let score: f32 = row.iter().zip(&pre.pd).map(|(w, x)| w * x).sum();
+            if score > best_score {
+                best_score = score;
+                best = c;
+            }
+        }
+        Ok(best as u32)
+    }
+
+    fn num_buckets(&self) -> usize {
+        1 << self.p_k
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::new(&SimConfig::paper_default(5))
+    }
+
+    fn image(seed: u64) -> ImageData {
+        let mut rng = Rng::new(seed);
+        let px = (0..64 * 64 * 3).map(|_| rng.f32() * 255.0).collect();
+        ImageData::new(64, 64, px)
+    }
+
+    #[test]
+    fn preprocess_mean_pool() {
+        let b = backend();
+        // constant image -> constant pd at v/255
+        let img = ImageData::new(64, 64, vec![100.0; 64 * 64 * 3]);
+        let pre = b.preprocess(&img).unwrap();
+        assert!(pre.pd.iter().all(|&x| (x - 100.0 / 255.0).abs() < 1e-6));
+        let g = 100.0 / 255.0; // gray of equal channels = same value
+        assert!(pre.gray.iter().all(|&x| (x - g).abs() < 1e-5));
+    }
+
+    #[test]
+    fn preprocess_rejects_wrong_dims() {
+        let b = backend();
+        let img = ImageData::new(16, 16, vec![0.0; 16 * 16 * 3]);
+        assert!(b.preprocess(&img).is_err());
+    }
+
+    #[test]
+    fn ssim_global_matches_identity_and_bounds() {
+        let xs: Vec<f32> = (0..1024).map(|i| (i % 97) as f32 / 97.0).collect();
+        assert!((ssim_global(&xs, &xs) - 1.0).abs() < 1e-6);
+        let ys: Vec<f32> = xs.iter().map(|x| 1.0 - x).collect();
+        let v = ssim_global(&xs, &ys);
+        assert!((-1.0..1.0).contains(&v));
+        assert!(v < 0.5, "anti-correlated ssim {v}");
+    }
+
+    #[test]
+    fn buckets_cover_range() {
+        let b = backend();
+        let mut seen = std::collections::HashSet::new();
+        for seed in 0..32 {
+            let pre = b.preprocess(&image(seed)).unwrap();
+            let bucket = b.lsh_bucket(&pre).unwrap();
+            assert!((bucket as usize) < b.num_buckets());
+            seen.insert(bucket);
+        }
+        assert!(seen.len() >= 2, "only {} buckets used", seen.len());
+    }
+
+    #[test]
+    fn classifier_labels_in_range_and_varied() {
+        let b = backend();
+        let mut seen = std::collections::HashSet::new();
+        for seed in 0..48 {
+            let pre = b.preprocess(&image(seed)).unwrap();
+            let label = b.classify(&pre).unwrap();
+            assert!((label as usize) < 21);
+            seen.insert(label);
+        }
+        assert!(seen.len() >= 3, "labels too concentrated: {seen:?}");
+    }
+
+    #[test]
+    fn small_perturbation_keeps_label_and_bucket() {
+        let b = backend();
+        let img = image(7);
+        let mut img2 = img.clone();
+        for p in img2.pixels.iter_mut() {
+            *p = (*p + 0.5).min(255.0);
+        }
+        let p1 = b.preprocess(&img).unwrap();
+        let p2 = b.preprocess(&img2).unwrap();
+        assert_eq!(b.classify(&p1).unwrap(), b.classify(&p2).unwrap());
+        assert_eq!(b.lsh_bucket(&p1).unwrap(), b.lsh_bucket(&p2).unwrap());
+        assert!(b.ssim(&p1, &p2).unwrap() > 0.99);
+    }
+}

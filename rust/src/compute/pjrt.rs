@@ -1,0 +1,116 @@
+//! PJRT compute backend — the production three-layer path.
+//!
+//! Every operation executes the corresponding AOT artifact (Pallas kernels
+//! inside JAX graphs, lowered to HLO text) on the embedded PJRT CPU client.
+//! No Python anywhere near this code path.
+
+use crate::compute::{ComputeBackend, Preprocessed};
+use crate::error::{Error, Result};
+use crate::runtime::{Engine, Tensor};
+use crate::workload::ImageData;
+
+/// Backend over a PJRT [`Engine`].
+pub struct PjrtBackend {
+    engine: Engine,
+    raw_h: usize,
+    raw_w: usize,
+    pre_h: usize,
+    pre_w: usize,
+    batch: usize,
+}
+
+impl PjrtBackend {
+    /// Wrap an engine; validates dims against the manifest constants.
+    pub fn new(engine: Engine) -> Result<Self> {
+        let c = engine.constants().clone();
+        if c.channels != 3 {
+            return Err(Error::artifact("expected 3-channel artifacts"));
+        }
+        Ok(PjrtBackend {
+            raw_h: c.raw_h,
+            raw_w: c.raw_w,
+            pre_h: c.pre_h,
+            pre_w: c.pre_w,
+            batch: c.batch,
+            engine,
+        })
+    }
+
+    /// Open the default artifacts directory.
+    pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::new(Engine::new(dir)?)
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    fn pre_to_tensor(&self, pre: &Preprocessed) -> Result<Tensor> {
+        Tensor::f32(vec![self.pre_h, self.pre_w, 3], pre.pd.clone())
+    }
+
+    fn gray_to_tensor(&self, pre: &Preprocessed) -> Result<Tensor> {
+        Tensor::f32(vec![self.pre_h, self.pre_w], pre.gray.clone())
+    }
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn preprocess(&self, raw: &ImageData) -> Result<Preprocessed> {
+        if raw.h != self.raw_h || raw.w != self.raw_w {
+            return Err(Error::simulation(format!(
+                "raw image {}x{} does not match artifact {}x{}",
+                raw.h, raw.w, self.raw_h, self.raw_w
+            )));
+        }
+        let t = Tensor::f32(vec![self.raw_h, self.raw_w, 3], raw.pixels.clone())?;
+        let (pd, gray) = self.engine.preprocess(&t)?;
+        Ok(Preprocessed {
+            h: self.pre_h,
+            w: self.pre_w,
+            pd: pd.as_f32()?.to_vec(),
+            gray: gray.as_f32()?.to_vec(),
+        })
+    }
+
+    fn lsh_bucket(&self, pre: &Preprocessed) -> Result<u32> {
+        let (bucket, _proj) = self.engine.lsh_hash(&self.pre_to_tensor(pre)?)?;
+        Ok(bucket)
+    }
+
+    fn ssim(&self, a: &Preprocessed, b: &Preprocessed) -> Result<f32> {
+        self.engine
+            .ssim(&self.gray_to_tensor(a)?, &self.gray_to_tensor(b)?)
+    }
+
+    fn classify(&self, pre: &Preprocessed) -> Result<u32> {
+        let (_logits, label) = self.engine.classify(&self.pre_to_tensor(pre)?)?;
+        Ok(label)
+    }
+
+    /// Batched oracle pass through the `classifier_batch` artifact —
+    /// amortises PJRT dispatch over `batch` images per call.
+    fn classify_many(&self, pres: &[&Preprocessed]) -> Result<Vec<u32>> {
+        let per_image = self.pre_h * self.pre_w * 3;
+        let mut labels = Vec::with_capacity(pres.len());
+        for chunk in pres.chunks(self.batch) {
+            let mut data = vec![0f32; self.batch * per_image];
+            for (i, pre) in chunk.iter().enumerate() {
+                data[i * per_image..(i + 1) * per_image].copy_from_slice(&pre.pd);
+            }
+            let t = Tensor::f32(
+                vec![self.batch, self.pre_h, self.pre_w, 3],
+                data,
+            )?;
+            labels.extend(self.engine.classify_batch(&t, chunk.len())?);
+        }
+        Ok(labels)
+    }
+
+    fn num_buckets(&self) -> usize {
+        self.engine.constants().num_buckets
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

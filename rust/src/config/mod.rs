@@ -1,0 +1,432 @@
+//! Configuration system.
+//!
+//! [`SimConfig`] carries every knob of the reproduction: the paper's Table I
+//! parameters, the communication model constants (eqs. 1–4), the analytic
+//! cost model (eqs. 6–9), the workload generator and the cache budget.
+//! Configs load from a TOML-subset file (`configs/*.toml`) and validate
+//! before use; [`SimConfig::paper_default`] reproduces Table I exactly.
+
+mod parser;
+
+pub use parser::TomlValue;
+
+use crate::error::{Error, Result};
+
+/// Network / constellation geometry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetworkConfig {
+    /// Grid scale N: N orbits × N satellites per orbit (paper: 5, 7, 9).
+    pub n: usize,
+    /// Inter-satellite distance within an orbital plane, metres.
+    pub intra_plane_distance_m: f64,
+    /// Inter-satellite distance across adjacent planes, metres.
+    pub inter_plane_distance_m: f64,
+}
+
+/// ISL communication model (Table I + eqs. 1–4).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CommConfig {
+    /// Channel bandwidth `B_s`, Hz (paper: 20 MHz).
+    pub bandwidth_hz: f64,
+    /// Carrier frequency `f_c`, Hz (Ka-band ISL, 26 GHz per [31]).
+    pub carrier_hz: f64,
+    /// Transmit power `Pow_t`, watts.
+    pub tx_power_w: f64,
+    /// Antenna gain (both ends), dBi.
+    pub antenna_gain_dbi: f64,
+    /// Receiver noise temperature `T`, kelvin.
+    pub noise_temp_k: f64,
+    /// Record input payload `D_t`, bytes (UC Merced: 12 817 MB / 625 imgs).
+    pub record_input_bytes: f64,
+    /// Record output payload `R_t`, bytes (a label + metadata).
+    pub record_output_bytes: f64,
+}
+
+/// Analytic on-board computation cost model (eqs. 6–8).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ComputeConfig {
+    /// Satellite computational capability `C^comp`, FLOP/s (paper: 3 GHz).
+    pub capability_flops: f64,
+    /// FLOPs to execute one task from scratch, `F_t` (GoogLeNet-22 scale).
+    pub task_flops: f64,
+    /// FLOPs of the lookup path `W` (preprocess + LSH probe + SSIM gate).
+    pub lookup_flops: f64,
+    /// Fixed per-lookup overhead, seconds (hash-table probe latency).
+    pub lookup_fixed_s: f64,
+}
+
+/// Computation-reuse parameters (Table I).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReuseConfig {
+    /// Number of LSH tables `p_l` (paper: 1).
+    pub p_l: usize,
+    /// Number of hash functions `p_k` (paper: 2).
+    pub p_k: usize,
+    /// Input similarity threshold `th_sim` (paper: 0.7).
+    pub th_sim: f64,
+    /// SRS weight `β` (paper: 0.5).
+    pub beta: f64,
+    /// Cooperation request threshold `th_co` (paper default: 0.5).
+    pub th_co: f64,
+    /// Records broadcast per collaboration `τ` (paper default: 11).
+    pub tau: usize,
+    /// Per-satellite SCRT storage `C^stg`, bytes.
+    pub cache_bytes: f64,
+    /// Minimum virtual seconds between collaboration requests from the same
+    /// satellite (prevents request storms while SRS stays low).
+    pub collab_cooldown_s: f64,
+}
+
+/// Synthetic remote-sensing workload (UC Merced stand-in).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadConfig {
+    /// Total tasks processed by the whole cluster (paper: 625 images).
+    pub total_tasks: usize,
+    /// Number of land-use classes (UC Merced: 21).
+    pub num_classes: usize,
+    /// Raw tile height/width, pixels (matches the L2 `preprocess` entry).
+    pub raw_h: usize,
+    pub raw_w: usize,
+    /// Mean task arrival rate per satellite `λ`, tasks/s (M/M/1).
+    pub arrival_rate_per_sat: f64,
+    /// Per-image jitter amplitude inside one scene (0 = identical images).
+    pub intra_scene_jitter: f64,
+    /// Probability a satellite's next task repeats its previous scene
+    /// (temporal locality of a ground track).
+    pub scene_repeat_prob: f64,
+    /// Per-satellite spread of the repeat probability: satellite i draws
+    /// `scene_repeat_prob ± spread/2`. Ground tracks are heterogeneous
+    /// (ocean passes are near-constant, coastal passes diverse); this is
+    /// what creates the SRS contrast Alg. 2 exploits.
+    pub repeat_prob_spread: f64,
+    /// Number of distinct scenes per satellite ground track.
+    pub scenes_per_satellite: usize,
+    /// Probability of drawing the scene pool from the orbit-shared pool
+    /// (spatial correlation between neighbouring satellites).
+    pub shared_pool_prob: f64,
+    /// Experiment seed.
+    pub seed: u64,
+}
+
+/// Top-level simulation configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    pub network: NetworkConfig,
+    pub comm: CommConfig,
+    pub compute: ComputeConfig,
+    pub reuse: ReuseConfig,
+    pub workload: WorkloadConfig,
+    /// Binary weight α balancing communication vs computation cost (eq. 9).
+    pub alpha: f64,
+}
+
+impl SimConfig {
+    /// Table I defaults for an `n × n` network (paper: n ∈ {5, 7, 9}).
+    pub fn paper_default(n: usize) -> Self {
+        SimConfig {
+            network: NetworkConfig {
+                n,
+                // A dense-constellation slice: ~1100 km in-plane separation,
+                // ~800 km between adjacent planes (Leyva-Mayorga et al. [31]).
+                intra_plane_distance_m: 1.1e6,
+                inter_plane_distance_m: 0.8e6,
+            },
+            comm: CommConfig {
+                bandwidth_hz: 20e6, // Table I
+                carrier_hz: 26e9,
+                tx_power_w: 10.0,
+                antenna_gain_dbi: 37.0,
+                noise_temp_k: 290.0,
+                // 12 817 MB over 625 images ≈ 20.5 MB per record input.
+                record_input_bytes: 12_817.0e6 / 625.0,
+                record_output_bytes: 1024.0,
+            },
+            compute: ComputeConfig {
+                capability_flops: 3e9, // Table I: 3 GHz
+                // GoogLeNet-22 forward ≈ 3 GFLOPs at 224×224; at ~1/3
+                // achieved efficiency on a 3 GHz on-board CPU that is ~3 s
+                // per image — the "time-consuming high-resolution image
+                // processing" regime the paper motivates.
+                task_flops: 27e9,
+                // preprocess + hyperplane projection + SSIM on 32×32 inputs,
+                // scaled to the paper's 224×224 pipeline (~60 MFLOP).
+                lookup_flops: 6e7,
+                lookup_fixed_s: 0.005,
+            },
+            reuse: ReuseConfig {
+                p_l: 1,      // Table I
+                p_k: 2,      // Table I
+                th_sim: 0.7, // Table I
+                beta: 0.5,   // Table I
+                th_co: 0.5,  // Table I (default)
+                tau: 11,     // Table I (default)
+                cache_bytes: 640e6,
+                collab_cooldown_s: 25.0,
+            },
+            workload: WorkloadConfig {
+                total_tasks: 625,
+                num_classes: 21,
+                raw_h: 64,
+                raw_w: 64,
+                // 1 task/s against a ~3 s from-scratch service time: the
+                // overload regime the paper's "resource-constrained
+                // satellites" narrative implies (reuse, not capacity,
+                // determines completion time).
+                arrival_rate_per_sat: 0.3,
+                intra_scene_jitter: 0.004,
+                scene_repeat_prob: 0.45,
+                repeat_prob_spread: 0.6,
+                scenes_per_satellite: 6,
+                shared_pool_prob: 0.9,
+                seed: 2025,
+            },
+            alpha: 1.0,
+        }
+    }
+
+    /// SCRT capacity in records implied by `C^stg` and the record payload.
+    pub fn cache_capacity_records(&self) -> usize {
+        let record = self.comm.record_input_bytes + self.comm.record_output_bytes;
+        (self.reuse.cache_bytes / record).floor() as usize
+    }
+
+    /// Tasks assigned to each satellite (paper: evenly distributed).
+    pub fn tasks_per_satellite(&self) -> usize {
+        let sats = self.network.n * self.network.n;
+        self.workload.total_tasks.div_ceil(sats)
+    }
+
+    /// Validate every invariant the simulator assumes.
+    pub fn validate(&self) -> Result<()> {
+        let e = |m: String| Err(Error::Config(m));
+        if self.network.n < 2 {
+            return e(format!("network scale n={} must be >= 2", self.network.n));
+        }
+        if self.reuse.p_l != 1 {
+            return e("only p_l = 1 is supported (matches Table I)".into());
+        }
+        if self.reuse.p_k == 0 || self.reuse.p_k > 16 {
+            return e(format!("p_k={} out of range [1, 16]", self.reuse.p_k));
+        }
+        if !(0.0..=1.0).contains(&self.reuse.th_sim) {
+            return e(format!("th_sim={} outside [0, 1]", self.reuse.th_sim));
+        }
+        if !(0.0..=1.0).contains(&self.reuse.beta) {
+            return e(format!("beta={} outside [0, 1]", self.reuse.beta));
+        }
+        if !(0.0..=1.0).contains(&self.reuse.th_co) {
+            return e(format!("th_co={} outside [0, 1]", self.reuse.th_co));
+        }
+        if self.reuse.tau == 0 {
+            return e("tau must be >= 1".into());
+        }
+        if self.cache_capacity_records() == 0 {
+            return e("cache too small to hold a single record".into());
+        }
+        if self.workload.total_tasks == 0 {
+            return e("total_tasks must be > 0".into());
+        }
+        if self.workload.num_classes < 2 {
+            return e("need at least 2 classes".into());
+        }
+        if self.workload.arrival_rate_per_sat <= 0.0 {
+            return e("arrival rate must be positive".into());
+        }
+        if self.compute.capability_flops <= 0.0 || self.compute.task_flops <= 0.0 {
+            return e("compute capabilities must be positive".into());
+        }
+        if self.comm.bandwidth_hz <= 0.0 || self.comm.tx_power_w <= 0.0 {
+            return e("comm parameters must be positive".into());
+        }
+        if !(0.0..=1.0).contains(&self.workload.scene_repeat_prob)
+            || !(0.0..=1.0).contains(&self.workload.shared_pool_prob)
+        {
+            return e("workload probabilities outside [0, 1]".into());
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML-subset file (see `configs/`); unknown keys error.
+    pub fn from_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Parse from TOML text, starting from paper defaults.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = parser::parse(text)?;
+        let n = doc
+            .get("network", "n")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(5);
+        let mut cfg = SimConfig::paper_default(n);
+        for ((section, key), value) in doc.iter() {
+            cfg.apply(section, key, value)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn apply(&mut self, section: &str, key: &str, v: &TomlValue) -> Result<()> {
+        let unknown = || {
+            Err(Error::Config(format!(
+                "unknown config key [{section}] {key}"
+            )))
+        };
+        match (section, key) {
+            ("network", "n") => self.network.n = v.as_usize()?,
+            ("network", "intra_plane_distance_m") => {
+                self.network.intra_plane_distance_m = v.as_f64()?
+            }
+            ("network", "inter_plane_distance_m") => {
+                self.network.inter_plane_distance_m = v.as_f64()?
+            }
+            ("comm", "bandwidth_hz") => self.comm.bandwidth_hz = v.as_f64()?,
+            ("comm", "carrier_hz") => self.comm.carrier_hz = v.as_f64()?,
+            ("comm", "tx_power_w") => self.comm.tx_power_w = v.as_f64()?,
+            ("comm", "antenna_gain_dbi") => self.comm.antenna_gain_dbi = v.as_f64()?,
+            ("comm", "noise_temp_k") => self.comm.noise_temp_k = v.as_f64()?,
+            ("comm", "record_input_bytes") => {
+                self.comm.record_input_bytes = v.as_f64()?
+            }
+            ("comm", "record_output_bytes") => {
+                self.comm.record_output_bytes = v.as_f64()?
+            }
+            ("compute", "capability_flops") => {
+                self.compute.capability_flops = v.as_f64()?
+            }
+            ("compute", "task_flops") => self.compute.task_flops = v.as_f64()?,
+            ("compute", "lookup_flops") => self.compute.lookup_flops = v.as_f64()?,
+            ("compute", "lookup_fixed_s") => self.compute.lookup_fixed_s = v.as_f64()?,
+            ("reuse", "p_l") => self.reuse.p_l = v.as_usize()?,
+            ("reuse", "p_k") => self.reuse.p_k = v.as_usize()?,
+            ("reuse", "th_sim") => self.reuse.th_sim = v.as_f64()?,
+            ("reuse", "beta") => self.reuse.beta = v.as_f64()?,
+            ("reuse", "th_co") => self.reuse.th_co = v.as_f64()?,
+            ("reuse", "tau") => self.reuse.tau = v.as_usize()?,
+            ("reuse", "cache_bytes") => self.reuse.cache_bytes = v.as_f64()?,
+            ("reuse", "collab_cooldown_s") => {
+                self.reuse.collab_cooldown_s = v.as_f64()?
+            }
+            ("workload", "total_tasks") => self.workload.total_tasks = v.as_usize()?,
+            ("workload", "num_classes") => self.workload.num_classes = v.as_usize()?,
+            ("workload", "raw_h") => self.workload.raw_h = v.as_usize()?,
+            ("workload", "raw_w") => self.workload.raw_w = v.as_usize()?,
+            ("workload", "arrival_rate_per_sat") => {
+                self.workload.arrival_rate_per_sat = v.as_f64()?
+            }
+            ("workload", "intra_scene_jitter") => {
+                self.workload.intra_scene_jitter = v.as_f64()?
+            }
+            ("workload", "scene_repeat_prob") => {
+                self.workload.scene_repeat_prob = v.as_f64()?
+            }
+            ("workload", "repeat_prob_spread") => {
+                self.workload.repeat_prob_spread = v.as_f64()?
+            }
+            ("workload", "scenes_per_satellite") => {
+                self.workload.scenes_per_satellite = v.as_usize()?
+            }
+            ("workload", "shared_pool_prob") => {
+                self.workload.shared_pool_prob = v.as_f64()?
+            }
+            ("workload", "seed") => self.workload.seed = v.as_u64()?,
+            ("sim", "alpha") => self.alpha = v.as_f64()?,
+            _ => return unknown(),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_matches_table1() {
+        let c = SimConfig::paper_default(5);
+        assert_eq!(c.network.n, 5);
+        assert_eq!(c.comm.bandwidth_hz, 20e6);
+        assert_eq!(c.compute.capability_flops, 3e9);
+        assert_eq!(c.reuse.p_l, 1);
+        assert_eq!(c.reuse.p_k, 2);
+        assert_eq!(c.reuse.beta, 0.5);
+        assert_eq!(c.reuse.th_sim, 0.7);
+        assert_eq!(c.reuse.tau, 11);
+        assert_eq!(c.reuse.th_co, 0.5);
+        assert_eq!(c.workload.total_tasks, 625);
+        assert_eq!(c.workload.num_classes, 21);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn validates_all_scales() {
+        for n in [5, 7, 9] {
+            SimConfig::paper_default(n).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn cache_capacity_positive() {
+        let c = SimConfig::paper_default(5);
+        let cap = c.cache_capacity_records();
+        assert!(cap >= 10, "capacity {cap} too small for tau sweeps");
+    }
+
+    #[test]
+    fn tasks_per_satellite_covers_total() {
+        let c = SimConfig::paper_default(5);
+        assert_eq!(c.tasks_per_satellite(), 25);
+        let c = SimConfig::paper_default(7);
+        assert!(c.tasks_per_satellite() * 49 >= 625);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let mut c = SimConfig::paper_default(5);
+        c.reuse.th_sim = 1.5;
+        assert!(c.validate().is_err());
+
+        let mut c = SimConfig::paper_default(5);
+        c.network.n = 1;
+        assert!(c.validate().is_err());
+
+        let mut c = SimConfig::paper_default(5);
+        c.reuse.tau = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = SimConfig::paper_default(5);
+        c.reuse.cache_bytes = 1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let text = r#"
+# comment
+[network]
+n = 7
+
+[reuse]
+tau = 5
+th_co = 0.3
+
+[workload]
+seed = 99
+"#;
+        let c = SimConfig::from_toml_str(text).unwrap();
+        assert_eq!(c.network.n, 7);
+        assert_eq!(c.reuse.tau, 5);
+        assert_eq!(c.reuse.th_co, 0.3);
+        assert_eq!(c.workload.seed, 99);
+        // untouched values keep paper defaults
+        assert_eq!(c.reuse.th_sim, 0.7);
+    }
+
+    #[test]
+    fn toml_unknown_key_rejected() {
+        assert!(SimConfig::from_toml_str("[reuse]\nbogus = 1\n").is_err());
+        assert!(SimConfig::from_toml_str("[bogus]\ntau = 1\n").is_err());
+    }
+}

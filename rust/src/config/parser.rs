@@ -1,0 +1,224 @@
+//! TOML-subset parser for the config files.
+//!
+//! Supported grammar — sections, scalar assignments, comments:
+//!
+//! ```toml
+//! # comment
+//! [section]
+//! int_key = 42
+//! float_key = 2.5e9
+//! bool_key = true
+//! str_key = "hello"
+//! ```
+//!
+//! That subset covers every key [`crate::config::SimConfig`] accepts; arrays
+//! and nested tables are intentionally rejected so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A scalar config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Int(x) => Ok(*x as f64),
+            TomlValue::Float(x) => Ok(*x),
+            other => Err(Error::Config(format!("expected number, got {other:?}"))),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            TomlValue::Int(x) if *x >= 0 => Ok(*x as u64),
+            other => Err(Error::Config(format!(
+                "expected unsigned integer, got {other:?}"
+            ))),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_u64()? as usize)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => Err(Error::Config(format!("expected bool, got {other:?}"))),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => Err(Error::Config(format!("expected string, got {other:?}"))),
+        }
+    }
+}
+
+/// Parsed document: `(section, key) -> value`, insertion-ordered per section.
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    entries: BTreeMap<(String, String), TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = ((&str, &str), &TomlValue)> {
+        self.entries
+            .iter()
+            .map(|((s, k), v)| ((s.as_str(), k.as_str()), v))
+    }
+}
+
+/// Parse TOML-subset text.
+pub fn parse(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let at = |m: &str| Error::Config(format!("line {}: {m}", lineno + 1));
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| at("unterminated section header"))?;
+            if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+                return Err(at(&format!("bad section name '{name}'")));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| at("expected 'key = value'"))?;
+        let key = key.trim();
+        if key.is_empty() || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            return Err(at(&format!("bad key '{key}'")));
+        }
+        if section.is_empty() {
+            return Err(at("key outside any [section]"));
+        }
+        let value = parse_value(value.trim()).map_err(|m| at(&m))?;
+        let prev = doc
+            .entries
+            .insert((section.clone(), key.to_string()), value);
+        if prev.is_some() {
+            return Err(at(&format!("duplicate key '{key}' in [{section}]")));
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string stays; otherwise truncate.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string {s}"))?;
+        if inner.contains('"') {
+            return Err(format!("embedded quote in {s}"));
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    // underscore separators allowed in numbers, as in real TOML
+    let cleaned: String = s.chars().filter(|c| *c != '_').collect();
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_document() {
+        let doc = parse(
+            r#"
+# top comment
+[network]
+n = 7              # inline comment
+dist = 1.1e6
+
+[reuse]
+tau = 11
+enabled = true
+label = "sccr"
+big = 1_000_000
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("network", "n"), Some(&TomlValue::Int(7)));
+        assert_eq!(doc.get("network", "dist"), Some(&TomlValue::Float(1.1e6)));
+        assert_eq!(doc.get("reuse", "enabled"), Some(&TomlValue::Bool(true)));
+        assert_eq!(
+            doc.get("reuse", "label"),
+            Some(&TomlValue::Str("sccr".into()))
+        );
+        assert_eq!(doc.get("reuse", "big"), Some(&TomlValue::Int(1_000_000)));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[unterminated\nx = 1").is_err());
+        assert!(parse("x = 1").is_err()); // key outside section
+        assert!(parse("[s]\nx 1").is_err()); // no '='
+        assert!(parse("[s]\nx = ").is_err()); // empty value
+        assert!(parse("[s]\nx = 1\nx = 2").is_err()); // duplicate
+        assert!(parse("[s]\nx = \"open").is_err()); // unterminated string
+    }
+
+    #[test]
+    fn hash_in_string_kept() {
+        let doc = parse("[s]\nx = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("s", "x"), Some(&TomlValue::Str("a#b".into())));
+    }
+
+    #[test]
+    fn value_conversions() {
+        assert_eq!(TomlValue::Int(3).as_f64().unwrap(), 3.0);
+        assert_eq!(TomlValue::Int(3).as_usize().unwrap(), 3);
+        assert!(TomlValue::Int(-1).as_u64().is_err());
+        assert!(TomlValue::Str("x".into()).as_f64().is_err());
+        assert!(TomlValue::Bool(true).as_bool().unwrap());
+    }
+}

@@ -1,0 +1,21 @@
+//! The CCRSat coordination layer — the paper's contribution.
+//!
+//! * [`scrt`] — the Satellite Computation Reuse Table (LSH-bucketed record
+//!   cache with value-aware eviction, Sec. III-A);
+//! * [`srs`] — the Satellite Reuse Status metric (eq. 11);
+//! * [`slcr`] — Algorithm 1, local computation reuse;
+//! * [`sccr`] — Algorithm 2, collaborative source selection + area
+//!   expansion;
+//! * [`scenarios`] — the five evaluation scenarios of Sec. V.
+
+pub mod scenarios;
+pub mod scrt;
+pub mod slcr;
+pub mod sccr;
+pub mod srs;
+
+pub use scenarios::Scenario;
+pub use scrt::{Record, RecordId, Scrt};
+pub use sccr::{select_source, CollabDecision};
+pub use slcr::{process_task, SlcrOutcome};
+pub use srs::srs;

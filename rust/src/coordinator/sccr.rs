@@ -1,0 +1,203 @@
+//! Algorithm 2 — Satellite Collaborative Computation Reuse (SCCR).
+//!
+//! When a satellite's SRS (eq. 11) drops below `th_co` it becomes the
+//! requesting satellite `S_req` and searches for a data-source satellite
+//! `S_src`:
+//!
+//! 1. build the initial collaboration area (S_req + surrounding, a 3×3
+//!    Chebyshev neighbourhood clamped at the grid edge);
+//! 2. take `S_max = argmax SRS` over the area; if `SRS(S_max) > th_co`,
+//!    it is the source;
+//! 3. otherwise expand the area by one ring (surrounding satellites of all
+//!    members) and retry once;
+//! 4. if still no satellite clears `th_co`, the collaboration terminates.
+//!
+//! The variants used by the evaluation baselines:
+//! * **SCCR-INIT** — skips step 3 (no expansion);
+//! * **SRS Priority** — ignores areas entirely: the source is the global
+//!   SRS maximum and the broadcast floods the whole network.
+
+use crate::network::topology::GridTopology;
+use crate::workload::SatId;
+
+/// Outcome of a source search.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CollabDecision {
+    /// The chosen data-source satellite.
+    pub source: SatId,
+    /// The collaboration area the broadcast will cover (includes `S_req`
+    /// and `source`).
+    pub area: Vec<SatId>,
+    /// Whether the expanded area was needed.
+    pub expanded: bool,
+}
+
+/// Which area policy to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AreaPolicy {
+    /// Initial area only (SCCR-INIT).
+    InitialOnly,
+    /// Initial, then one expansion (full SCCR, Alg. 2).
+    WithExpansion,
+    /// Whole network, no threshold on the source (SRS Priority baseline).
+    GlobalSrsPriority,
+}
+
+/// `find_SRS_max` over a candidate set, excluding the requester (a
+/// satellite cannot be its own data source).
+fn srs_max(area: &[SatId], req: SatId, srs: &[f64]) -> Option<SatId> {
+    area.iter()
+        .copied()
+        .filter(|&s| s != req)
+        .max_by(|&a, &b| srs[a].partial_cmp(&srs[b]).unwrap())
+}
+
+/// Algorithm 2. `srs` holds the current SRS value of every satellite.
+/// Returns `None` when the collaboration terminates without a source.
+pub fn select_source(
+    topo: &GridTopology,
+    req: SatId,
+    srs: &[f64],
+    th_co: f64,
+    policy: AreaPolicy,
+) -> Option<CollabDecision> {
+    debug_assert_eq!(srs.len(), topo.len());
+
+    if policy == AreaPolicy::GlobalSrsPriority {
+        let area: Vec<SatId> = topo.all().collect();
+        let source = srs_max(&area, req, srs)?;
+        return Some(CollabDecision {
+            source,
+            area,
+            expanded: false,
+        });
+    }
+
+    // lines 1–3: initial area + its SRS maximum
+    let area = topo.area(req, 1);
+    if let Some(s_max) = srs_max(&area, req, srs) {
+        if srs[s_max] > th_co {
+            // lines 4–5
+            return Some(CollabDecision {
+                source: s_max,
+                area,
+                expanded: false,
+            });
+        }
+    }
+
+    if policy == AreaPolicy::InitialOnly {
+        return None;
+    }
+
+    // lines 6–10: expand once and retry
+    let expanded = topo.expand_area(&area);
+    if let Some(s_max) = srs_max(&expanded, req, srs) {
+        if srs[s_max] > th_co {
+            return Some(CollabDecision {
+                source: s_max,
+                area: expanded,
+                expanded: true,
+            });
+        }
+    }
+
+    // lines 11–13: terminate
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> GridTopology {
+        GridTopology::new(5)
+    }
+
+    fn uniform(n: usize, v: f64) -> Vec<f64> {
+        vec![v; n]
+    }
+
+    #[test]
+    fn picks_best_in_initial_area() {
+        let t = topo();
+        let mut srs = uniform(25, 0.2);
+        let req = t.sat_at(2, 2);
+        let good = t.sat_at(1, 2); // inside initial area
+        srs[good] = 0.9;
+        let d = select_source(&t, req, &srs, 0.5, AreaPolicy::WithExpansion).unwrap();
+        assert_eq!(d.source, good);
+        assert!(!d.expanded);
+        assert_eq!(d.area.len(), 9);
+        assert!(d.area.contains(&req));
+    }
+
+    #[test]
+    fn expands_when_initial_area_is_poor() {
+        let t = topo();
+        let mut srs = uniform(25, 0.2);
+        let req = t.sat_at(2, 2);
+        let far = t.sat_at(0, 0); // Chebyshev distance 2: only in expanded
+        srs[far] = 0.9;
+        let d = select_source(&t, req, &srs, 0.5, AreaPolicy::WithExpansion).unwrap();
+        assert_eq!(d.source, far);
+        assert!(d.expanded);
+        assert_eq!(d.area.len(), 25); // radius-2 around the grid centre
+
+        // SCCR-INIT must give up instead
+        assert_eq!(
+            select_source(&t, req, &srs, 0.5, AreaPolicy::InitialOnly),
+            None
+        );
+    }
+
+    #[test]
+    fn terminates_when_nobody_clears_threshold() {
+        let t = topo();
+        let srs = uniform(25, 0.4);
+        let d = select_source(&t, 12, &srs, 0.5, AreaPolicy::WithExpansion);
+        assert_eq!(d, None);
+    }
+
+    #[test]
+    fn threshold_is_strict() {
+        let t = topo();
+        let srs = uniform(25, 0.5); // exactly th_co: NOT > th_co
+        assert_eq!(
+            select_source(&t, 12, &srs, 0.5, AreaPolicy::WithExpansion),
+            None
+        );
+    }
+
+    #[test]
+    fn requester_never_chosen_as_source() {
+        let t = topo();
+        let mut srs = uniform(25, 0.1);
+        let req = t.sat_at(2, 2);
+        srs[req] = 1.0; // the requester itself has the max
+        let d = select_source(&t, req, &srs, 0.5, AreaPolicy::WithExpansion);
+        assert!(d.is_none(), "requester must not self-serve");
+    }
+
+    #[test]
+    fn srs_priority_spans_network_without_threshold() {
+        let t = topo();
+        let mut srs = uniform(25, 0.1); // all below th_co
+        let far = t.sat_at(4, 4);
+        srs[far] = 0.3; // still below th_co, but the global max
+        let d =
+            select_source(&t, 0, &srs, 0.5, AreaPolicy::GlobalSrsPriority).unwrap();
+        assert_eq!(d.source, far);
+        assert_eq!(d.area.len(), 25, "broadcast area is the whole network");
+    }
+
+    #[test]
+    fn corner_requester_gets_clamped_area() {
+        let t = topo();
+        let mut srs = uniform(25, 0.2);
+        srs[t.sat_at(0, 1)] = 0.8;
+        let d = select_source(&t, 0, &srs, 0.5, AreaPolicy::WithExpansion).unwrap();
+        assert_eq!(d.area.len(), 4); // 2x2 corner area
+        assert_eq!(d.source, t.sat_at(0, 1));
+    }
+}

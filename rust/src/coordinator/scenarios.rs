@@ -1,0 +1,121 @@
+//! The five evaluation scenarios of Sec. V-A.
+
+use crate::coordinator::sccr::AreaPolicy;
+
+/// Scenario under evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scenario {
+    /// `w/o CR` — every task computed from scratch, no lookup, no cache.
+    WithoutCr,
+    /// `SRS Priority` — collaborate with the global-best SRS satellite and
+    /// broadcast across the entire network.
+    SrsPriority,
+    /// `SLCR` — local computation reuse only (Alg. 1).
+    Slcr,
+    /// `SCCR-INIT` — collaborative reuse without area expansion.
+    SccrInit,
+    /// `SCCR` — the full proposed algorithm (Alg. 2).
+    Sccr,
+}
+
+impl Scenario {
+    /// All scenarios, in the paper's table/figure column order.
+    pub const ALL: [Scenario; 5] = [
+        Scenario::WithoutCr,
+        Scenario::SrsPriority,
+        Scenario::Slcr,
+        Scenario::SccrInit,
+        Scenario::Sccr,
+    ];
+
+    /// Does the scenario perform any computation reuse?
+    pub fn uses_reuse(&self) -> bool {
+        !matches!(self, Scenario::WithoutCr)
+    }
+
+    /// Does the scenario collaborate between satellites?
+    pub fn collaborates(&self) -> bool {
+        matches!(
+            self,
+            Scenario::SrsPriority | Scenario::SccrInit | Scenario::Sccr
+        )
+    }
+
+    /// The Alg. 2 area policy, for collaborating scenarios.
+    pub fn area_policy(&self) -> Option<AreaPolicy> {
+        match self {
+            Scenario::SrsPriority => Some(AreaPolicy::GlobalSrsPriority),
+            Scenario::SccrInit => Some(AreaPolicy::InitialOnly),
+            Scenario::Sccr => Some(AreaPolicy::WithExpansion),
+            _ => None,
+        }
+    }
+
+    /// Column label used in the paper's tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scenario::WithoutCr => "w/o CR",
+            Scenario::SrsPriority => "SRS Priority",
+            Scenario::Slcr => "SLCR",
+            Scenario::SccrInit => "SCCR-INIT",
+            Scenario::Sccr => "SCCR",
+        }
+    }
+
+    /// Parse a CLI name (case-insensitive, several aliases).
+    pub fn parse(s: &str) -> Option<Scenario> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "wo-cr" | "w/o-cr" | "wocr" | "without-cr" | "scratch" => {
+                Some(Scenario::WithoutCr)
+            }
+            "srs-priority" | "srs" => Some(Scenario::SrsPriority),
+            "slcr" | "local" => Some(Scenario::Slcr),
+            "sccr-init" | "init" => Some(Scenario::SccrInit),
+            "sccr" => Some(Scenario::Sccr),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Scenario {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn properties_match_paper() {
+        assert!(!Scenario::WithoutCr.uses_reuse());
+        assert!(!Scenario::Slcr.collaborates());
+        assert!(Scenario::Sccr.collaborates());
+        assert_eq!(
+            Scenario::Sccr.area_policy(),
+            Some(AreaPolicy::WithExpansion)
+        );
+        assert_eq!(
+            Scenario::SccrInit.area_policy(),
+            Some(AreaPolicy::InitialOnly)
+        );
+        assert_eq!(Scenario::WithoutCr.area_policy(), None);
+        assert_eq!(Scenario::Slcr.area_policy(), None);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in Scenario::ALL {
+            let label = s.label().to_ascii_lowercase().replace(' ', "-").replace("w/o", "wo");
+            assert_eq!(Scenario::parse(&label), Some(s), "label {label}");
+        }
+        assert_eq!(Scenario::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn all_has_paper_order() {
+        assert_eq!(Scenario::ALL[0].label(), "w/o CR");
+        assert_eq!(Scenario::ALL[4].label(), "SCCR");
+    }
+}

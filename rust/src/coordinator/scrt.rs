@@ -1,0 +1,318 @@
+//! Satellite Computation Reuse Table (SCRT).
+//!
+//! Caches reuse records `⟨D_t, P_t, R_t, N_t⟩` (Sec. III-A), organised as a
+//! hyperplane-LSH table (`p_l = 1` table, `2^p_k` buckets). The capacity
+//! `C^stg` is enforced in records (every record carries the same 20.5 MB
+//! payload); when full, the record with the lowest `(N_t, recency)` value is
+//! evicted — reuse *value*, then LRU, mirroring how the paper reasons about
+//! high-value records.
+//!
+//! Nearest-neighbour search inside a bucket is an exact L2 scan over the
+//! pre-processed feature vectors (what FALCONN does after hashing); the
+//! expensive SSIM gate (eq. 12) then runs on the single best candidate, via
+//! the compute backend — exactly Alg. 1 lines 2 & 8.
+
+use crate::compute::Preprocessed;
+use crate::workload::SatId;
+
+/// Globally unique record identity: the task that created it. Broadcast
+/// copies keep the id so "already cached" (Sec. IV-A step 4) is decidable.
+pub type RecordId = usize;
+
+/// One reuse record.
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub id: RecordId,
+    /// Pre-processed input (`D_t` after Alg. 1 line 1) — both the feature
+    /// vector for NN search and the grayscale plane for SSIM.
+    pub pre: Preprocessed,
+    /// Task type `P_t`.
+    pub task_type: u16,
+    /// Cached result `R_t` (the class label).
+    pub result: u32,
+    /// Reuse count `N_t`.
+    pub reuse_count: u32,
+    /// Virtual time of creation/last reuse (eviction recency).
+    pub last_used: f64,
+    /// Satellite that computed the original result (diagnostics).
+    pub origin: SatId,
+}
+
+/// The reuse table of one satellite.
+#[derive(Clone, Debug)]
+pub struct Scrt {
+    buckets: Vec<Vec<Record>>,
+    capacity: usize,
+    len: usize,
+    /// Total evictions (observability).
+    pub evictions: u64,
+}
+
+impl Scrt {
+    /// `num_buckets = 2^p_k`; `capacity` in records (`C^stg` / record size).
+    pub fn new(num_buckets: usize, capacity: usize) -> Self {
+        assert!(num_buckets.is_power_of_two(), "buckets must be 2^p_k");
+        assert!(capacity > 0, "capacity must be positive");
+        Scrt {
+            buckets: vec![Vec::new(); num_buckets],
+            capacity,
+            len: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Is a record with this identity already cached?
+    pub fn contains(&self, id: RecordId) -> bool {
+        self.buckets.iter().any(|b| b.iter().any(|r| r.id == id))
+    }
+
+    /// Exact nearest neighbour (min L2 over `pd`) within a bucket, filtered
+    /// by task type. Returns `(bucket_slot, distance²)`.
+    pub fn nearest(
+        &self,
+        bucket: u32,
+        task_type: u16,
+        pre: &Preprocessed,
+    ) -> Option<(usize, f32)> {
+        let b = &self.buckets[bucket as usize];
+        let mut best: Option<(usize, f32)> = None;
+        for (slot, rec) in b.iter().enumerate() {
+            if rec.task_type != task_type {
+                continue;
+            }
+            let d = l2_sq(&rec.pre.pd, &pre.pd);
+            if best.map_or(true, |(_, bd)| d < bd) {
+                best = Some((slot, d));
+            }
+        }
+        best
+    }
+
+    /// Borrow a record by (bucket, slot).
+    pub fn record(&self, bucket: u32, slot: usize) -> &Record {
+        &self.buckets[bucket as usize][slot]
+    }
+
+    /// Register a successful reuse of a record (Alg. 1 line 11).
+    pub fn mark_reused(&mut self, bucket: u32, slot: usize, now: f64) {
+        let rec = &mut self.buckets[bucket as usize][slot];
+        rec.reuse_count += 1;
+        rec.last_used = now;
+    }
+
+    /// Insert a record into a bucket, evicting the lowest-value record
+    /// (min `(reuse_count, last_used)`, scanned across all buckets) if full.
+    /// Returns the evicted record id, if any.
+    pub fn insert(&mut self, bucket: u32, record: Record) -> Option<RecordId> {
+        let mut evicted = None;
+        if self.len >= self.capacity {
+            evicted = self.evict_lowest_value();
+        }
+        self.buckets[bucket as usize].push(record);
+        self.len += 1;
+        evicted
+    }
+
+    /// Merge a broadcast record (Sec. IV-A step 4): skip when already
+    /// cached; otherwise insert with `N_t` reset to zero. Returns true if
+    /// the record was actually inserted.
+    pub fn merge_broadcast(&mut self, bucket: u32, mut record: Record, now: f64) -> bool {
+        if self.contains(record.id) {
+            return false;
+        }
+        record.reuse_count = 0;
+        record.last_used = now;
+        self.insert(bucket, record);
+        true
+    }
+
+    /// The `τ` records with the highest reuse counts (ties broken by
+    /// recency), cloned for broadcast, with their bucket ids.
+    pub fn top_tau(&self, tau: usize) -> Vec<(u32, Record)> {
+        let mut all: Vec<(u32, &Record)> = Vec::with_capacity(self.len);
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            for rec in bucket {
+                all.push((b as u32, rec));
+            }
+        }
+        all.sort_by(|(_, x), (_, y)| {
+            y.reuse_count
+                .cmp(&x.reuse_count)
+                .then(y.last_used.partial_cmp(&x.last_used).unwrap())
+        });
+        all.truncate(tau);
+        all.into_iter().map(|(b, r)| (b, r.clone())).collect()
+    }
+
+    /// All records (diagnostics / tests).
+    pub fn iter(&self) -> impl Iterator<Item = (u32, &Record)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .flat_map(|(b, bucket)| bucket.iter().map(move |r| (b as u32, r)))
+    }
+
+    fn evict_lowest_value(&mut self) -> Option<RecordId> {
+        let mut victim: Option<(usize, usize, u32, f64)> = None; // (bucket, slot, count, last)
+        for (bi, bucket) in self.buckets.iter().enumerate() {
+            for (si, rec) in bucket.iter().enumerate() {
+                let worse = match victim {
+                    None => true,
+                    Some((_, _, c, l)) => {
+                        rec.reuse_count < c || (rec.reuse_count == c && rec.last_used < l)
+                    }
+                };
+                if worse {
+                    victim = Some((bi, si, rec.reuse_count, rec.last_used));
+                }
+            }
+        }
+        victim.map(|(bi, si, _, _)| {
+            let rec = self.buckets[bi].swap_remove(si);
+            self.len -= 1;
+            self.evictions += 1;
+            rec.id
+        })
+    }
+}
+
+#[inline]
+fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = x - y;
+            d * d
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pre(fill: f32) -> Preprocessed {
+        Preprocessed {
+            h: 2,
+            w: 2,
+            pd: vec![fill; 12],
+            gray: vec![fill; 4],
+        }
+    }
+
+    fn rec(id: RecordId, fill: f32, count: u32, t: f64) -> Record {
+        Record {
+            id,
+            pre: pre(fill),
+            task_type: 0,
+            result: id as u32,
+            reuse_count: count,
+            last_used: t,
+            origin: 0,
+        }
+    }
+
+    #[test]
+    fn nearest_picks_min_l2() {
+        let mut s = Scrt::new(4, 10);
+        s.insert(1, rec(0, 0.1, 0, 0.0));
+        s.insert(1, rec(1, 0.5, 0, 0.0));
+        s.insert(1, rec(2, 0.9, 0, 0.0));
+        let (slot, d) = s.nearest(1, 0, &pre(0.55)).unwrap();
+        assert_eq!(s.record(1, slot).id, 1);
+        assert!(d < 0.1);
+        // other bucket is empty
+        assert!(s.nearest(0, 0, &pre(0.5)).is_none());
+    }
+
+    #[test]
+    fn nearest_filters_task_type() {
+        let mut s = Scrt::new(2, 10);
+        let mut r = rec(0, 0.5, 0, 0.0);
+        r.task_type = 3;
+        s.insert(0, r);
+        assert!(s.nearest(0, 0, &pre(0.5)).is_none());
+        assert!(s.nearest(0, 3, &pre(0.5)).is_some());
+    }
+
+    #[test]
+    fn capacity_enforced_with_value_eviction() {
+        let mut s = Scrt::new(2, 3);
+        s.insert(0, rec(0, 0.0, 5, 0.0));
+        s.insert(0, rec(1, 0.1, 1, 1.0)); // lowest count -> victim
+        s.insert(1, rec(2, 0.2, 3, 2.0));
+        let evicted = s.insert(1, rec(3, 0.3, 0, 3.0));
+        assert_eq!(evicted, Some(1));
+        assert_eq!(s.len(), 3);
+        assert!(!s.contains(1));
+        assert!(s.contains(0) && s.contains(2) && s.contains(3));
+        assert_eq!(s.evictions, 1);
+    }
+
+    #[test]
+    fn eviction_ties_broken_by_recency() {
+        let mut s = Scrt::new(1, 2);
+        s.insert(0, rec(0, 0.0, 1, 5.0));
+        s.insert(0, rec(1, 0.1, 1, 1.0)); // same count, older -> victim
+        let evicted = s.insert(0, rec(2, 0.2, 0, 9.0));
+        assert_eq!(evicted, Some(1));
+    }
+
+    #[test]
+    fn top_tau_orders_by_reuse_count() {
+        let mut s = Scrt::new(4, 10);
+        s.insert(0, rec(0, 0.0, 2, 0.0));
+        s.insert(1, rec(1, 0.1, 7, 1.0));
+        s.insert(2, rec(2, 0.2, 4, 2.0));
+        let top = s.top_tau(2);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].1.id, 1);
+        assert_eq!(top[1].1.id, 2);
+        assert_eq!(top[0].0, 1, "bucket id travels with the record");
+        // tau larger than len -> everything
+        assert_eq!(s.top_tau(99).len(), 3);
+    }
+
+    #[test]
+    fn merge_broadcast_skips_duplicates_and_resets_count() {
+        let mut s = Scrt::new(2, 10);
+        s.insert(0, rec(7, 0.5, 3, 0.0));
+        assert!(!s.merge_broadcast(0, rec(7, 0.5, 9, 1.0), 1.0));
+        assert!(s.merge_broadcast(1, rec(8, 0.6, 9, 1.0), 1.0));
+        let (_, r) = s.iter().find(|(_, r)| r.id == 8).unwrap();
+        assert_eq!(r.reuse_count, 0, "broadcast count must reset (step 4)");
+    }
+
+    #[test]
+    fn mark_reused_bumps_count_and_recency() {
+        let mut s = Scrt::new(1, 4);
+        s.insert(0, rec(0, 0.5, 0, 0.0));
+        let (slot, _) = s.nearest(0, 0, &pre(0.5)).unwrap();
+        s.mark_reused(0, slot, 9.0);
+        assert_eq!(s.record(0, slot).reuse_count, 1);
+        assert_eq!(s.record(0, slot).last_used, 9.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_buckets_rejected() {
+        Scrt::new(3, 4);
+    }
+}

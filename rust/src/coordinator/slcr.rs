@@ -1,0 +1,223 @@
+//! Algorithm 1 — Satellite Local Computation Reuse (SLCR).
+//!
+//! ```text
+//! PD_t ← Preprocess(D_t)
+//! match ← FindNearestNeighbor(P_t, PD_t)          (LSH bucket + L2 scan)
+//! if match = ∅:
+//!     R_t ← PreTrainedModel(PD_t, P_t); SCRT ← record
+//! else:
+//!     if SSIM(PD_t, match) > th_sim: R_t ← match.R; match.N += 1
+//!     else: R_t ← PreTrainedModel(PD_t, P_t); SCRT ← record
+//! ```
+//!
+//! The function is pure coordination: every data-dependent step (hash,
+//! SSIM, model) goes through the [`ComputeBackend`], i.e. through the AOT
+//! Pallas/JAX artifacts on the production path.
+
+use crate::compute::{ComputeBackend, Preprocessed};
+use crate::coordinator::scrt::{Record, Scrt};
+use crate::error::Result;
+use crate::workload::SatId;
+
+/// What happened while serving one subtask.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlcrOutcome {
+    /// LSH bucket the input hashed into.
+    pub bucket: u32,
+    /// SSIM against the nearest neighbour, when one existed.
+    pub ssim: Option<f32>,
+    /// Did the task reuse a cached result?
+    pub reused: bool,
+    /// Identity of the reused record (for provenance metrics).
+    pub reused_from: Option<usize>,
+    /// The result label `R_t` returned to the requester.
+    pub result: u32,
+    /// Was a fresh record inserted into the SCRT?
+    pub inserted: bool,
+}
+
+/// Run Alg. 1 for one subtask on one satellite's SCRT.
+///
+/// `pre` is the already-pre-processed input (the simulator pre-computes it
+/// once per task; the preprocessing *cost* is charged separately in W).
+#[allow(clippy::too_many_arguments)]
+pub fn process_task(
+    scrt: &mut Scrt,
+    backend: &dyn ComputeBackend,
+    sat: SatId,
+    task_id: usize,
+    task_type: u16,
+    pre: &Preprocessed,
+    th_sim: f64,
+    now: f64,
+) -> Result<SlcrOutcome> {
+    let bucket = backend.lsh_bucket(pre)?;
+
+    if let Some((slot, _dist)) = scrt.nearest(bucket, task_type, pre) {
+        let ssim = {
+            let candidate = scrt.record(bucket, slot);
+            backend.ssim(pre, &candidate.pre)?
+        };
+        if f64::from(ssim) > th_sim {
+            // Alg. 1 lines 10–11: reuse the cached outcome.
+            let result = scrt.record(bucket, slot).result;
+            let reused_from = scrt.record(bucket, slot).id;
+            scrt.mark_reused(bucket, slot, now);
+            return Ok(SlcrOutcome {
+                bucket,
+                ssim: Some(ssim),
+                reused: true,
+                reused_from: Some(reused_from),
+                result,
+                inserted: false,
+            });
+        }
+        // Alg. 1 lines 13–15: similarity too low — compute and cache.
+        let result = backend.classify(pre)?;
+        scrt.insert(
+            bucket,
+            Record {
+                id: task_id,
+                pre: pre.clone(),
+                task_type,
+                result,
+                reuse_count: 0,
+                last_used: now,
+                origin: sat,
+            },
+        );
+        return Ok(SlcrOutcome {
+            bucket,
+            ssim: Some(ssim),
+            reused: false,
+            reused_from: None,
+            result,
+            inserted: true,
+        });
+    }
+
+    // Alg. 1 lines 4–6: no candidate at all.
+    let result = backend.classify(pre)?;
+    scrt.insert(
+        bucket,
+        Record {
+            id: task_id,
+            pre: pre.clone(),
+            task_type,
+            result,
+            reuse_count: 0,
+            last_used: now,
+            origin: sat,
+        },
+    );
+    Ok(SlcrOutcome {
+        bucket,
+        ssim: None,
+        reused: false,
+        reused_from: None,
+        result,
+        inserted: true,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::NativeBackend;
+    use crate::config::SimConfig;
+    use crate::util::rng::Rng;
+    use crate::workload::texture::{SceneSpec, TextureSynth};
+
+    fn setup() -> (NativeBackend, TextureSynth, Scrt) {
+        let cfg = SimConfig::paper_default(5);
+        let backend = NativeBackend::new(&cfg);
+        let synth = TextureSynth::new(64, 64, 0.05);
+        let scrt = Scrt::new(backend.num_buckets(), 32);
+        (backend, synth, scrt)
+    }
+
+    #[test]
+    fn first_task_computes_and_caches() {
+        let (backend, synth, mut scrt) = setup();
+        let scene = SceneSpec::sample(0, 1, &mut Rng::new(1));
+        let img = synth.render(&scene, &mut Rng::new(2));
+        let pre = backend.preprocess(&img).unwrap();
+        let out =
+            process_task(&mut scrt, &backend, 0, 0, 0, &pre, 0.7, 0.0).unwrap();
+        assert!(!out.reused);
+        assert!(out.inserted);
+        assert!(out.ssim.is_none());
+        assert_eq!(scrt.len(), 1);
+    }
+
+    #[test]
+    fn second_capture_of_same_scene_reuses() {
+        let (backend, synth, mut scrt) = setup();
+        let scene = SceneSpec::sample(0, 2, &mut Rng::new(3));
+        let img1 = synth.render(&scene, &mut Rng::new(10));
+        let img2 = synth.render(&scene, &mut Rng::new(11));
+        let pre1 = backend.preprocess(&img1).unwrap();
+        let pre2 = backend.preprocess(&img2).unwrap();
+        let out1 =
+            process_task(&mut scrt, &backend, 0, 0, 0, &pre1, 0.7, 0.0).unwrap();
+        let out2 =
+            process_task(&mut scrt, &backend, 0, 1, 0, &pre2, 0.7, 1.0).unwrap();
+        assert!(out2.reused, "ssim was {:?}", out2.ssim);
+        assert_eq!(out2.result, out1.result);
+        assert_eq!(out2.reused_from, Some(0));
+        assert_eq!(scrt.len(), 1, "reuse must not insert");
+        let (_, rec) = scrt.iter().next().unwrap();
+        assert_eq!(rec.reuse_count, 1);
+    }
+
+    #[test]
+    fn dissimilar_scene_not_reused() {
+        let (backend, synth, mut scrt) = setup();
+        // two different classes with different pattern families
+        let s1 = SceneSpec::sample(0, 0, &mut Rng::new(4));
+        let s2 = SceneSpec::sample(1, 8, &mut Rng::new(5));
+        let pre1 = backend
+            .preprocess(&synth.render(&s1, &mut Rng::new(1)))
+            .unwrap();
+        let pre2 = backend
+            .preprocess(&synth.render(&s2, &mut Rng::new(2)))
+            .unwrap();
+        process_task(&mut scrt, &backend, 0, 0, 0, &pre1, 0.7, 0.0).unwrap();
+        let out =
+            process_task(&mut scrt, &backend, 0, 1, 0, &pre2, 0.7, 1.0).unwrap();
+        // Either it hashed elsewhere (no candidate) or the SSIM gate failed;
+        // both must end in fresh computation.
+        assert!(!out.reused);
+        assert!(out.inserted);
+        assert_eq!(scrt.len(), 2);
+    }
+
+    #[test]
+    fn th_sim_one_disables_reuse() {
+        let (backend, synth, mut scrt) = setup();
+        let scene = SceneSpec::sample(0, 2, &mut Rng::new(6));
+        let pre1 = backend
+            .preprocess(&synth.render(&scene, &mut Rng::new(1)))
+            .unwrap();
+        let pre2 = backend
+            .preprocess(&synth.render(&scene, &mut Rng::new(2)))
+            .unwrap();
+        process_task(&mut scrt, &backend, 0, 0, 0, &pre1, 1.1, 0.0).unwrap();
+        let out =
+            process_task(&mut scrt, &backend, 0, 1, 0, &pre2, 1.1, 1.0).unwrap();
+        assert!(!out.reused, "th_sim > 1 must never reuse");
+    }
+
+    #[test]
+    fn identical_input_always_reuses_at_any_threshold_below_one() {
+        let (backend, synth, mut scrt) = setup();
+        let scene = SceneSpec::sample(0, 5, &mut Rng::new(7));
+        let img = synth.render(&scene, &mut Rng::new(1));
+        let pre = backend.preprocess(&img).unwrap();
+        process_task(&mut scrt, &backend, 0, 0, 0, &pre, 0.999, 0.0).unwrap();
+        let out =
+            process_task(&mut scrt, &backend, 0, 1, 0, &pre, 0.999, 1.0).unwrap();
+        assert!(out.reused);
+        assert_eq!(out.ssim.map(|s| s > 0.999), Some(true));
+    }
+}

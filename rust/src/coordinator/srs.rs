@@ -1,0 +1,63 @@
+//! Satellite Reuse Status — eq. (11):
+//!
+//! ```text
+//! SRS_S = β · rr_S + (1 − β) · (1 − C_S)
+//! ```
+//!
+//! `rr_S` is the satellite's reuse rate, `C_S` its CPU occupancy. High SRS
+//! ⇒ the satellite benefits from reuse and can serve as a data source;
+//! SRS < `th_co` ⇒ the satellite requests collaboration (Alg. 2 trigger).
+
+/// Compute SRS from the two indicators. Inputs are clamped to [0, 1] so a
+/// transiently out-of-range occupancy estimate cannot produce SRS > 1.
+pub fn srs(beta: f64, reuse_rate: f64, cpu_occupancy: f64) -> f64 {
+    let rr = reuse_rate.clamp(0.0, 1.0);
+    let c = cpu_occupancy.clamp(0.0, 1.0);
+    beta * rr + (1.0 - beta) * (1.0 - c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::srs;
+
+    #[test]
+    fn eq11_reference_points() {
+        // β = 0.5 (Table I)
+        assert_eq!(srs(0.5, 0.0, 0.0), 0.5); // fresh satellite
+        assert_eq!(srs(0.5, 1.0, 0.0), 1.0); // perfect reuse, idle CPU
+        assert_eq!(srs(0.5, 0.0, 1.0), 0.0); // no reuse, saturated CPU
+        assert_eq!(srs(0.5, 0.6, 0.4), 0.6);
+    }
+
+    #[test]
+    fn monotonicity() {
+        // increasing reuse rate raises SRS
+        assert!(srs(0.5, 0.8, 0.5) > srs(0.5, 0.2, 0.5));
+        // increasing occupancy lowers SRS
+        assert!(srs(0.5, 0.5, 0.9) < srs(0.5, 0.5, 0.1));
+    }
+
+    #[test]
+    fn beta_extremes() {
+        // β = 1: SRS is the reuse rate alone
+        assert_eq!(srs(1.0, 0.3, 0.9), 0.3);
+        // β = 0: SRS is CPU headroom alone
+        assert!((srs(0.0, 0.3, 0.9) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clamps_out_of_range_inputs() {
+        assert_eq!(srs(0.5, 2.0, -1.0), 1.0);
+        assert_eq!(srs(0.5, -0.5, 2.0), 0.0);
+    }
+
+    #[test]
+    fn bounded_in_unit_interval() {
+        for i in 0..=10 {
+            for j in 0..=10 {
+                let v = srs(0.5, i as f64 / 10.0, j as f64 / 10.0);
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+    }
+}

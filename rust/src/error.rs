@@ -1,0 +1,51 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for every CCRSat layer.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// PJRT / XLA runtime failure (compile, execute, literal conversion).
+    #[error("xla runtime: {0}")]
+    Xla(#[from] xla::Error),
+
+    /// Artifact or manifest problem (missing file, shape mismatch, ...).
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// Configuration parse/validation failure.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// JSON parse failure (manifest, reports).
+    #[error("json: {0}")]
+    Json(String),
+
+    /// Simulation-level invariant violation.
+    #[error("simulation: {0}")]
+    Simulation(String),
+
+    /// Anything I/O.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Shorthand for [`Error::Artifact`].
+    pub fn artifact(msg: impl Into<String>) -> Self {
+        Error::Artifact(msg.into())
+    }
+
+    /// Shorthand for [`Error::Config`].
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+
+    /// Shorthand for [`Error::Simulation`].
+    pub fn simulation(msg: impl Into<String>) -> Self {
+        Error::Simulation(msg.into())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

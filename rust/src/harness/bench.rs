@@ -1,0 +1,161 @@
+//! Minimal benchmarking utility (criterion-style, offline-friendly).
+//!
+//! Usage in a `harness = false` bench target:
+//!
+//! ```no_run
+//! use ccrsat::harness::bench::Bencher;
+//! let mut b = Bencher::new("scrt");
+//! b.bench("insert", || { /* hot path */ });
+//! b.report();
+//! ```
+
+use std::time::{Duration, Instant};
+
+/// Defeat the optimizer without `std::hint::black_box` availability issues.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// One measured result.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iterations: u64,
+    pub total: Duration,
+    pub per_iter_ns: f64,
+    pub throughput_per_s: f64,
+}
+
+/// Bench runner: warms up, then measures for a wall-clock budget.
+pub struct Bencher {
+    group: String,
+    warmup: Duration,
+    budget: Duration,
+    results: Vec<Measurement>,
+}
+
+impl Bencher {
+    pub fn new(group: impl Into<String>) -> Self {
+        Bencher {
+            group: group.into(),
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(1),
+            results: Vec::new(),
+        }
+    }
+
+    /// Override the measurement budget (long-running end-to-end benches).
+    pub fn with_budget(mut self, warmup: Duration, budget: Duration) -> Self {
+        self.warmup = warmup;
+        self.budget = budget;
+        self
+    }
+
+    /// Measure a closure repeatedly until the budget is spent.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Measurement {
+        // warmup
+        let w_end = Instant::now() + self.warmup;
+        while Instant::now() < w_end {
+            f();
+        }
+        // measure
+        let start = Instant::now();
+        let mut iters = 0u64;
+        while start.elapsed() < self.budget {
+            f();
+            iters += 1;
+        }
+        let total = start.elapsed();
+        let per_iter_ns = total.as_nanos() as f64 / iters.max(1) as f64;
+        let m = Measurement {
+            name: name.to_string(),
+            iterations: iters,
+            total,
+            per_iter_ns,
+            throughput_per_s: 1e9 / per_iter_ns,
+        };
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Measure a closure exactly once (end-to-end scenario runs).
+    pub fn bench_once<F: FnOnce()>(&mut self, name: &str, f: F) -> &Measurement {
+        let start = Instant::now();
+        f();
+        let total = start.elapsed();
+        let m = Measurement {
+            name: name.to_string(),
+            iterations: 1,
+            total,
+            per_iter_ns: total.as_nanos() as f64,
+            throughput_per_s: 1e9 / total.as_nanos().max(1) as f64,
+        };
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Print the group report.
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        for m in &self.results {
+            println!(
+                "{:<44} {:>12} iters   {}",
+                m.name,
+                m.iterations,
+                format_ns(m.per_iter_ns)
+            );
+        }
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Pretty-print nanoseconds per iteration.
+pub fn format_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:8.1} ns/iter")
+    } else if ns < 1e6 {
+        format!("{:8.2} µs/iter", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:8.2} ms/iter", ns / 1e6)
+    } else {
+        format!("{:8.3}  s/iter", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher::new("test").with_budget(
+            Duration::from_millis(5),
+            Duration::from_millis(20),
+        );
+        let m = b.bench("noop-ish", || {
+            black_box(42u64.wrapping_mul(7));
+        });
+        assert!(m.iterations > 100);
+        assert!(m.per_iter_ns > 0.0);
+    }
+
+    #[test]
+    fn bench_once_single_iteration() {
+        let mut b = Bencher::new("test");
+        let m = b.bench_once("one", || std::thread::sleep(Duration::from_millis(2)));
+        assert_eq!(m.iterations, 1);
+        assert!(m.per_iter_ns >= 2e6);
+    }
+
+    #[test]
+    fn format_ns_units() {
+        assert!(format_ns(500.0).contains("ns"));
+        assert!(format_ns(5e4).contains("µs"));
+        assert!(format_ns(5e7).contains("ms"));
+        assert!(format_ns(5e9).contains("s/iter"));
+    }
+}

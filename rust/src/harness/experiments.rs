@@ -1,0 +1,270 @@
+//! Experiment runners for every table and figure in the paper (Sec. V).
+//!
+//! | id       | paper artifact                  | runner              |
+//! |----------|---------------------------------|---------------------|
+//! | table2   | Table II  — reuse accuracy      | [`run_scale_suite`] |
+//! | table3   | Table III — data transfer (MB)  | [`run_scale_suite`] |
+//! | fig3     | Fig. 3a/b/c — time/rr/CPU       | [`run_scale_suite`] |
+//! | fig4     | Fig. 4 — τ sweep                | [`tau_sweep`]       |
+//! | fig5     | Fig. 5 — th_co sweep            | [`thco_sweep`]      |
+//!
+//! All runners share one workload per network scale so every scenario sees
+//! the identical task stream (as the paper's comparative setup requires).
+
+use crate::compute::{ComputeBackend, NativeBackend, PjrtBackend};
+use crate::config::SimConfig;
+use crate::coordinator::Scenario;
+use crate::error::Result;
+use crate::metrics::{
+    reports_to_csv, scale_scenario_table, sweep_table, RunReport,
+};
+use crate::simulator::{prepare, Prepared, Simulation};
+use crate::workload::{build_workload, Workload};
+
+/// Paper network scales.
+pub const PAPER_SCALES: [usize; 3] = [5, 7, 9];
+/// Fig. 4 sweep values.
+pub const TAU_SWEEP: [usize; 8] = [1, 3, 5, 7, 9, 11, 13, 15];
+/// Fig. 5 sweep values.
+pub const THCO_SWEEP: [f64; 9] = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
+
+/// Default backend policy shared by benches/examples: the PJRT artifacts
+/// when present (the real three-layer path), else the native reference.
+pub fn default_backend(cfg: &SimConfig) -> Result<Box<dyn ComputeBackend>> {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Ok(Box::new(PjrtBackend::from_dir("artifacts")?))
+    } else {
+        eprintln!("note: artifacts/ missing — falling back to the native backend");
+        Ok(Box::new(NativeBackend::new(cfg)))
+    }
+}
+
+/// A workload + prepared inputs, cached per scale.
+pub struct PreparedScale {
+    pub cfg: SimConfig,
+    pub workload: Workload,
+    pub prepared: Prepared,
+}
+
+/// Build (workload, oracle) once for a scale.
+pub fn prepare_scale(
+    base: &SimConfig,
+    backend: &dyn ComputeBackend,
+    n: usize,
+) -> Result<PreparedScale> {
+    let mut cfg = base.clone();
+    cfg.network.n = n;
+    cfg.validate()?;
+    let workload = build_workload(&cfg);
+    let prepared = prepare(backend, &workload)?;
+    Ok(PreparedScale {
+        cfg,
+        workload,
+        prepared,
+    })
+}
+
+/// Run one scenario on a prepared scale.
+pub fn run_scenario(
+    ps: &PreparedScale,
+    backend: &dyn ComputeBackend,
+    scenario: Scenario,
+) -> Result<RunReport> {
+    Simulation::new(&ps.cfg, backend, scenario)
+        .with_workload(&ps.workload)
+        .with_prepared(&ps.prepared)
+        .run()
+}
+
+/// Run one scenario with config tweaks (sweeps) on a prepared scale.
+pub fn run_scenario_with(
+    ps: &PreparedScale,
+    backend: &dyn ComputeBackend,
+    scenario: Scenario,
+    tweak: impl Fn(&mut SimConfig),
+) -> Result<RunReport> {
+    let mut cfg = ps.cfg.clone();
+    tweak(&mut cfg);
+    cfg.validate()?;
+    Simulation::new(&cfg, backend, scenario)
+        .with_workload(&ps.workload)
+        .with_prepared(&ps.prepared)
+        .run()
+}
+
+/// Tables II & III + Fig. 3: all scenarios × the requested scales.
+pub fn run_scale_suite(
+    base: &SimConfig,
+    backend: &dyn ComputeBackend,
+    scales: &[usize],
+    scenarios: &[Scenario],
+) -> Result<Vec<RunReport>> {
+    let mut out = Vec::with_capacity(scales.len() * scenarios.len());
+    for &n in scales {
+        let ps = prepare_scale(base, backend, n)?;
+        for &sc in scenarios {
+            out.push(run_scenario(&ps, backend, sc)?);
+        }
+    }
+    Ok(out)
+}
+
+/// Fig. 4: τ sweep for SCCR-INIT and SCCR on one scale (default 5×5).
+/// Returns `(τ, [t_sccr_init, t_sccr])` rows.
+pub fn tau_sweep(
+    base: &SimConfig,
+    backend: &dyn ComputeBackend,
+    n: usize,
+    taus: &[usize],
+) -> Result<Vec<(f64, Vec<f64>)>> {
+    let ps = prepare_scale(base, backend, n)?;
+    let mut rows = Vec::with_capacity(taus.len());
+    for &tau in taus {
+        let init = run_scenario_with(&ps, backend, Scenario::SccrInit, |c| {
+            c.reuse.tau = tau
+        })?;
+        let full =
+            run_scenario_with(&ps, backend, Scenario::Sccr, |c| c.reuse.tau = tau)?;
+        rows.push((
+            tau as f64,
+            vec![init.completion_time, full.completion_time],
+        ));
+    }
+    Ok(rows)
+}
+
+/// Fig. 5: th_co sweep for SCCR-INIT and SCCR plus the SLCR reference line.
+/// Returns `(th_co, [t_sccr_init, t_sccr, t_slcr])` rows.
+pub fn thco_sweep(
+    base: &SimConfig,
+    backend: &dyn ComputeBackend,
+    n: usize,
+    thcos: &[f64],
+) -> Result<Vec<(f64, Vec<f64>)>> {
+    let ps = prepare_scale(base, backend, n)?;
+    let slcr = run_scenario(&ps, backend, Scenario::Slcr)?;
+    let mut rows = Vec::with_capacity(thcos.len());
+    for &th in thcos {
+        let init = run_scenario_with(&ps, backend, Scenario::SccrInit, |c| {
+            c.reuse.th_co = th
+        })?;
+        let full =
+            run_scenario_with(&ps, backend, Scenario::Sccr, |c| c.reuse.th_co = th)?;
+        rows.push((
+            th,
+            vec![
+                init.completion_time,
+                full.completion_time,
+                slcr.completion_time,
+            ],
+        ));
+    }
+    Ok(rows)
+}
+
+/// Render the Table II markdown from suite reports.
+pub fn table2_markdown(reports: &[RunReport]) -> String {
+    scale_scenario_table("Table II: reuse accuracy", reports, |r| {
+        format!("{:.4}", r.reuse_accuracy)
+    })
+}
+
+/// Render the Table III markdown from suite reports.
+pub fn table3_markdown(reports: &[RunReport]) -> String {
+    scale_scenario_table("Table III: data transfer volume (MB)", reports, |r| {
+        format!("{:.2}", r.data_transfer_mb)
+    })
+}
+
+/// Render the three Fig. 3 panels from suite reports.
+pub fn fig3_markdown(reports: &[RunReport]) -> String {
+    let mut out = scale_scenario_table("Fig. 3a: task completion time (s)", reports, |r| {
+        format!("{:.2}", r.completion_time)
+    });
+    out.push('\n');
+    out.push_str(&scale_scenario_table("Fig. 3b: reuse rate", reports, |r| {
+        format!("{:.3}", r.reuse_rate)
+    }));
+    out.push('\n');
+    out.push_str(&scale_scenario_table(
+        "Fig. 3c: CPU occupancy",
+        reports,
+        |r| format!("{:.3}", r.cpu_occupancy),
+    ));
+    out
+}
+
+/// Render Fig. 4 markdown.
+pub fn fig4_markdown(rows: &[(f64, Vec<f64>)]) -> String {
+    sweep_table(
+        "Fig. 4: impact of τ on task completion time (s), 5×5",
+        "τ",
+        &["SCCR-INIT", "SCCR"],
+        rows,
+    )
+}
+
+/// Render Fig. 5 markdown.
+pub fn fig5_markdown(rows: &[(f64, Vec<f64>)]) -> String {
+    sweep_table(
+        "Fig. 5: impact of th_co on task completion time (s), 5×5",
+        "th_co",
+        &["SCCR-INIT", "SCCR", "SLCR"],
+        rows,
+    )
+}
+
+/// CSV for the suite (plotting pipelines).
+pub fn suite_csv(reports: &[RunReport]) -> String {
+    reports_to_csv(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::NativeBackend;
+
+    fn small_base() -> SimConfig {
+        let mut cfg = SimConfig::paper_default(3);
+        cfg.workload.total_tasks = 36;
+        cfg
+    }
+
+    #[test]
+    fn suite_runs_all_scenarios() {
+        let base = small_base();
+        let backend = NativeBackend::new(&base);
+        let reports =
+            run_scale_suite(&base, &backend, &[3], &Scenario::ALL).unwrap();
+        assert_eq!(reports.len(), 5);
+        let t2 = table2_markdown(&reports);
+        assert!(t2.contains("| 3x3 |"));
+        let t3 = table3_markdown(&reports);
+        assert!(t3.contains("0.00"), "w/o CR transfers nothing:\n{t3}");
+        let f3 = fig3_markdown(&reports);
+        assert!(f3.contains("Fig. 3a") && f3.contains("Fig. 3c"));
+    }
+
+    #[test]
+    fn tau_sweep_rows_match_input() {
+        let base = small_base();
+        let backend = NativeBackend::new(&base);
+        let rows = tau_sweep(&base, &backend, 3, &[1, 5]).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, 1.0);
+        assert_eq!(rows[1].1.len(), 2);
+        let md = fig4_markdown(&rows);
+        assert!(md.contains("SCCR-INIT"));
+    }
+
+    #[test]
+    fn thco_sweep_includes_slcr_reference() {
+        let base = small_base();
+        let backend = NativeBackend::new(&base);
+        let rows = thco_sweep(&base, &backend, 3, &[0.3, 0.7]).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].1.len(), 3);
+        // SLCR reference identical across rows (it ignores th_co)
+        assert_eq!(rows[0].1[2], rows[1].1[2]);
+    }
+}

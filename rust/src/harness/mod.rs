@@ -1,0 +1,9 @@
+//! Benchmark + experiment harness.
+//!
+//! [`bench`] is a small criterion-style measurement utility (criterion is
+//! not available in this offline image); [`experiments`] hosts the runners
+//! that regenerate every table and figure of the paper's evaluation —
+//! shared by `benches/*.rs`, `examples/` and the `ccrsat reproduce` CLI.
+
+pub mod bench;
+pub mod experiments;

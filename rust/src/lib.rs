@@ -1,0 +1,46 @@
+//! # CCRSat — Collaborative Computation Reuse for Satellite Edge Computing
+//!
+//! Reproduction of *"CCRSat: A Collaborative Computation Reuse Framework for
+//! Satellite Edge Computing Networks"* (Zhang et al., 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: the satellite
+//!   constellation substrate, the SCRT reuse cache, the SLCR / SCCR
+//!   algorithms, the baselines, a discrete-event simulator and the CLI
+//!   launcher.
+//! * **Layer 2 / Layer 1** — JAX compute graphs and Pallas kernels
+//!   (preprocess, hyperplane LSH, SSIM, MicroGoogLeNet), AOT-lowered once to
+//!   `artifacts/*.hlo.txt` and executed here through the PJRT C API
+//!   ([`runtime`]). Python never runs on the request path.
+//!
+//! The public API is organised so a downstream user can:
+//!
+//! ```no_run
+//! use ccrsat::config::SimConfig;
+//! use ccrsat::compute::NativeBackend;
+//! use ccrsat::coordinator::Scenario;
+//! use ccrsat::simulator::Simulation;
+//!
+//! let cfg = SimConfig::paper_default(5);
+//! let backend = NativeBackend::new(&cfg);
+//! let report = Simulation::new(&cfg, &backend, Scenario::Sccr).run().unwrap();
+//! println!("{}", report.summary());
+//! ```
+
+pub mod compute;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod harness;
+pub mod metrics;
+pub mod network;
+pub mod runtime;
+pub mod satellite;
+pub mod simulator;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};
+
+/// Crate version, re-exported for the CLI `--version` output.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,366 @@
+//! `ccrsat` — CLI launcher for the CCRSat reproduction.
+//!
+//! ```text
+//! ccrsat run        --scenario sccr [--config F] [--n 5] [--backend pjrt|native]
+//! ccrsat reproduce  --experiment table2|table3|fig3|fig4|fig5|all [...]
+//! ccrsat sweep      --param tau|thco [...]
+//! ccrsat inspect    [--artifacts DIR]        # artifact/manifest report
+//! ccrsat selftest   [--artifacts DIR]        # cross-check pjrt vs native
+//! ```
+//!
+//! Argument parsing is hand-rolled (offline image: no clap); every
+//! subcommand accepts `--help`.
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use ccrsat::compute::{ComputeBackend, NativeBackend, PjrtBackend};
+use ccrsat::config::SimConfig;
+use ccrsat::coordinator::Scenario;
+use ccrsat::harness::experiments as exp;
+use ccrsat::metrics::reports_to_csv;
+use ccrsat::simulator::Simulation;
+use ccrsat::util::json::Json;
+use ccrsat::{Error, Result};
+
+const USAGE: &str = "\
+ccrsat — CCRSat: collaborative computation reuse for satellite edge networks
+
+USAGE:
+    ccrsat <COMMAND> [OPTIONS]
+
+COMMANDS:
+    run         run one scenario and print the report
+    reproduce   regenerate a paper table/figure (table2|table3|fig3|fig4|fig5|all)
+    sweep       parameter sensitivity sweep (tau | thco)
+    inspect     print the artifact manifest summary
+    selftest    cross-check the PJRT artifacts against the native backend
+
+COMMON OPTIONS:
+    --config <FILE>      TOML config (defaults: paper Table I values)
+    --n <N>              network scale override (5, 7, 9, ...)
+    --scenario <S>       wo-cr | srs-priority | slcr | sccr-init | sccr
+    --backend <B>        pjrt (default when artifacts exist) | native
+    --artifacts <DIR>    artifacts directory (default: artifacts)
+    --seed <SEED>        workload seed override
+    --tasks <T>          total task count override
+    --json               emit machine-readable JSON instead of text
+    --csv                emit CSV (reproduce/sweep)
+    --help               this help
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Parsed flags: `--key value` pairs plus boolean flags.
+struct Flags {
+    values: HashMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags> {
+        let mut values = HashMap::new();
+        let mut bools = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| Error::config(format!("unexpected argument '{a}'")))?;
+            match key {
+                "json" | "csv" | "help" | "quiet" => bools.push(key.to_string()),
+                _ => {
+                    let v = args.get(i + 1).ok_or_else(|| {
+                        Error::config(format!("--{key} needs a value"))
+                    })?;
+                    values.insert(key.to_string(), v.clone());
+                    i += 1;
+                }
+            }
+            i += 1;
+        }
+        Ok(Flags { values, bools })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key)
+    }
+
+    fn parse_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| {
+                v.parse::<usize>()
+                    .map_err(|_| Error::config(format!("--{key} wants an integer, got '{v}'")))
+            })
+            .transpose()
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    if cmd == "--help" || cmd == "help" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    if cmd == "--version" {
+        println!("ccrsat {}", ccrsat::VERSION);
+        return Ok(());
+    }
+    let flags = Flags::parse(&args[1..])?;
+    if flags.has("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    match cmd.as_str() {
+        "run" => cmd_run(&flags),
+        "reproduce" => cmd_reproduce(&flags),
+        "sweep" => cmd_sweep(&flags),
+        "inspect" => cmd_inspect(&flags),
+        "selftest" => cmd_selftest(&flags),
+        other => Err(Error::config(format!(
+            "unknown command '{other}' (see --help)"
+        ))),
+    }
+}
+
+/// Build the SimConfig from --config/--n/--seed/--tasks.
+fn load_config(flags: &Flags) -> Result<SimConfig> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => SimConfig::from_file(path)?,
+        None => SimConfig::paper_default(5),
+    };
+    if let Some(n) = flags.parse_usize("n")? {
+        cfg.network.n = n;
+    }
+    if let Some(seed) = flags.get("seed") {
+        cfg.workload.seed = seed
+            .parse()
+            .map_err(|_| Error::config("--seed wants an integer".to_string()))?;
+    }
+    if let Some(tasks) = flags.parse_usize("tasks")? {
+        cfg.workload.total_tasks = tasks;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Build the compute backend from --backend/--artifacts.
+fn load_backend(flags: &Flags, cfg: &SimConfig) -> Result<Box<dyn ComputeBackend>> {
+    let dir = flags.get("artifacts").unwrap_or("artifacts");
+    match flags.get("backend") {
+        Some("native") => Ok(Box::new(NativeBackend::new(cfg))),
+        Some("pjrt") => Ok(Box::new(PjrtBackend::from_dir(dir)?)),
+        Some(other) => Err(Error::config(format!("unknown backend '{other}'"))),
+        None => {
+            // default: pjrt when artifacts are present, else native
+            if std::path::Path::new(dir).join("manifest.json").exists() {
+                Ok(Box::new(PjrtBackend::from_dir(dir)?))
+            } else {
+                eprintln!("note: no artifacts at '{dir}', using native backend");
+                Ok(Box::new(NativeBackend::new(cfg)))
+            }
+        }
+    }
+}
+
+fn cmd_run(flags: &Flags) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let backend = load_backend(flags, &cfg)?;
+    let scenario = match flags.get("scenario") {
+        Some(s) => Scenario::parse(s)
+            .ok_or_else(|| Error::config(format!("unknown scenario '{s}'")))?,
+        None => Scenario::Sccr,
+    };
+    let report = Simulation::new(&cfg, backend.as_ref(), scenario).run()?;
+    if flags.has("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        println!("backend: {}", backend.name());
+        println!("{}", report.summary());
+        println!(
+            "  mean latency {:.3}s  p95 {:.3}s  wallclock {:.2}s",
+            report.mean_latency, report.p95_latency, report.wallclock_s
+        );
+    }
+    Ok(())
+}
+
+fn cmd_reproduce(flags: &Flags) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let backend = load_backend(flags, &cfg)?;
+    let experiment = flags.get("experiment").unwrap_or("all");
+    let scales: Vec<usize> = match flags.parse_usize("n")? {
+        Some(n) => vec![n],
+        None => exp::PAPER_SCALES.to_vec(),
+    };
+
+    let needs_suite = matches!(experiment, "table2" | "table3" | "fig3" | "all");
+    let suite = if needs_suite {
+        eprintln!(
+            "running {} scenarios × {:?} scales on backend '{}'...",
+            Scenario::ALL.len(),
+            scales,
+            backend.name()
+        );
+        Some(exp::run_scale_suite(
+            &cfg,
+            backend.as_ref(),
+            &scales,
+            &Scenario::ALL,
+        )?)
+    } else {
+        None
+    };
+
+    match experiment {
+        "table2" => println!("{}", exp::table2_markdown(suite.as_ref().unwrap())),
+        "table3" => println!("{}", exp::table3_markdown(suite.as_ref().unwrap())),
+        "fig3" => println!("{}", exp::fig3_markdown(suite.as_ref().unwrap())),
+        "fig4" => {
+            let rows =
+                exp::tau_sweep(&cfg, backend.as_ref(), scales[0], &exp::TAU_SWEEP)?;
+            println!("{}", exp::fig4_markdown(&rows));
+        }
+        "fig5" => {
+            let rows =
+                exp::thco_sweep(&cfg, backend.as_ref(), scales[0], &exp::THCO_SWEEP)?;
+            println!("{}", exp::fig5_markdown(&rows));
+        }
+        "all" => {
+            let suite = suite.as_ref().unwrap();
+            println!("{}", exp::table2_markdown(suite));
+            println!("{}", exp::table3_markdown(suite));
+            println!("{}", exp::fig3_markdown(suite));
+            let rows =
+                exp::tau_sweep(&cfg, backend.as_ref(), scales[0], &exp::TAU_SWEEP)?;
+            println!("{}", exp::fig4_markdown(&rows));
+            let rows =
+                exp::thco_sweep(&cfg, backend.as_ref(), scales[0], &exp::THCO_SWEEP)?;
+            println!("{}", exp::fig5_markdown(&rows));
+        }
+        other => {
+            return Err(Error::config(format!(
+                "unknown experiment '{other}' (table2|table3|fig3|fig4|fig5|all)"
+            )))
+        }
+    }
+    if flags.has("csv") {
+        if let Some(suite) = &suite {
+            println!("{}", reports_to_csv(suite));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sweep(flags: &Flags) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let backend = load_backend(flags, &cfg)?;
+    let n = flags.parse_usize("n")?.unwrap_or(5);
+    match flags.get("param") {
+        Some("tau") => {
+            let rows = exp::tau_sweep(&cfg, backend.as_ref(), n, &exp::TAU_SWEEP)?;
+            println!("{}", exp::fig4_markdown(&rows));
+        }
+        Some("thco") => {
+            let rows = exp::thco_sweep(&cfg, backend.as_ref(), n, &exp::THCO_SWEEP)?;
+            println!("{}", exp::fig5_markdown(&rows));
+        }
+        other => {
+            return Err(Error::config(format!(
+                "--param must be tau or thco, got {other:?}"
+            )))
+        }
+    }
+    Ok(())
+}
+
+fn cmd_inspect(flags: &Flags) -> Result<()> {
+    let dir = flags.get("artifacts").unwrap_or("artifacts");
+    let manifest = ccrsat::runtime::Manifest::load(dir)?;
+    if flags.has("json") {
+        let mut entries = Vec::new();
+        for (name, e) in &manifest.entries {
+            entries.push(Json::obj(vec![
+                ("name", Json::str(name.clone())),
+                ("file", Json::str(e.file.display().to_string())),
+                ("inputs", Json::num(e.inputs.len() as f64)),
+                ("outputs", Json::num(e.outputs.len() as f64)),
+            ]));
+        }
+        println!("{}", Json::Arr(entries).to_string_pretty());
+        return Ok(());
+    }
+    println!("artifacts dir: {dir}");
+    let c = &manifest.constants;
+    println!(
+        "model: {}x{}→{}x{}, {} classes, p_k={}, {} buckets, {} FLOPs/inference",
+        c.raw_h, c.raw_w, c.pre_h, c.pre_w, c.num_classes, c.p_k, c.num_buckets,
+        c.classifier_flops
+    );
+    for (name, e) in &manifest.entries {
+        let size = std::fs::metadata(&e.file).map(|m| m.len()).unwrap_or(0);
+        println!(
+            "  {:<18} {:>8.2} KB  {} inputs → {} outputs",
+            name,
+            size as f64 / 1e3,
+            e.inputs.len(),
+            e.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_selftest(flags: &Flags) -> Result<()> {
+    use ccrsat::util::rng::Rng;
+    use ccrsat::workload::texture::{SceneSpec, TextureSynth};
+
+    let cfg = load_config(flags)?;
+    let dir = flags.get("artifacts").unwrap_or("artifacts");
+    let pjrt = PjrtBackend::from_dir(dir)?;
+    let native = NativeBackend::new(&cfg);
+    println!("selftest: pjrt vs native backends");
+
+    let synth = TextureSynth::new(cfg.workload.raw_h, cfg.workload.raw_w, 0.05);
+    let mut max_pd_err = 0f32;
+    let mut max_ssim_err = 0f32;
+    let mut checks = 0usize;
+    for seed in 0..6u64 {
+        let scene = SceneSpec::sample(seed as u32, (seed % 21) as u16, &mut Rng::new(seed));
+        let img_a = synth.render(&scene, &mut Rng::new(100 + seed));
+        let img_b = synth.render(&scene, &mut Rng::new(200 + seed));
+        let (pa, na) = (pjrt.preprocess(&img_a)?, native.preprocess(&img_a)?);
+        let (pb, nb) = (pjrt.preprocess(&img_b)?, native.preprocess(&img_b)?);
+        for (x, y) in pa.pd.iter().zip(&na.pd) {
+            max_pd_err = max_pd_err.max((x - y).abs());
+        }
+        let s_p = pjrt.ssim(&pa, &pb)?;
+        let s_n = native.ssim(&na, &nb)?;
+        max_ssim_err = max_ssim_err.max((s_p - s_n).abs());
+        checks += 1;
+    }
+    println!("  preprocess max |Δ| = {max_pd_err:.2e}  ({checks} images)");
+    println!("  ssim       max |Δ| = {max_ssim_err:.2e}");
+    let ok = max_pd_err < 1e-4 && max_ssim_err < 1e-3;
+    println!("selftest: {}", if ok { "OK" } else { "MISMATCH" });
+    if ok {
+        Ok(())
+    } else {
+        Err(Error::simulation("backend cross-check failed"))
+    }
+}

@@ -1,0 +1,455 @@
+//! Run metrics — the paper's five evaluation criteria (Sec. V-A) plus
+//! diagnostics, with markdown/CSV table emission shaped like the paper's
+//! tables and figures.
+
+use crate::coordinator::Scenario;
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Per-satellite summary at the end of a run.
+#[derive(Clone, Debug)]
+pub struct SatSummary {
+    pub sat: usize,
+    pub tasks: usize,
+    pub reused: usize,
+    pub busy_s: f64,
+    pub cpu_occupancy: f64,
+    pub collab_requests: usize,
+    pub times_source: usize,
+    pub scrt_len: usize,
+    pub evictions: u64,
+}
+
+/// Per-task log entry.
+#[derive(Clone, Debug)]
+pub struct TaskLog {
+    pub task_id: usize,
+    pub sat: usize,
+    pub arrival: f64,
+    pub start: f64,
+    pub completion: f64,
+    pub reused: bool,
+    pub correct: bool,
+    pub ssim: Option<f32>,
+    pub scene: u32,
+    /// Scene of the record that served this task, when reused.
+    pub reused_from_scene: Option<u32>,
+    /// Satellite that originally computed the serving record.
+    pub reused_from_sat: Option<usize>,
+}
+
+impl TaskLog {
+    pub fn latency(&self) -> f64 {
+        self.completion - self.arrival
+    }
+}
+
+/// Full report of one scenario run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub scenario: Scenario,
+    pub n: usize,
+    /// Criterion 1 — task completion time (seconds): the paper's eq. (9)
+    /// objective ς = α·Ψ + χ, i.e. total communication time plus total
+    /// computation time across the network. (This is the only reading under
+    /// which the paper's "SRS Priority exceeds w/o CR by 41%" is possible —
+    /// a wall-clock makespan cannot exceed w/o CR when reuse only removes
+    /// work; see DESIGN.md.)
+    pub completion_time: f64,
+    /// Total on-board computation time χ (eq. 8), seconds.
+    pub compute_seconds: f64,
+    /// Total ISL communication time Ψ (eq. 5), seconds.
+    pub comm_seconds: f64,
+    /// Virtual wall-clock until the last task completes (diagnostic).
+    pub makespan: f64,
+    /// Criterion 2 — average proportion of reused tasks.
+    pub reuse_rate: f64,
+    /// Criterion 3 — average per-satellite CPU occupancy.
+    pub cpu_occupancy: f64,
+    /// Criterion 4 — correctly reused / reused (1.0 when nothing reused).
+    pub reuse_accuracy: f64,
+    /// Criterion 5 — total bytes crossing ISLs, in MB.
+    pub data_transfer_mb: f64,
+    pub total_tasks: usize,
+    pub reused_tasks: usize,
+    /// Reuses where the serving record came from a *different* scene.
+    pub cross_scene_reuses: usize,
+    /// Reuses served by a record another satellite computed (collaboration
+    /// actually paying off).
+    pub foreign_reuses: usize,
+    /// Incorrect reuses split by provenance (calibration diagnostics).
+    pub errors_same_scene: usize,
+    pub errors_cross_scene: usize,
+    pub collab_events: usize,
+    pub expanded_events: usize,
+    pub aborted_collabs: usize,
+    pub broadcast_records: usize,
+    pub mean_latency: f64,
+    pub p95_latency: f64,
+    pub per_satellite: Vec<SatSummary>,
+    pub tasks: Vec<TaskLog>,
+    /// Wall-clock seconds the simulation itself took (perf accounting).
+    pub wallclock_s: f64,
+}
+
+impl RunReport {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<12} n={}  T={:>8.2}s  rr={:.3}  cpu={:.3}  acc={:.4}  xfer={:>10.2}MB  collabs={} (+{} expanded, {} aborted)",
+            self.scenario.label(),
+            self.n,
+            self.completion_time,
+            self.reuse_rate,
+            self.cpu_occupancy,
+            self.reuse_accuracy,
+            self.data_transfer_mb,
+            self.collab_events,
+            self.expanded_events,
+            self.aborted_collabs,
+        )
+    }
+
+    /// Serialize to JSON (experiment artifacts).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::str(self.scenario.label())),
+            ("n", Json::num(self.n as f64)),
+            ("completion_time_s", Json::num(self.completion_time)),
+            ("compute_seconds", Json::num(self.compute_seconds)),
+            ("comm_seconds", Json::num(self.comm_seconds)),
+            ("makespan_s", Json::num(self.makespan)),
+            ("cross_scene_reuses", Json::num(self.cross_scene_reuses as f64)),
+            ("foreign_reuses", Json::num(self.foreign_reuses as f64)),
+            ("errors_same_scene", Json::num(self.errors_same_scene as f64)),
+            ("errors_cross_scene", Json::num(self.errors_cross_scene as f64)),
+            ("reuse_rate", Json::num(self.reuse_rate)),
+            ("cpu_occupancy", Json::num(self.cpu_occupancy)),
+            ("reuse_accuracy", Json::num(self.reuse_accuracy)),
+            ("data_transfer_mb", Json::num(self.data_transfer_mb)),
+            ("total_tasks", Json::num(self.total_tasks as f64)),
+            ("reused_tasks", Json::num(self.reused_tasks as f64)),
+            ("collab_events", Json::num(self.collab_events as f64)),
+            ("expanded_events", Json::num(self.expanded_events as f64)),
+            ("aborted_collabs", Json::num(self.aborted_collabs as f64)),
+            ("broadcast_records", Json::num(self.broadcast_records as f64)),
+            ("mean_latency_s", Json::num(self.mean_latency)),
+            ("p95_latency_s", Json::num(self.p95_latency)),
+            ("wallclock_s", Json::num(self.wallclock_s)),
+        ])
+    }
+}
+
+/// Build the aggregate numbers from raw logs; shared by the simulator.
+#[allow(clippy::too_many_arguments)]
+pub fn aggregate(
+    scenario: Scenario,
+    n: usize,
+    tasks: Vec<TaskLog>,
+    per_satellite: Vec<SatSummary>,
+    alpha: f64,
+    comm_seconds: f64,
+    data_transfer_bytes: f64,
+    collab_events: usize,
+    expanded_events: usize,
+    aborted_collabs: usize,
+    broadcast_records: usize,
+    wallclock_s: f64,
+) -> RunReport {
+    let makespan = tasks.iter().map(|t| t.completion).fold(0.0, f64::max);
+    let compute_seconds: f64 = tasks.iter().map(|t| t.completion - t.start).sum();
+    let completion_time = alpha * comm_seconds + compute_seconds;
+    let total = tasks.len();
+    let reused = tasks.iter().filter(|t| t.reused).count();
+    let correct = tasks.iter().filter(|t| t.reused && t.correct).count();
+    let cross_scene_reuses = tasks
+        .iter()
+        .filter(|t| t.reused && t.reused_from_scene != Some(t.scene))
+        .count();
+    let errors_cross_scene = tasks
+        .iter()
+        .filter(|t| t.reused && !t.correct && t.reused_from_scene != Some(t.scene))
+        .count();
+    let errors_same_scene = tasks
+        .iter()
+        .filter(|t| t.reused && !t.correct && t.reused_from_scene == Some(t.scene))
+        .count();
+    let foreign_reuses = tasks
+        .iter()
+        .filter(|t| t.reused && t.reused_from_sat.map_or(false, |s| s != t.sat))
+        .count();
+    let latencies: Vec<f64> = tasks.iter().map(|t| t.latency()).collect();
+    let occupancies: Vec<f64> = per_satellite
+        .iter()
+        .filter(|s| s.tasks > 0)
+        .map(|s| s.cpu_occupancy)
+        .collect();
+    RunReport {
+        scenario,
+        n,
+        completion_time,
+        compute_seconds,
+        comm_seconds,
+        makespan,
+        reuse_rate: if total == 0 {
+            0.0
+        } else {
+            reused as f64 / total as f64
+        },
+        cpu_occupancy: stats::mean(&occupancies),
+        reuse_accuracy: if reused == 0 {
+            1.0
+        } else {
+            correct as f64 / reused as f64
+        },
+        data_transfer_mb: data_transfer_bytes / 1e6,
+        total_tasks: total,
+        reused_tasks: reused,
+        cross_scene_reuses,
+        foreign_reuses,
+        errors_same_scene,
+        errors_cross_scene,
+        collab_events,
+        expanded_events,
+        aborted_collabs,
+        broadcast_records,
+        mean_latency: stats::mean(&latencies),
+        p95_latency: stats::percentile(&latencies, 95.0),
+        per_satellite,
+        tasks,
+        wallclock_s,
+    }
+}
+
+/// Render a paper-style markdown table: rows = network scale, columns =
+/// scenarios, cell = `extract(report)`.
+pub fn scale_scenario_table(
+    title: &str,
+    reports: &[RunReport],
+    extract: impl Fn(&RunReport) -> String,
+) -> String {
+    let mut scales: Vec<usize> = reports.iter().map(|r| r.n).collect();
+    scales.sort_unstable();
+    scales.dedup();
+    let mut out = format!("### {title}\n\n| NW Scale |");
+    for s in Scenario::ALL {
+        out.push_str(&format!(" {} |", s.label()));
+    }
+    out.push('\n');
+    out.push_str("|---|");
+    for _ in Scenario::ALL {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for n in scales {
+        out.push_str(&format!("| {n}x{n} |"));
+        for s in Scenario::ALL {
+            let cell = reports
+                .iter()
+                .find(|r| r.n == n && r.scenario == s)
+                .map(&extract)
+                .unwrap_or_else(|| "—".to_string());
+            out.push_str(&format!(" {cell} |"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render a sweep series (Figs. 4 & 5): one row per x-value.
+pub fn sweep_table(
+    title: &str,
+    x_label: &str,
+    series_labels: &[&str],
+    rows: &[(f64, Vec<f64>)],
+) -> String {
+    let mut out = format!("### {title}\n\n| {x_label} |");
+    for l in series_labels {
+        out.push_str(&format!(" {l} |"));
+    }
+    out.push_str("\n|---|");
+    for _ in series_labels {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for (x, ys) in rows {
+        out.push_str(&format!("| {x} |"));
+        for y in ys {
+            out.push_str(&format!(" {y:.2} |"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// CSV emission for downstream plotting.
+pub fn reports_to_csv(reports: &[RunReport]) -> String {
+    let mut out = String::from(
+        "scenario,n,completion_time_s,reuse_rate,cpu_occupancy,reuse_accuracy,data_transfer_mb,collab_events,mean_latency_s,p95_latency_s\n",
+    );
+    for r in reports {
+        out.push_str(&format!(
+            "{},{},{:.4},{:.4},{:.4},{:.4},{:.3},{},{:.4},{:.4}\n",
+            r.scenario.label().replace(',', ";"),
+            r.n,
+            r.completion_time,
+            r.reuse_rate,
+            r.cpu_occupancy,
+            r.reuse_accuracy,
+            r.data_transfer_mb,
+            r.collab_events,
+            r.mean_latency,
+            r.p95_latency,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_task(id: usize, reused: bool, correct: bool, completion: f64) -> TaskLog {
+        TaskLog {
+            task_id: id,
+            sat: 0,
+            arrival: 0.0,
+            start: 0.0,
+            completion,
+            reused,
+            correct,
+            ssim: None,
+            scene: 0,
+            reused_from_scene: if reused { Some(1) } else { None },
+            reused_from_sat: if reused { Some(0) } else { None },
+        }
+    }
+
+    fn mk_sat(tasks: usize, occ: f64) -> SatSummary {
+        SatSummary {
+            sat: 0,
+            tasks,
+            reused: 0,
+            busy_s: 0.0,
+            cpu_occupancy: occ,
+            collab_requests: 0,
+            times_source: 0,
+            scrt_len: 0,
+            evictions: 0,
+        }
+    }
+
+    #[test]
+    fn aggregate_computes_criteria() {
+        let tasks = vec![
+            mk_task(0, false, true, 1.0),
+            mk_task(1, true, true, 2.0),
+            mk_task(2, true, false, 5.0),
+            mk_task(3, false, true, 4.0),
+        ];
+        let sats = vec![mk_sat(4, 0.5), mk_sat(0, 0.0)];
+        let r = aggregate(
+            Scenario::Sccr,
+            5,
+            tasks,
+            sats,
+            1.0,
+            2.5,
+            20.5e6,
+            3,
+            1,
+            0,
+            33,
+            0.1,
+        );
+        assert_eq!(r.makespan, 5.0);
+        // sigma = alpha*comm + total service; service = completion - start
+        assert!((r.completion_time - (2.5 + 12.0)).abs() < 1e-9);
+        assert_eq!(r.reuse_rate, 0.5);
+        assert_eq!(r.reuse_accuracy, 0.5);
+        assert_eq!(r.cpu_occupancy, 0.5, "idle satellites excluded");
+        assert!((r.data_transfer_mb - 20.5).abs() < 1e-9);
+        assert_eq!(r.collab_events, 3);
+    }
+
+    #[test]
+    fn accuracy_is_one_without_reuse() {
+        let tasks = vec![mk_task(0, false, true, 1.0)];
+        let r = aggregate(
+            Scenario::WithoutCr,
+            5,
+            tasks,
+            vec![mk_sat(1, 0.9)],
+            1.0,
+            0.0,
+            0.0,
+            0,
+            0,
+            0,
+            0,
+            0.0,
+        );
+        assert_eq!(r.reuse_accuracy, 1.0);
+        assert_eq!(r.reuse_rate, 0.0);
+    }
+
+    #[test]
+    fn table_renders_all_scenarios() {
+        let tasks = vec![mk_task(0, false, true, 1.0)];
+        let r = aggregate(
+            Scenario::Slcr,
+            5,
+            tasks,
+            vec![mk_sat(1, 0.4)],
+            1.0,
+            0.0,
+            0.0,
+            0,
+            0,
+            0,
+            0,
+            0.0,
+        );
+        let table = scale_scenario_table("Reuse accuracy", &[r], |r| {
+            format!("{:.4}", r.reuse_accuracy)
+        });
+        assert!(table.contains("| 5x5 |"));
+        assert!(table.contains("SLCR"));
+        assert!(table.contains("SCCR-INIT"));
+        assert!(table.contains("—"), "missing scenarios show a dash");
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let tasks = vec![mk_task(0, true, true, 2.0)];
+        let r = aggregate(
+            Scenario::Sccr,
+            7,
+            tasks,
+            vec![mk_sat(1, 0.2)],
+            1.0,
+            0.1,
+            1e6,
+            1,
+            0,
+            0,
+            5,
+            0.0,
+        );
+        let csv = reports_to_csv(&[r]);
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.lines().nth(1).unwrap().starts_with("SCCR,7,"));
+    }
+
+    #[test]
+    fn sweep_table_shape() {
+        let t = sweep_table(
+            "Impact of tau",
+            "tau",
+            &["SCCR-INIT", "SCCR"],
+            &[(1.0, vec![10.0, 9.0]), (11.0, vec![8.0, 7.0])],
+        );
+        assert!(t.contains("| 11 |"));
+        assert!(t.lines().count() >= 5);
+    }
+}

@@ -1,0 +1,339 @@
+//! ISL communication model — eqs. (1)–(5) of the paper.
+//!
+//! * eq. (3): free-space path loss `L = (4π f_c d / c)²`
+//! * eq. (4): noise PSD `N₀ = k_B T B_s`
+//! * eq. (2): `SNR = Pow_t G_tx G_rx / (N₀ L)`
+//! * eq. (1): `r = B_s log₂(1 + SNR)`
+//! * eq. (5): record-sharing cost aggregated per collaboration event
+//!
+//! Satellites only talk to grid neighbours (Sec. III-B), so record
+//! broadcasts propagate hop-by-hop; the data-transfer volume criterion
+//! counts every byte crossing every link.
+
+use crate::config::{CommConfig, NetworkConfig};
+use crate::network::topology::GridTopology;
+use crate::workload::SatId;
+
+/// Boltzmann constant, J/K.
+pub const BOLTZMANN: f64 = 1.380_649e-23;
+/// Speed of light, m/s.
+pub const SPEED_OF_LIGHT: f64 = 2.997_924_58e8;
+
+/// A planned spanning-tree broadcast (see [`CommModel::plan_broadcast`]).
+#[derive(Clone, Debug)]
+pub struct BroadcastPlan {
+    /// Total bytes crossing ISLs (records × tree edges × record size).
+    pub bytes: f64,
+    /// Total link airtime Ψ contribution, seconds.
+    pub airtime_s: f64,
+    /// Slowest single-hop record transmission time, seconds.
+    pub bottleneck_s: f64,
+    /// `(member, tree depth)` for every receiving area member.
+    pub arrivals: Vec<(crate::workload::SatId, usize)>,
+}
+
+impl BroadcastPlan {
+    /// Virtual arrival offset of record `k` at a member of depth `h`.
+    pub fn arrival_offset(&self, k: usize, depth: usize) -> f64 {
+        (k + depth) as f64 * self.bottleneck_s
+    }
+
+    /// When the last record reaches the deepest member.
+    pub fn completion_offset(&self, records: usize) -> f64 {
+        let max_depth = self.arrivals.iter().map(|&(_, d)| d).max().unwrap_or(0);
+        self.arrival_offset(records.saturating_sub(1), max_depth)
+    }
+}
+
+/// Evaluated ISL link budget.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkBudget {
+    pub distance_m: f64,
+    pub path_loss: f64,
+    pub noise_w: f64,
+    pub snr: f64,
+    /// Achievable data rate, bits/s (eq. 1).
+    pub rate_bps: f64,
+}
+
+/// The communication model over a grid topology.
+#[derive(Clone, Debug)]
+pub struct CommModel {
+    cfg: CommConfig,
+    intra_rate_bps: f64,
+    inter_rate_bps: f64,
+}
+
+impl CommModel {
+    pub fn new(net: &NetworkConfig, cfg: &CommConfig) -> Self {
+        let intra = Self::link_budget(cfg, net.intra_plane_distance_m);
+        let inter = Self::link_budget(cfg, net.inter_plane_distance_m);
+        CommModel {
+            cfg: cfg.clone(),
+            intra_rate_bps: intra.rate_bps,
+            inter_rate_bps: inter.rate_bps,
+        }
+    }
+
+    /// Full link-budget evaluation at a distance (eqs. 1–4).
+    pub fn link_budget(cfg: &CommConfig, distance_m: f64) -> LinkBudget {
+        let gain = 10f64.powf(cfg.antenna_gain_dbi / 10.0);
+        let path_loss = (4.0 * std::f64::consts::PI * cfg.carrier_hz * distance_m
+            / SPEED_OF_LIGHT)
+            .powi(2);
+        let noise_w = BOLTZMANN * cfg.noise_temp_k * cfg.bandwidth_hz;
+        let snr = cfg.tx_power_w * gain * gain / (noise_w * path_loss);
+        let rate_bps = cfg.bandwidth_hz * (1.0 + snr).log2();
+        LinkBudget {
+            distance_m,
+            path_loss,
+            noise_w,
+            snr,
+            rate_bps,
+        }
+    }
+
+    /// Data rate of the direct link between two *adjacent* satellites.
+    pub fn link_rate_bps(&self, topo: &GridTopology, a: SatId, b: SatId) -> f64 {
+        debug_assert!(topo.adjacent(a, b), "link_rate on non-adjacent pair");
+        let (ao, _) = topo.coords(a);
+        let (bo, _) = topo.coords(b);
+        if ao == bo {
+            self.intra_rate_bps // same orbital plane
+        } else {
+            self.inter_rate_bps
+        }
+    }
+
+    /// Bytes of one shared record (`D_t + R_t`).
+    pub fn record_bytes(&self) -> f64 {
+        self.cfg.record_input_bytes + self.cfg.record_output_bytes
+    }
+
+    /// Seconds to push `bytes` over one intra-plane hop.
+    pub fn hop_seconds(&self, bytes: f64) -> f64 {
+        bytes * 8.0 / self.intra_rate_bps
+    }
+
+    /// Seconds to deliver `records` records from `src` to `dst` hop-by-hop
+    /// along a grid shortest path (links traversed sequentially, eq. 5).
+    pub fn delivery_seconds(
+        &self,
+        topo: &GridTopology,
+        src: SatId,
+        dst: SatId,
+        records: usize,
+    ) -> f64 {
+        if src == dst {
+            return 0.0;
+        }
+        let payload = records as f64 * self.record_bytes();
+        let (hops_intra, hops_inter) = self.split_hops(topo, src, dst);
+        payload * 8.0
+            * (hops_intra as f64 / self.intra_rate_bps
+                + hops_inter as f64 / self.inter_rate_bps)
+    }
+
+    /// Plan a broadcast as a **spanning-tree flood** over the collaboration
+    /// area: each record crosses each tree edge exactly once (intermediate
+    /// satellites relay and keep a copy — they are area members), so the
+    /// transferred volume is `records × (|area| − 1) × record_bytes`. This
+    /// is how constellation multicast actually works and is the only
+    /// accounting consistent with the paper's Table III volumes.
+    ///
+    /// Returns `(total_bytes, airtime_seconds, arrivals)` where `arrivals`
+    /// gives each member's tree depth (records pipeline hop-by-hop: record
+    /// `k` reaches depth `h` at `(k + h) · t_bottleneck`).
+    pub fn plan_broadcast(
+        &self,
+        topo: &GridTopology,
+        src: SatId,
+        area: &[SatId],
+        records: usize,
+    ) -> BroadcastPlan {
+        let t_intra = self.record_bytes() * 8.0 / self.intra_rate_bps;
+        let t_inter = self.record_bytes() * 8.0 / self.inter_rate_bps;
+        // BFS tree over area members: parent = an area neighbour one grid
+        // hop closer to the source (grid Manhattan metric, which is exact
+        // for rectangular areas).
+        let mut arrivals = Vec::with_capacity(area.len());
+        let mut edge_airtime = 0.0;
+        let mut bottleneck: f64 = 0.0;
+        for &m in area {
+            if m == src {
+                continue;
+            }
+            let depth = topo.hops(src, m);
+            // edge into `m`: from the neighbour one hop closer; classify by
+            // whether the last hop crosses planes. Walk: reduce the larger
+            // coordinate difference first; the final hop type depends on
+            // which difference remains.
+            let (so, ss) = topo.coords(src);
+            let (mo, ms) = topo.coords(m);
+            let last_hop_inter = if ms != ss { false } else { mo != so };
+            let t_edge = if last_hop_inter { t_inter } else { t_intra };
+            edge_airtime += t_edge * records as f64;
+            bottleneck = bottleneck.max(t_edge);
+            arrivals.push((m, depth));
+        }
+        BroadcastPlan {
+            bytes: records as f64
+                * self.record_bytes()
+                * arrivals.len() as f64,
+            airtime_s: edge_airtime,
+            bottleneck_s: bottleneck,
+            arrivals,
+        }
+    }
+
+    /// Arrival time offset of the `k`-th record of a streamed broadcast at
+    /// `dst` (store-and-forward pipelining): the first record takes the full
+    /// path time; each subsequent record lands one bottleneck-hop
+    /// transmission later.
+    pub fn streamed_arrival_seconds(
+        &self,
+        topo: &GridTopology,
+        src: SatId,
+        dst: SatId,
+        k: usize,
+    ) -> f64 {
+        if src == dst {
+            return 0.0;
+        }
+        let (hops_intra, hops_inter) = self.split_hops(topo, src, dst);
+        let path = self.delivery_seconds(topo, src, dst, 1);
+        let per_hop_intra = self.record_bytes() * 8.0 / self.intra_rate_bps;
+        let per_hop_inter = self.record_bytes() * 8.0 / self.inter_rate_bps;
+        let bottleneck = match (hops_intra > 0, hops_inter > 0) {
+            (true, true) => per_hop_intra.max(per_hop_inter),
+            (true, false) => per_hop_intra,
+            _ => per_hop_inter,
+        };
+        path + k as f64 * bottleneck
+    }
+
+    /// Cost of delivering `records` records from `src` to every *other*
+    /// member of `area`, hop-by-hop along grid shortest paths.
+    ///
+    /// Returns `(total_bytes_transferred, completion_seconds)`:
+    /// * bytes count every link crossing (a 2-hop delivery moves the
+    ///   payload twice) — this is what Table III accumulates;
+    /// * completion time is the slowest receiver's path time, links
+    ///   traversed sequentially per eq. (5) (`τ · (D_t + R_t) / r`).
+    pub fn broadcast_cost(
+        &self,
+        topo: &GridTopology,
+        src: SatId,
+        area: &[SatId],
+        records: usize,
+    ) -> (f64, f64) {
+        let payload = records as f64 * self.record_bytes();
+        let mut total_bytes = 0.0;
+        let mut worst_seconds: f64 = 0.0;
+        for &dst in area {
+            if dst == src {
+                continue;
+            }
+            let (hops_intra, hops_inter) = self.split_hops(topo, src, dst);
+            let hops = hops_intra + hops_inter;
+            total_bytes += payload * hops as f64;
+            worst_seconds =
+                worst_seconds.max(self.delivery_seconds(topo, src, dst, records));
+        }
+        (total_bytes, worst_seconds)
+    }
+
+    /// Decompose the grid shortest path into intra-/inter-plane hops.
+    fn split_hops(&self, topo: &GridTopology, a: SatId, b: SatId) -> (usize, usize) {
+        let (ao, as_) = topo.coords(a);
+        let (bo, bs) = topo.coords(b);
+        (as_.abs_diff(bs), ao.abs_diff(bo))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn model() -> (GridTopology, CommModel) {
+        let cfg = SimConfig::paper_default(5);
+        (
+            GridTopology::new(5),
+            CommModel::new(&cfg.network, &cfg.comm),
+        )
+    }
+
+    #[test]
+    fn link_budget_physics_sane() {
+        let cfg = SimConfig::paper_default(5);
+        let lb = CommModel::link_budget(&cfg.comm, 1.1e6);
+        // 26 GHz over 1100 km: FSPL ≈ 182 dB
+        let fspl_db = 10.0 * lb.path_loss.log10();
+        assert!((180.0..185.0).contains(&fspl_db), "FSPL {fspl_db} dB");
+        assert!(lb.snr > 1.0, "link must close: snr {}", lb.snr);
+        // rate must be in the tens-to-hundreds of Mbps for a 20 MHz channel
+        assert!(
+            (2e7..4e8).contains(&lb.rate_bps),
+            "rate {} bps",
+            lb.rate_bps
+        );
+    }
+
+    #[test]
+    fn shorter_link_is_faster() {
+        let cfg = SimConfig::paper_default(5);
+        let near = CommModel::link_budget(&cfg.comm, 0.8e6);
+        let far = CommModel::link_budget(&cfg.comm, 1.1e6);
+        assert!(near.rate_bps > far.rate_bps);
+    }
+
+    #[test]
+    fn record_bytes_matches_uc_merced_scaling() {
+        let (_, m) = model();
+        // 12817 MB / 625 ≈ 20.5 MB
+        assert!((m.record_bytes() - 20.508e6).abs() < 0.1e6);
+    }
+
+    #[test]
+    fn broadcast_to_adjacent_one_hop() {
+        let (topo, m) = model();
+        let src = topo.sat_at(2, 2);
+        let dst = topo.sat_at(2, 3);
+        let (bytes, secs) = m.broadcast_cost(&topo, src, &[src, dst], 1);
+        assert!((bytes - m.record_bytes()).abs() < 1.0);
+        assert!(secs > 0.0);
+    }
+
+    #[test]
+    fn broadcast_bytes_scale_with_hops_and_records() {
+        let (topo, m) = model();
+        let src = topo.sat_at(0, 0);
+        let far = topo.sat_at(2, 2); // 4 hops
+        let (b1, _) = m.broadcast_cost(&topo, src, &[src, far], 1);
+        assert!((b1 - 4.0 * m.record_bytes()).abs() < 1.0);
+        let (b3, _) = m.broadcast_cost(&topo, src, &[src, far], 3);
+        assert!((b3 - 3.0 * b1).abs() < 1.0);
+    }
+
+    #[test]
+    fn broadcast_area_cost_superset_monotone() {
+        let (topo, m) = model();
+        let src = topo.sat_at(2, 2);
+        let small = topo.area(src, 1);
+        let large = topo.area(src, 2);
+        let (bs, ts) = m.broadcast_cost(&topo, src, &small, 5);
+        let (bl, tl) = m.broadcast_cost(&topo, src, &large, 5);
+        assert!(bl > bs);
+        assert!(tl >= ts);
+    }
+
+    #[test]
+    fn src_not_counted_as_receiver() {
+        let (topo, m) = model();
+        let src = topo.sat_at(1, 1);
+        let (bytes, secs) = m.broadcast_cost(&topo, src, &[src], 7);
+        assert_eq!(bytes, 0.0);
+        assert_eq!(secs, 0.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Constellation substrate: grid topology and the ISL communication model.
+
+pub mod comm;
+pub mod topology;
+
+pub use comm::CommModel;
+pub use topology::GridTopology;

@@ -1,0 +1,221 @@
+//! N×N constellation grid (Fig. 1 of the paper).
+//!
+//! Row = orbital plane, column = slot along the plane. Satellite ids are
+//! row-major (`orbit * n + slot`). ISLs connect the four grid neighbours
+//! (two intra-plane, two inter-plane); no wrap-around — the grid is a
+//! window onto a larger constellation, exactly like the paper's 5×5 / 7×7 /
+//! 9×9 scenes. Collaboration areas (Alg. 2) are Chebyshev neighbourhoods.
+
+use crate::workload::SatId;
+
+/// The constellation grid.
+#[derive(Clone, Debug)]
+pub struct GridTopology {
+    n: usize,
+}
+
+impl GridTopology {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 2, "grid needs n >= 2");
+        GridTopology { n }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Total number of satellites.
+    pub fn len(&self) -> usize {
+        self.n * self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// (orbit, slot) of a satellite id.
+    #[inline]
+    pub fn coords(&self, sat: SatId) -> (usize, usize) {
+        debug_assert!(sat < self.len());
+        (sat / self.n, sat % self.n)
+    }
+
+    /// Satellite id at (orbit, slot).
+    #[inline]
+    pub fn sat_at(&self, orbit: usize, slot: usize) -> SatId {
+        debug_assert!(orbit < self.n && slot < self.n);
+        orbit * self.n + slot
+    }
+
+    /// The 2–4 ISL neighbours of a satellite.
+    pub fn neighbours(&self, sat: SatId) -> Vec<SatId> {
+        let (o, s) = self.coords(sat);
+        let mut out = Vec::with_capacity(4);
+        if o > 0 {
+            out.push(self.sat_at(o - 1, s));
+        }
+        if o + 1 < self.n {
+            out.push(self.sat_at(o + 1, s));
+        }
+        if s > 0 {
+            out.push(self.sat_at(o, s - 1));
+        }
+        if s + 1 < self.n {
+            out.push(self.sat_at(o, s + 1));
+        }
+        out
+    }
+
+    /// Is the link (a, b) a single-hop ISL?
+    pub fn adjacent(&self, a: SatId, b: SatId) -> bool {
+        let (ao, as_) = self.coords(a);
+        let (bo, bs) = self.coords(b);
+        (ao == bo && as_.abs_diff(bs) == 1) || (as_ == bs && ao.abs_diff(bo) == 1)
+    }
+
+    /// Manhattan hop count between two satellites (ISL routing distance —
+    /// grid shortest path since only grid links exist).
+    pub fn hops(&self, a: SatId, b: SatId) -> usize {
+        let (ao, as_) = self.coords(a);
+        let (bo, bs) = self.coords(b);
+        ao.abs_diff(bo) + as_.abs_diff(bs)
+    }
+
+    /// Chebyshev distance (collaboration areas are square rings).
+    pub fn chebyshev(&self, a: SatId, b: SatId) -> usize {
+        let (ao, as_) = self.coords(a);
+        let (bo, bs) = self.coords(b);
+        ao.abs_diff(bo).max(as_.abs_diff(bs))
+    }
+
+    /// Collaboration area of radius `r` around `center`: all satellites with
+    /// Chebyshev distance ≤ r, clamped at the grid boundary.
+    ///
+    /// * `r = 1` → the paper's **initial** area (center + surrounding);
+    /// * `r = 2` → the **expanded** area (surrounding of all members).
+    pub fn area(&self, center: SatId, r: usize) -> Vec<SatId> {
+        let (o, s) = self.coords(center);
+        let o_lo = o.saturating_sub(r);
+        let o_hi = (o + r).min(self.n - 1);
+        let s_lo = s.saturating_sub(r);
+        let s_hi = (s + r).min(self.n - 1);
+        let mut out = Vec::with_capacity((o_hi - o_lo + 1) * (s_hi - s_lo + 1));
+        for oo in o_lo..=o_hi {
+            for ss in s_lo..=s_hi {
+                out.push(self.sat_at(oo, ss));
+            }
+        }
+        out
+    }
+
+    /// Expand an existing area by one ring: the union of radius-1 areas of
+    /// every member (`GetExpandedCoArea` in Alg. 2).
+    pub fn expand_area(&self, area: &[SatId]) -> Vec<SatId> {
+        let mut mask = vec![false; self.len()];
+        for &sat in area {
+            for member in self.area(sat, 1) {
+                mask[member] = true;
+            }
+        }
+        (0..self.len()).filter(|&i| mask[i]).collect()
+    }
+
+    /// All satellite ids.
+    pub fn all(&self) -> impl Iterator<Item = SatId> {
+        0..self.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coords_roundtrip() {
+        let g = GridTopology::new(5);
+        for sat in g.all() {
+            let (o, s) = g.coords(sat);
+            assert_eq!(g.sat_at(o, s), sat);
+        }
+    }
+
+    #[test]
+    fn corner_has_two_neighbours_interior_four() {
+        let g = GridTopology::new(5);
+        assert_eq!(g.neighbours(0).len(), 2);
+        assert_eq!(g.neighbours(g.sat_at(2, 2)).len(), 4);
+        assert_eq!(g.neighbours(g.sat_at(0, 2)).len(), 3);
+    }
+
+    #[test]
+    fn adjacency_symmetric_and_matches_hops() {
+        let g = GridTopology::new(4);
+        for a in g.all() {
+            for b in g.all() {
+                assert_eq!(g.adjacent(a, b), g.adjacent(b, a));
+                assert_eq!(g.adjacent(a, b), g.hops(a, b) == 1);
+            }
+        }
+    }
+
+    #[test]
+    fn area_radius1_center_is_3x3() {
+        let g = GridTopology::new(5);
+        let area = g.area(g.sat_at(2, 2), 1);
+        assert_eq!(area.len(), 9);
+        assert!(area.contains(&g.sat_at(2, 2)));
+        assert!(area.contains(&g.sat_at(1, 1)));
+        assert!(!area.contains(&g.sat_at(0, 0)));
+    }
+
+    #[test]
+    fn area_clamps_at_boundary() {
+        let g = GridTopology::new(5);
+        assert_eq!(g.area(0, 1).len(), 4); // corner: 2x2
+        assert_eq!(g.area(g.sat_at(0, 2), 1).len(), 6); // edge: 2x3
+    }
+
+    #[test]
+    fn expand_area_equals_radius2_for_interior() {
+        let g = GridTopology::new(7);
+        let c = g.sat_at(3, 3);
+        let mut expanded = g.expand_area(&g.area(c, 1));
+        let mut radius2 = g.area(c, 2);
+        expanded.sort_unstable();
+        radius2.sort_unstable();
+        assert_eq!(expanded, radius2);
+    }
+
+    #[test]
+    fn expand_area_monotone() {
+        let g = GridTopology::new(5);
+        let initial = g.area(0, 1);
+        let expanded = g.expand_area(&initial);
+        assert!(expanded.len() > initial.len());
+        for sat in &initial {
+            assert!(expanded.contains(sat));
+        }
+    }
+
+    #[test]
+    fn hops_triangle_inequality() {
+        let g = GridTopology::new(5);
+        for a in g.all() {
+            for b in g.all() {
+                for c in g.all() {
+                    assert!(g.hops(a, b) + g.hops(b, c) >= g.hops(a, c));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chebyshev_le_hops() {
+        let g = GridTopology::new(6);
+        for a in g.all() {
+            for b in g.all() {
+                assert!(g.chebyshev(a, b) <= g.hops(a, b));
+            }
+        }
+    }
+}

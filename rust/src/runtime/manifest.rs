@@ -1,0 +1,269 @@
+//! `artifacts/manifest.json` model.
+//!
+//! The AOT pass (`python/compile/aot.py`) records, for every lowered entry
+//! point, the artifact file plus input/output shapes and dtypes, and a block
+//! of model constants the simulator needs (FLOPs, LSH geometry, ...).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Element type of a tensor boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    U32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "uint32" => Ok(DType::U32),
+            other => Err(Error::artifact(format!("unsupported dtype '{other}'"))),
+        }
+    }
+}
+
+/// Shape + dtype of one input or output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let shape = v
+            .at(&["shape"])?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(v.at(&["dtype"])?.as_str()?)?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT-lowered entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Constants the L2 model bakes in; the simulator must agree with them.
+#[derive(Clone, Debug)]
+pub struct ModelConstants {
+    pub raw_h: usize,
+    pub raw_w: usize,
+    pub pre_h: usize,
+    pub pre_w: usize,
+    pub channels: usize,
+    pub num_classes: usize,
+    pub p_l: usize,
+    pub p_k: usize,
+    pub num_buckets: usize,
+    pub feature_dim: usize,
+    pub batch: usize,
+    pub classifier_flops: u64,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+    pub constants: ModelConstants,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (split out for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let v = Json::parse(text)?;
+        if v.at(&["format"])?.as_str()? != "hlo-text" {
+            return Err(Error::artifact("manifest format is not hlo-text"));
+        }
+        let mut entries = BTreeMap::new();
+        for (name, ev) in v.at(&["entries"])?.as_obj()? {
+            let inputs = ev
+                .at(&["inputs"])?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = ev
+                .at(&["outputs"])?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    file: dir.join(ev.at(&["file"])?.as_str()?),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        let c = v.at(&["constants"])?;
+        let get = |k: &str| -> Result<usize> { c.at(&[k])?.as_usize() };
+        let constants = ModelConstants {
+            raw_h: get("raw_h")?,
+            raw_w: get("raw_w")?,
+            pre_h: get("pre_h")?,
+            pre_w: get("pre_w")?,
+            channels: get("channels")?,
+            num_classes: get("num_classes")?,
+            p_l: get("p_l")?,
+            p_k: get("p_k")?,
+            num_buckets: get("num_buckets")?,
+            feature_dim: get("feature_dim")?,
+            batch: get("batch")?,
+            classifier_flops: c.at(&["classifier_flops"])?.as_u64()?,
+        };
+        let m = Manifest {
+            dir,
+            entries,
+            constants,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Check the entries the runtime depends on exist with the right arity.
+    pub fn validate(&self) -> Result<()> {
+        for (name, n_in, n_out) in [
+            ("preprocess", 1, 2),
+            ("lsh_hash", 1, 2),
+            ("ssim_pair", 2, 1),
+            ("classifier", 1, 2),
+            ("classifier_batch", 1, 2),
+        ] {
+            let e = self.entries.get(name).ok_or_else(|| {
+                Error::artifact(format!("manifest missing entry '{name}'"))
+            })?;
+            if e.inputs.len() != n_in || e.outputs.len() != n_out {
+                return Err(Error::artifact(format!(
+                    "entry '{name}' arity mismatch: {}→{} (want {n_in}→{n_out})",
+                    e.inputs.len(),
+                    e.outputs.len()
+                )));
+            }
+        }
+        if self.constants.num_buckets != 1 << self.constants.p_k {
+            return Err(Error::artifact("num_buckets != 2^p_k"));
+        }
+        Ok(())
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| Error::artifact(format!("no artifact entry '{name}'")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> String {
+        r#"{
+  "format": "hlo-text",
+  "return_tuple": true,
+  "entries": {
+    "preprocess": {"file": "preprocess.hlo.txt",
+      "inputs": [{"shape": [64, 64, 3], "dtype": "float32"}],
+      "outputs": [{"shape": [32, 32, 3], "dtype": "float32"},
+                  {"shape": [32, 32], "dtype": "float32"}]},
+    "lsh_hash": {"file": "lsh_hash.hlo.txt",
+      "inputs": [{"shape": [32, 32, 3], "dtype": "float32"}],
+      "outputs": [{"shape": [], "dtype": "uint32"},
+                  {"shape": [2], "dtype": "float32"}]},
+    "ssim_pair": {"file": "ssim_pair.hlo.txt",
+      "inputs": [{"shape": [32, 32], "dtype": "float32"},
+                 {"shape": [32, 32], "dtype": "float32"}],
+      "outputs": [{"shape": [], "dtype": "float32"}]},
+    "classifier": {"file": "classifier.hlo.txt",
+      "inputs": [{"shape": [32, 32, 3], "dtype": "float32"}],
+      "outputs": [{"shape": [21], "dtype": "float32"},
+                  {"shape": [], "dtype": "uint32"}]},
+    "classifier_batch": {"file": "classifier_batch.hlo.txt",
+      "inputs": [{"shape": [32, 32, 32, 3], "dtype": "float32"}],
+      "outputs": [{"shape": [32, 21], "dtype": "float32"},
+                  {"shape": [32], "dtype": "uint32"}]}
+  },
+  "constants": {
+    "raw_h": 64, "raw_w": 64, "pre_h": 32, "pre_w": 32, "channels": 3,
+    "num_classes": 21, "p_l": 1, "p_k": 2, "num_buckets": 4,
+    "feature_dim": 3072, "batch": 32, "classifier_flops": 11460608,
+    "matmul_vmem_bytes": 196608
+  }
+}"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(&sample(), PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.constants.num_classes, 21);
+        assert_eq!(m.constants.p_k, 2);
+        assert_eq!(m.entry("ssim_pair").unwrap().inputs.len(), 2);
+        assert_eq!(
+            m.entry("preprocess").unwrap().file,
+            PathBuf::from("/tmp/a/preprocess.hlo.txt")
+        );
+        assert_eq!(m.entry("classifier").unwrap().outputs[0].shape, vec![21]);
+    }
+
+    #[test]
+    fn rejects_missing_entry() {
+        let text = sample().replace("\"ssim_pair\"", "\"ssim_other\"");
+        assert!(Manifest::parse(&text, PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_bucket_mismatch() {
+        let text = sample().replace("\"num_buckets\": 4", "\"num_buckets\": 8");
+        assert!(Manifest::parse(&text, PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        let text = sample().replace("uint32", "int64");
+        assert!(Manifest::parse(&text, PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn spec_element_count() {
+        let s = TensorSpec {
+            shape: vec![32, 32, 3],
+            dtype: DType::F32,
+        };
+        assert_eq!(s.element_count(), 3072);
+    }
+}

@@ -1,0 +1,202 @@
+//! PJRT runtime: load AOT artifacts and execute them from the Rust hot path.
+//!
+//! The interchange format is HLO **text** (`HloModuleProto::from_text_file`):
+//! jax ≥ 0.5 emits serialized protos with 64-bit instruction ids which the
+//! `xla` crate's xla_extension 0.5.1 rejects; the text parser reassigns ids
+//! and round-trips cleanly (see /opt/xla-example/README.md).
+//!
+//! [`Engine`] compiles each artifact once on first use and caches the loaded
+//! executable; every subsequent call is a buffer upload + execute.
+
+pub mod manifest;
+pub mod tensor;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+pub use manifest::{ArtifactEntry, DType, Manifest, ModelConstants, TensorSpec};
+pub use tensor::Tensor;
+
+/// Execution statistics (observability + perf accounting).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub executions: u64,
+}
+
+/// The PJRT execution engine: one CPU client + a compile-once cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory (reads `manifest.json`).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            executables: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn constants(&self) -> &ModelConstants {
+        &self.manifest.constants
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        *self.stats.borrow()
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for an entry.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.executables.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.manifest.entry(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&entry.file).map_err(|e| {
+            Error::artifact(format!(
+                "parse {} failed: {e} (re-run `make artifacts`)",
+                entry.file.display()
+            ))
+        })?;
+        let computation = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&computation)?;
+        self.executables.borrow_mut().insert(name.to_string(), exe);
+        self.stats.borrow_mut().compiles += 1;
+        Ok(())
+    }
+
+    /// Eagerly compile every artifact (useful to front-load latency).
+    pub fn warmup(&self) -> Result<()> {
+        let names: Vec<String> = self.manifest.entries.keys().cloned().collect();
+        for name in names {
+            self.ensure_compiled(&name)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an entry with host tensors; returns the decomposed out-tuple.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let entry = self.manifest.entry(name)?.clone();
+        if inputs.len() != entry.inputs.len() {
+            return Err(Error::artifact(format!(
+                "{name}: got {} inputs, want {}",
+                inputs.len(),
+                entry.inputs.len()
+            )));
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            if !t.matches(spec) {
+                return Err(Error::artifact(format!(
+                    "{name}: input {i} is {:?}/{:?}, want {:?}/{:?}",
+                    t.shape(),
+                    t.dtype(),
+                    spec.shape,
+                    spec.dtype
+                )));
+            }
+        }
+        self.ensure_compiled(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let execs = self.executables.borrow();
+        let exe = execs.get(name).expect("ensured above");
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        self.stats.borrow_mut().executions += 1;
+        // All artifacts are lowered with return_tuple=True.
+        let parts = result.to_tuple()?;
+        if parts.len() != entry.outputs.len() {
+            return Err(Error::artifact(format!(
+                "{name}: got {} outputs, want {}",
+                parts.len(),
+                entry.outputs.len()
+            )));
+        }
+        parts
+            .iter()
+            .zip(&entry.outputs)
+            .map(|(lit, spec)| Tensor::from_literal(lit, spec))
+            .collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Typed helpers for the five artifacts (the coordinator's call sites).
+    // ------------------------------------------------------------------
+
+    /// `preprocess`: raw `[raw_h, raw_w, 3]` (0..255) → `(pd, gray)`.
+    pub fn preprocess(&self, raw: &Tensor) -> Result<(Tensor, Tensor)> {
+        let mut out = self.execute("preprocess", std::slice::from_ref(raw))?;
+        let gray = out.pop().unwrap();
+        let pd = out.pop().unwrap();
+        Ok((pd, gray))
+    }
+
+    /// `lsh_hash`: pd → (bucket id, raw projections).
+    pub fn lsh_hash(&self, pd: &Tensor) -> Result<(u32, Vec<f32>)> {
+        let out = self.execute("lsh_hash", std::slice::from_ref(pd))?;
+        let bucket = out[0].scalar_u32()?;
+        let proj = out[1].as_f32()?.to_vec();
+        Ok((bucket, proj))
+    }
+
+    /// `ssim_pair`: two gray images → SSIM scalar.
+    pub fn ssim(&self, a: &Tensor, b: &Tensor) -> Result<f32> {
+        let out = self.execute("ssim_pair", &[a.clone(), b.clone()])?;
+        out[0].scalar_f32()
+    }
+
+    /// `classifier`: pd → (logits, label).
+    pub fn classify(&self, pd: &Tensor) -> Result<(Vec<f32>, u32)> {
+        let out = self.execute("classifier", std::slice::from_ref(pd))?;
+        Ok((out[0].as_f32()?.to_vec(), out[1].scalar_u32()?))
+    }
+
+    /// `classifier_batch`: `[batch, pre_h, pre_w, 3]` → labels for the batch.
+    /// Callers pad the final chunk; `valid` trims the returned labels.
+    pub fn classify_batch(&self, pds: &Tensor, valid: usize) -> Result<Vec<u32>> {
+        let out = self.execute("classifier_batch", std::slice::from_ref(pds))?;
+        let labels = out[1].as_u32()?;
+        if valid > labels.len() {
+            return Err(Error::artifact(format!(
+                "valid={valid} exceeds batch {}",
+                labels.len()
+            )));
+        }
+        Ok(labels[..valid].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need real artifacts live in rust/tests/runtime_it.rs
+    // (they require `make artifacts`); here we only cover pure logic.
+    use super::*;
+
+    #[test]
+    fn engine_missing_dir_errors() {
+        match Engine::new("/nonexistent-artifacts-dir") {
+            Ok(_) => panic!("engine must not open a missing directory"),
+            Err(err) => {
+                assert!(err.to_string().contains("make artifacts"), "{err}")
+            }
+        }
+    }
+}

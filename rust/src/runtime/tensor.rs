@@ -1,0 +1,154 @@
+//! Host-side tensors crossing the PJRT boundary.
+//!
+//! A deliberately small representation: contiguous row-major data plus a
+//! shape, convertible to/from [`xla::Literal`]. Only the two element types
+//! the artifacts use (f32, u32) are supported.
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{DType, TensorSpec};
+
+/// A host tensor (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    U32 { shape: Vec<usize>, data: Vec<u32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let want: usize = shape.iter().product();
+        if want != data.len() {
+            return Err(Error::artifact(format!(
+                "tensor shape {shape:?} wants {want} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(Tensor::F32 { shape, data })
+    }
+
+    pub fn u32(shape: Vec<usize>, data: Vec<u32>) -> Result<Self> {
+        let want: usize = shape.iter().product();
+        if want != data.len() {
+            return Err(Error::artifact(format!(
+                "tensor shape {shape:?} wants {want} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(Tensor::U32 { shape, data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::U32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::U32 { .. } => DType::U32,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    /// Borrow f32 data or error.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(Error::artifact("tensor is not f32")),
+        }
+    }
+
+    /// Borrow u32 data or error.
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match self {
+            Tensor::U32 { data, .. } => Ok(data),
+            _ => Err(Error::artifact("tensor is not u32")),
+        }
+    }
+
+    /// Scalar f32 accessor (rank-0 or single-element).
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            return Err(Error::artifact(format!(
+                "expected scalar, got {} elements",
+                d.len()
+            )));
+        }
+        Ok(d[0])
+    }
+
+    /// Scalar u32 accessor.
+    pub fn scalar_u32(&self) -> Result<u32> {
+        let d = self.as_u32()?;
+        if d.len() != 1 {
+            return Err(Error::artifact(format!(
+                "expected scalar, got {} elements",
+                d.len()
+            )));
+        }
+        Ok(d[0])
+    }
+
+    /// Does this tensor match a manifest boundary spec?
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        self.shape() == spec.shape.as_slice() && self.dtype() == spec.dtype
+    }
+
+    /// Convert to an [`xla::Literal`] with the right shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::U32 { data, .. } => xla::Literal::vec1(data),
+        };
+        // reshape handles rank-0 via an empty dims slice
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Convert from an [`xla::Literal`] using the manifest spec for shape.
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Self> {
+        match spec.dtype {
+            DType::F32 => Tensor::f32(spec.shape.clone(), lit.to_vec::<f32>()?),
+            DType::U32 => Tensor::u32(spec.shape.clone(), lit.to_vec::<u32>()?),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_validation() {
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::u32(vec![], vec![7]).is_ok()); // rank-0
+        assert!(Tensor::u32(vec![], vec![]).is_err());
+    }
+
+    #[test]
+    fn accessors() {
+        let t = Tensor::f32(vec![], vec![1.5]).unwrap();
+        assert_eq!(t.scalar_f32().unwrap(), 1.5);
+        assert!(t.scalar_u32().is_err());
+        let t = Tensor::u32(vec![2], vec![1, 2]).unwrap();
+        assert!(t.scalar_u32().is_err()); // two elements
+        assert_eq!(t.as_u32().unwrap(), &[1, 2]);
+    }
+
+    #[test]
+    fn spec_matching() {
+        let spec = TensorSpec {
+            shape: vec![2, 2],
+            dtype: DType::F32,
+        };
+        assert!(Tensor::f32(vec![2, 2], vec![0.0; 4]).unwrap().matches(&spec));
+        assert!(!Tensor::u32(vec![2, 2], vec![0; 4]).unwrap().matches(&spec));
+        assert!(!Tensor::f32(vec![4], vec![0.0; 4]).unwrap().matches(&spec));
+    }
+}

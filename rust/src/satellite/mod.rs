@@ -1,0 +1,159 @@
+//! Per-satellite server state: an M/M/1-style FIFO server on the virtual
+//! clock, plus the counters the SRS metric (eq. 11) reads.
+
+use crate::workload::SatId;
+
+/// Mutable state of one satellite during a simulation run.
+#[derive(Clone, Debug)]
+pub struct SatelliteState {
+    pub id: SatId,
+    /// Virtual time at which the on-board server frees up.
+    next_free: f64,
+    /// Accumulated service (busy) time.
+    busy_time: f64,
+    /// Completed tasks.
+    pub tasks_processed: usize,
+    /// Tasks served via computation reuse (local or collaborative).
+    pub tasks_reused: usize,
+    /// Of the reused tasks, how many matched the oracle label.
+    pub reused_correct: usize,
+    /// Completion time of the most recent task.
+    pub last_completion: f64,
+    /// Virtual time of the last collaboration request this satellite made.
+    pub last_collab_request: f64,
+    /// Collaboration requests issued.
+    pub collab_requests: usize,
+    /// Broadcasts served as the data-source satellite.
+    pub times_source: usize,
+}
+
+impl SatelliteState {
+    pub fn new(id: SatId) -> Self {
+        SatelliteState {
+            id,
+            next_free: 0.0,
+            busy_time: 0.0,
+            tasks_processed: 0,
+            tasks_reused: 0,
+            reused_correct: 0,
+            last_completion: 0.0,
+            last_collab_request: f64::NEG_INFINITY,
+            collab_requests: 0,
+            times_source: 0,
+        }
+    }
+
+    /// Serve a task arriving at `arrival` needing `service_s` seconds of
+    /// on-board compute. FIFO, single server. Returns `(start, completion)`.
+    pub fn serve(&mut self, arrival: f64, service_s: f64) -> (f64, f64) {
+        debug_assert!(service_s >= 0.0, "negative service time");
+        let start = arrival.max(self.next_free);
+        let completion = start + service_s;
+        self.next_free = completion;
+        self.busy_time += service_s;
+        self.tasks_processed += 1;
+        self.last_completion = completion;
+        (start, completion)
+    }
+
+    /// Delay the server (e.g. the satellite spends time relaying/receiving a
+    /// broadcast payload; counted as busy for occupancy purposes).
+    pub fn occupy_until(&mut self, until: f64) {
+        if until > self.next_free {
+            self.busy_time += until - self.next_free;
+            self.next_free = until;
+        }
+    }
+
+    pub fn next_free(&self) -> f64 {
+        self.next_free
+    }
+
+    pub fn busy_time(&self) -> f64 {
+        self.busy_time
+    }
+
+    /// Reuse rate `rr_S`: reused / processed (0 before the first task).
+    pub fn reuse_rate(&self) -> f64 {
+        if self.tasks_processed == 0 {
+            0.0
+        } else {
+            self.tasks_reused as f64 / self.tasks_processed as f64
+        }
+    }
+
+    /// CPU occupancy `C_S`: busy time over elapsed time (task receipt to
+    /// now), clamped to [0, 1].
+    pub fn cpu_occupancy(&self, now: f64) -> f64 {
+        if now <= 0.0 {
+            0.0
+        } else {
+            (self.busy_time / now).clamp(0.0, 1.0)
+        }
+    }
+
+    /// Accuracy over the reused tasks (1.0 when nothing was reused — the
+    /// paper reports `w/o CR` and `SLCR-never-matched` as accuracy 1).
+    pub fn reuse_accuracy(&self) -> f64 {
+        if self.tasks_reused == 0 {
+            1.0
+        } else {
+            self.reused_correct as f64 / self.tasks_reused as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_queueing() {
+        let mut s = SatelliteState::new(0);
+        let (st1, c1) = s.serve(0.0, 2.0);
+        assert_eq!((st1, c1), (0.0, 2.0));
+        // arrives while busy -> queues
+        let (st2, c2) = s.serve(1.0, 1.0);
+        assert_eq!((st2, c2), (2.0, 3.0));
+        // arrives after idle gap -> starts at arrival
+        let (st3, c3) = s.serve(10.0, 0.5);
+        assert_eq!((st3, c3), (10.0, 10.5));
+        assert_eq!(s.busy_time(), 3.5);
+        assert_eq!(s.tasks_processed, 3);
+    }
+
+    #[test]
+    fn occupancy_reflects_idle_time() {
+        let mut s = SatelliteState::new(0);
+        s.serve(0.0, 2.0);
+        assert!((s.cpu_occupancy(4.0) - 0.5).abs() < 1e-12);
+        assert_eq!(s.cpu_occupancy(0.0), 0.0);
+    }
+
+    #[test]
+    fn reuse_rate_and_accuracy() {
+        let mut s = SatelliteState::new(0);
+        assert_eq!(s.reuse_rate(), 0.0);
+        assert_eq!(s.reuse_accuracy(), 1.0);
+        s.serve(0.0, 1.0);
+        s.serve(0.0, 0.1);
+        s.tasks_reused = 1;
+        s.reused_correct = 1;
+        assert_eq!(s.reuse_rate(), 0.5);
+        assert_eq!(s.reuse_accuracy(), 1.0);
+        s.tasks_reused = 2;
+        assert_eq!(s.reuse_accuracy(), 0.5);
+    }
+
+    #[test]
+    fn occupy_until_extends_busy() {
+        let mut s = SatelliteState::new(0);
+        s.serve(0.0, 1.0);
+        s.occupy_until(3.0);
+        assert_eq!(s.next_free(), 3.0);
+        assert_eq!(s.busy_time(), 3.0);
+        // no-op when already past
+        s.occupy_until(2.0);
+        assert_eq!(s.next_free(), 3.0);
+    }
+}

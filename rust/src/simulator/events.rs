@@ -1,0 +1,132 @@
+//! Discrete-event queue on the virtual clock.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::coordinator::scrt::Record;
+use crate::workload::SatId;
+
+/// Event payloads.
+#[derive(Clone, Debug)]
+pub enum EventKind {
+    /// A task arrives at its satellite (index into the workload task vec).
+    Arrival(usize),
+    /// The satellite's in-flight task completes.
+    Completion(SatId),
+    /// One broadcast record reaches a destination satellite. Broadcasts are
+    /// *streamed*: record `k` of a τ-record share arrives after `k+1`
+    /// payload transmission times, so receivers start benefiting before the
+    /// whole share lands.
+    BroadcastDeliver {
+        dst: SatId,
+        /// LSH bucket of the record (identical hyperplanes fleet-wide).
+        bucket: u32,
+        record: std::rc::Rc<Record>,
+    },
+}
+
+/// A scheduled event.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub time: f64,
+    /// Tie-breaker: events at equal times fire in schedule order.
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert so the earliest event pops first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .expect("NaN event time")
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time: f64, kind: EventKind) {
+        debug_assert!(time.is_finite(), "non-finite event time");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event { time, seq, kind });
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, EventKind::Completion(0));
+        q.push(1.0, EventKind::Completion(1));
+        q.push(2.0, EventKind::Completion(2));
+        let order: Vec<f64> = std::iter::from_fn(|| q.pop().map(|e| e.time)).collect();
+        assert_eq!(order, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn equal_times_fifo_by_seq() {
+        let mut q = EventQueue::new();
+        q.push(1.0, EventKind::Completion(10));
+        q.push(1.0, EventKind::Completion(20));
+        q.push(1.0, EventKind::Completion(30));
+        let sats: Vec<usize> = std::iter::from_fn(|| {
+            q.pop().map(|e| match e.kind {
+                EventKind::Completion(s) => s,
+                _ => unreachable!(),
+            })
+        })
+        .collect();
+        assert_eq!(sats, vec![10, 20, 30]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nan_time_in_debug() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, EventKind::Completion(0));
+        q.push(1.0, EventKind::Completion(1));
+        // popping with a NaN comparison panics (or the debug_assert fired)
+        while q.pop().is_some() {}
+        panic!("should have panicked earlier");
+    }
+}

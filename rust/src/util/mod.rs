@@ -1,0 +1,6 @@
+//! Support substrates built in-repo (the image has no network access for
+//! crates.io, so RNG / JSON / statistics helpers are implemented here).
+
+pub mod json;
+pub mod rng;
+pub mod stats;

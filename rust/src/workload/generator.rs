@@ -1,0 +1,393 @@
+//! Task-stream generation: who sees which scene, when.
+//!
+//! The structure mirrors a constellation sweeping the ground:
+//!
+//! * each orbit (grid row) images an ordered **ground-track stream** of
+//!   scenes, expanded from scene *runs* (a satellite dwells on the same
+//!   scene for consecutive captures — temporal locality);
+//! * satellites in the same orbit traverse the *same* stream with a slot
+//!   lag (`STREAM_LAG` tasks): the leader processes scenes its followers
+//!   will see shortly — exactly the redundancy collaborative reuse mines;
+//! * adjacent orbits inherit a fraction of each other's scenes
+//!   ([`INTER_ORBIT_SHARE`]), like overlapping swaths of adjacent planes;
+//! * per-orbit *redundancy heterogeneity* (run lengths drawn around
+//!   `scene_repeat_prob ± repeat_prob_spread/2`) creates the SRS contrast
+//!   between reuse-rich and reuse-poor satellites that Alg. 2 exploits;
+//! * with probability `1 − shared_pool_prob` a capture is a one-off
+//!   private scene (transient events: ships, clouds, fires);
+//! * arrivals are Poisson per satellite (the paper's M/M/1 assumption).
+
+use crate::config::SimConfig;
+use crate::util::rng::Rng;
+use crate::workload::texture::{SceneSpec, TextureSynth};
+use crate::workload::{SatId, Task};
+
+/// The generated workload: all tasks, globally sorted by arrival time.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub tasks: Vec<Task>,
+    /// Tasks per satellite (diagnostics).
+    pub per_satellite: Vec<usize>,
+    /// Number of distinct scenes generated.
+    pub num_scenes: usize,
+}
+
+impl Workload {
+    /// Tasks arriving at one satellite, in arrival order.
+    pub fn tasks_for(&self, sat: SatId) -> impl Iterator<Item = &Task> {
+        self.tasks.iter().filter(move |t| t.satellite == sat)
+    }
+}
+
+/// Classes available to an orbit: a sliding window over the class circle so
+/// adjacent orbits overlap heavily and distant orbits diverge.
+fn orbit_classes(orbit: usize, num_classes: usize) -> Vec<u16> {
+    let window = (num_classes / 3).max(2);
+    (0..window)
+        .map(|i| (((orbit * 2) + i) % num_classes) as u16)
+        .collect()
+}
+
+/// Fraction of an orbit stream inherited from the previous orbital plane.
+const INTER_ORBIT_SHARE: f64 = 0.4;
+
+/// Tasks per ground region: the sweep dwells on one region's scene pool for
+/// this many captures before moving to the next region.
+const REGION_LEN: usize = 12;
+
+/// Slot lag between consecutive satellites of one orbit, in tasks: satellite
+/// at slot `k` starts `k * STREAM_LAG` positions into the orbit's
+/// ground-track stream — higher slots are *leaders* (they image a swath
+/// position first), lower slots follow `STREAM_LAG` tasks behind per slot.
+/// A large lag means a leader's records cover many of a follower's upcoming
+/// scenes, which is the redundancy Alg. 2 mines.
+const STREAM_LAG: usize = 6;
+
+/// Build the full workload for a config.
+pub fn build_workload(cfg: &SimConfig) -> Workload {
+    let n = cfg.network.n;
+    let sats = n * n;
+    let per_sat = cfg.tasks_per_satellite();
+    let mut root = Rng::new(cfg.workload.seed);
+    let mut scene_rng = root.split(1);
+    let mut capture_rng = root.split(2);
+    let mut arrival_rng = root.split(3);
+    let mut choice_rng = root.split(4);
+
+    let synth = TextureSynth::new(
+        cfg.workload.raw_h,
+        cfg.workload.raw_w,
+        cfg.workload.intra_scene_jitter,
+    );
+
+    let mut next_scene_id: u32 = 0;
+    let mut new_scene = |class: u16, rng: &mut Rng| -> SceneSpec {
+        let s = SceneSpec::sample(next_scene_id, class, rng);
+        next_scene_id += 1;
+        s
+    };
+
+    // ---- regional ground-track streams --------------------------------------
+    // The sweep advances through *regions*: REGION_LEN consecutive captures
+    // image one ground region whose small hot-scene pool recurs (Zipf +
+    // dwell runs) while the sweep is over it, then the track moves on to
+    // the next region. Satellites at higher slots are `STREAM_LAG` tasks
+    // ahead per slot — a leader is typically a region ahead of its
+    // followers, so the leader's hottest records describe scenery the
+    // followers are about to image. Region `r` of orbit `o` inherits part
+    // of its pool from region `r − 1` of orbit `o − 1` (adjacent planes
+    // sweep overlapping swaths with a time offset).
+    let stream_len = per_sat + (n - 1) * STREAM_LAG + 1;
+    let num_regions = stream_len.div_ceil(REGION_LEN);
+    let pool_size = cfg.workload.scenes_per_satellite.max(2);
+    let inherited_count =
+        ((INTER_ORBIT_SHARE * pool_size as f64) as usize).min(pool_size - 1);
+
+    // region_pools[orbit][region] -> hot-ranked scene pool
+    let mut region_pools: Vec<Vec<Vec<SceneSpec>>> = Vec::with_capacity(n);
+    for o in 0..n {
+        let classes = orbit_classes(o, cfg.workload.num_classes);
+        let mut pools = Vec::with_capacity(num_regions);
+        for r in 0..num_regions {
+            let mut pool = Vec::with_capacity(pool_size);
+            if o > 0 && r > 0 {
+                // hot-prefix inheritance from the previous plane's previous
+                // region (sweep offset across planes)
+                let prev: &Vec<SceneSpec> = &region_pools[o - 1][r - 1];
+                pool.extend(prev.iter().take(inherited_count).copied());
+            }
+            while pool.len() < pool_size {
+                let class = classes[choice_rng.below(classes.len())];
+                pool.push(new_scene(class, &mut scene_rng));
+            }
+            pools.push(pool);
+        }
+        region_pools.push(pools);
+    }
+
+    let mut orbit_streams: Vec<Vec<SceneSpec>> = Vec::with_capacity(n);
+    for o in 0..n {
+        // Per-orbit dwell probability: how redundant this orbit's ground
+        // track is. Drawn around the configured base with the configured
+        // spread — the heterogeneity knob that creates SRS contrast.
+        let jitter = (choice_rng.f64() - 0.5) * cfg.workload.repeat_prob_spread;
+        let dwell =
+            (cfg.workload.scene_repeat_prob + jitter).clamp(0.05, 0.92);
+        let mut stream = Vec::with_capacity(stream_len);
+        while stream.len() < stream_len {
+            let region = (stream.len() / REGION_LEN).min(num_regions - 1);
+            let pool = &region_pools[o][region];
+            let weights: Vec<f64> =
+                (0..pool.len()).map(|k| 1.0 / (k + 1) as f64).collect();
+            let scene = pool[choice_rng.weighted(&weights)];
+            // geometric run length with mean 1 / (1 - dwell)
+            let mut run = 1usize;
+            while choice_rng.f64() < dwell && run < 12 {
+                run += 1;
+            }
+            for _ in 0..run {
+                if stream.len() < stream_len {
+                    stream.push(scene);
+                }
+            }
+        }
+        orbit_streams.push(stream);
+    }
+
+    // ---- task streams -----------------------------------------------------
+    // The paper distributes the 625-image total evenly; trailing satellites
+    // absorb any shortfall so the total matches exactly.
+    let mut tasks = Vec::with_capacity(cfg.workload.total_tasks);
+    let mut per_satellite = vec![0usize; sats];
+    let mut remaining = cfg.workload.total_tasks;
+    for sat in 0..sats {
+        let count = per_sat.min(remaining);
+        remaining -= count;
+        per_satellite[sat] = count;
+        let orbit = sat / n;
+        let slot = sat % n;
+        let offset = slot * STREAM_LAG;
+        let mut t = 0.0f64;
+        for j in 0..count {
+            t += arrival_rng.exponential(cfg.workload.arrival_rate_per_sat);
+            let scene = if choice_rng.f64() < cfg.workload.shared_pool_prob {
+                orbit_streams[orbit][(offset + j) % stream_len]
+            } else {
+                // transient private scene (one-off capture)
+                let classes = orbit_classes(orbit, cfg.workload.num_classes);
+                let class = classes[choice_rng.below(classes.len())];
+                new_scene(class, &mut scene_rng)
+            };
+            let raw = synth.render(&scene, &mut capture_rng);
+            tasks.push(Task {
+                id: 0, // assigned after the arrival sort
+                satellite: sat,
+                arrival: t,
+                scene: scene.id,
+                class_id: scene.class_id,
+                task_type: 0,
+                raw,
+            });
+        }
+    }
+
+    tasks.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    // Ids in arrival order: `task.id == index in tasks` — the simulator and
+    // record-provenance lookups rely on this invariant.
+    for (i, t) in tasks.iter_mut().enumerate() {
+        t.id = i;
+    }
+    Workload {
+        tasks,
+        per_satellite,
+        num_scenes: next_scene_id as usize,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn small_cfg() -> SimConfig {
+        let mut cfg = SimConfig::paper_default(3);
+        cfg.workload.total_tasks = 45;
+        cfg.workload.raw_h = 16;
+        cfg.workload.raw_w = 16;
+        cfg
+    }
+
+    #[test]
+    fn total_task_count_exact() {
+        let wl = build_workload(&small_cfg());
+        assert_eq!(wl.tasks.len(), 45);
+        assert_eq!(wl.per_satellite.iter().sum::<usize>(), 45);
+    }
+
+    #[test]
+    fn paper_5x5_distribution() {
+        let mut cfg = SimConfig::paper_default(5);
+        cfg.workload.raw_h = 8; // keep the test fast
+        cfg.workload.raw_w = 8;
+        let wl = build_workload(&cfg);
+        assert_eq!(wl.tasks.len(), 625);
+        assert!(wl.per_satellite.iter().all(|&c| c == 25));
+    }
+
+    #[test]
+    fn ids_match_positions() {
+        let wl = build_workload(&small_cfg());
+        for (i, t) in wl.tasks.iter().enumerate() {
+            assert_eq!(t.id, i);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = build_workload(&small_cfg());
+        let b = build_workload(&small_cfg());
+        assert_eq!(a.tasks.len(), b.tasks.len());
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.scene, y.scene);
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.raw, y.raw);
+        }
+    }
+
+    #[test]
+    fn seed_changes_stream() {
+        let a = build_workload(&small_cfg());
+        let mut cfg = small_cfg();
+        cfg.workload.seed += 1;
+        let b = build_workload(&cfg);
+        assert!(a
+            .tasks
+            .iter()
+            .zip(&b.tasks)
+            .any(|(x, y)| x.scene != y.scene || x.arrival != y.arrival));
+    }
+
+    #[test]
+    fn arrivals_sorted_and_positive() {
+        let wl = build_workload(&small_cfg());
+        let mut prev = 0.0;
+        for t in &wl.tasks {
+            assert!(t.arrival > 0.0);
+            assert!(t.arrival >= prev);
+            prev = t.arrival;
+        }
+    }
+
+    #[test]
+    fn scenes_repeat_along_track() {
+        let wl = build_workload(&small_cfg());
+        let mut repeats = 0;
+        let mut total = 0;
+        for sat in 0..9 {
+            let scenes: Vec<u32> = wl.tasks_for(sat).map(|t| t.scene).collect();
+            for w in scenes.windows(2) {
+                total += 1;
+                if w[0] == w[1] {
+                    repeats += 1;
+                }
+            }
+        }
+        assert!(total > 0);
+        assert!(
+            repeats as f64 / total as f64 > 0.15,
+            "repeat rate {repeats}/{total}"
+        );
+    }
+
+    #[test]
+    fn orbit_mates_share_scenes_with_lag() {
+        let wl = build_workload(&small_cfg());
+        use std::collections::HashSet;
+        // leaders see what followers will see: sat 0 (slot 0) and sat 2
+        // (slot 2) of orbit 0 draw from the same stream window
+        let s0: HashSet<u32> = wl.tasks_for(0).map(|t| t.scene).collect();
+        let s1: HashSet<u32> = wl.tasks_for(1).map(|t| t.scene).collect();
+        let s2: HashSet<u32> = wl.tasks_for(2).map(|t| t.scene).collect();
+        let overlap01 = s0.intersection(&s1).count();
+        let overlap02 = s0.intersection(&s2).count();
+        assert!(
+            overlap01 + overlap02 > 0,
+            "orbit-mates share no scenes at all"
+        );
+    }
+
+    #[test]
+    fn leader_sees_shared_scene_before_follower() {
+        // Statistically, the first occurrence of a shared scene should come
+        // earlier at the leading slot than at the trailing slot.
+        let mut cfg = SimConfig::paper_default(5);
+        cfg.workload.total_tasks = 625;
+        cfg.workload.raw_h = 8;
+        cfg.workload.raw_w = 8;
+        let wl = build_workload(&cfg);
+        let mut leads = 0i64;
+        for orbit in 0..5 {
+            let a = orbit * 5 + 4; // slot 4 (leader: deepest stream offset)
+            let b = orbit * 5 + 3; // slot 3 (follower)
+            use std::collections::HashMap;
+            let mut first_a: HashMap<u32, f64> = HashMap::new();
+            for t in wl.tasks_for(a) {
+                first_a.entry(t.scene).or_insert(t.arrival);
+            }
+            for t in wl.tasks_for(b) {
+                if let Some(&ta) = first_a.get(&t.scene) {
+                    if ta < t.arrival {
+                        leads += 1;
+                    } else {
+                        leads -= 1;
+                    }
+                }
+            }
+        }
+        assert!(leads >= 0, "leaders should not systematically trail: {leads}");
+    }
+
+    #[test]
+    fn adjacent_orbits_share_scenes() {
+        let wl = build_workload(&small_cfg());
+        use std::collections::HashSet;
+        let orbit0: HashSet<u32> = (0..3).flat_map(|s| wl.tasks_for(s).map(|t| t.scene).collect::<Vec<_>>()).collect();
+        let orbit1: HashSet<u32> = (3..6).flat_map(|s| wl.tasks_for(s).map(|t| t.scene).collect::<Vec<_>>()).collect();
+        assert!(
+            !orbit0.is_disjoint(&orbit1),
+            "adjacent orbits must inherit scenes"
+        );
+    }
+
+    #[test]
+    fn orbit_classes_overlap_for_adjacent_orbits() {
+        let a = orbit_classes(0, 21);
+        let b = orbit_classes(1, 21);
+        let overlap = a.iter().filter(|c| b.contains(c)).count();
+        assert!(overlap >= a.len() / 2, "adjacent orbits overlap {overlap}");
+        // distant orbits diverge
+        let far = orbit_classes(8, 21);
+        let overlap_far = a.iter().filter(|c| far.contains(c)).count();
+        assert!(overlap_far < overlap);
+    }
+
+    #[test]
+    fn class_ids_in_range() {
+        let wl = build_workload(&small_cfg());
+        assert!(wl.tasks.iter().all(|t| (t.class_id as usize) < 21));
+    }
+
+    #[test]
+    fn private_scenes_exist() {
+        let mut cfg = small_cfg();
+        cfg.workload.shared_pool_prob = 0.5;
+        let wl = build_workload(&cfg);
+        // one-off scenes appear exactly once
+        use std::collections::HashMap;
+        let mut counts: HashMap<u32, usize> = HashMap::new();
+        for t in &wl.tasks {
+            *counts.entry(t.scene).or_default() += 1;
+        }
+        assert!(counts.values().any(|&c| c == 1), "no private scenes");
+    }
+}

@@ -1,0 +1,57 @@
+//! Synthetic remote-sensing workload — the UC Merced Land Use stand-in.
+//!
+//! The reuse dynamics the paper measures depend only on the *similarity
+//! structure* of the task stream: images of the same scene are near
+//! duplicates, scenes repeat along a satellite's ground track, and
+//! neighbouring satellites observe overlapping scene pools. The procedural
+//! generator reproduces exactly that structure with controllable knobs
+//! (`WorkloadConfig`), while the per-record *payload size* used by the
+//! communication model stays at the paper's 20.5 MB per image.
+
+pub mod generator;
+pub mod texture;
+
+pub use generator::{build_workload, Workload};
+pub use texture::{SceneSpec, TextureSynth};
+
+/// Satellite index inside the N×N grid (row-major: orbit * n + slot).
+pub type SatId = usize;
+
+/// A raw sensor tile: row-major `[h, w, 3]`, values in `[0, 255]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ImageData {
+    pub h: usize,
+    pub w: usize,
+    pub pixels: Vec<f32>,
+}
+
+impl ImageData {
+    pub fn new(h: usize, w: usize, pixels: Vec<f32>) -> Self {
+        assert_eq!(pixels.len(), h * w * 3, "pixel buffer size mismatch");
+        ImageData { h, w, pixels }
+    }
+
+    #[inline]
+    pub fn at(&self, y: usize, x: usize, c: usize) -> f32 {
+        self.pixels[(y * self.w + x) * 3 + c]
+    }
+}
+
+/// One data-processing subtask `t ∈ Γ^s` (a remote-sensing image to label).
+#[derive(Clone, Debug)]
+pub struct Task {
+    /// Globally unique, dense id.
+    pub id: usize,
+    /// Satellite this task arrives at.
+    pub satellite: SatId,
+    /// Virtual arrival time, seconds (Poisson process per satellite).
+    pub arrival: f64,
+    /// Scene identity (generator ground truth; never shown to algorithms).
+    pub scene: u32,
+    /// Land-use class of the scene (generator ground truth; diagnostics).
+    pub class_id: u16,
+    /// Task type `P_t` — all tasks here are land-use classification.
+    pub task_type: u16,
+    /// The raw image `D_t`.
+    pub raw: ImageData,
+}

@@ -1,0 +1,318 @@
+//! Procedural land-use texture synthesis.
+//!
+//! Each of the 21 classes renders a distinct parametric pattern family
+//! (gratings = agricultural fields, checkers = urban blocks, blobs =
+//! forest/chaparral, smooth gradients = water, stripes = runways/roads...).
+//! A [`SceneSpec`] instantiates a class with a concrete phase / scale /
+//! palette; repeated captures of the same scene differ only by additive
+//! sensor noise, so intra-scene SSIM is high while inter-class SSIM is low —
+//! the similarity structure computation reuse feeds on.
+
+use crate::util::rng::Rng;
+use crate::workload::ImageData;
+
+/// A concrete scene: one class rendered at one location/illumination.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SceneSpec {
+    /// Stable scene id.
+    pub id: u32,
+    /// Land-use class in `[0, num_classes)`.
+    pub class_id: u16,
+    /// Spatial phase offsets in `[0, 1)`.
+    pub phase_x: f32,
+    pub phase_y: f32,
+    /// Frequency scale in `[0.9, 1.1]`.
+    pub scale: f32,
+    /// Per-scene illumination shift in `[-12, 12]` (pixel value units).
+    pub illum: f32,
+}
+
+impl SceneSpec {
+    /// Draw a fresh scene of a given class. Scenes of one class spread over
+    /// a wide phase/scale/illumination range so *cross-scene* SSIM falls
+    /// below `th_sim` while captures of the *same* scene stay above it.
+    pub fn sample(id: u32, class_id: u16, rng: &mut Rng) -> Self {
+        SceneSpec {
+            id,
+            class_id,
+            phase_x: rng.f32(),
+            phase_y: rng.f32(),
+            scale: 0.8 + 0.4 * rng.f32(),
+            illum: (rng.f32() - 0.5) * 60.0,
+        }
+    }
+}
+
+/// Pattern family. Derived from the class id; several classes share a
+/// family but differ in frequency/orientation/palette, mirroring how UC
+/// Merced classes (e.g. *agricultural* vs *crops*) share visual statistics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Family {
+    Grating,
+    Checker,
+    Blobs,
+    Gradient,
+    Stripes,
+}
+
+fn family(class_id: u16) -> Family {
+    match class_id % 5 {
+        0 => Family::Grating,
+        1 => Family::Checker,
+        2 => Family::Blobs,
+        3 => Family::Gradient,
+        _ => Family::Stripes,
+    }
+}
+
+/// Deterministic per-class constants.
+struct ClassParams {
+    freq: f32,
+    angle: f32,
+    base: [f32; 3],
+    alt: [f32; 3],
+}
+
+fn class_params(class_id: u16) -> ClassParams {
+    // Spread classes over frequency/orientation/palette space via a hash.
+    let h = (class_id as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    let freq = 2.0 + ((h >> 8) % 9) as f32; // 2..10 cycles per tile
+    let angle = (((h >> 16) % 180) as f32).to_radians();
+    // Dark and bright palette anchors kept ≥ 60 apart so every class has
+    // enough contrast for intra-scene SSIM to survive sensor noise.
+    let lo = |shift: u32| 25.0 + ((h >> shift) % 90) as f32; // 25..115
+    let hi = |shift: u32| 175.0 + ((h >> shift) % 70) as f32; // 175..245
+    ClassParams {
+        freq,
+        angle,
+        base: [lo(24), lo(32), lo(40)],
+        alt: [hi(26), hi(34), hi(42)],
+    }
+}
+
+/// Smooth pseudo-noise in [0,1] from integer lattice coordinates.
+fn value_noise(ix: i64, iy: i64, seed: u64) -> f32 {
+    let mut z = (ix as u64)
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add((iy as u64).wrapping_mul(0xC2B2AE3D27D4EB4F))
+        .wrapping_add(seed.wrapping_mul(0x165667B19E3779F9));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    ((z ^ (z >> 31)) >> 11) as f32 * (1.0 / (1u64 << 53) as f32)
+}
+
+/// Bilinear-interpolated value noise at a fractional coordinate.
+fn smooth_noise(x: f32, y: f32, seed: u64) -> f32 {
+    let x0 = x.floor();
+    let y0 = y.floor();
+    let fx = x - x0;
+    let fy = y - y0;
+    // smoothstep weights
+    let sx = fx * fx * (3.0 - 2.0 * fx);
+    let sy = fy * fy * (3.0 - 2.0 * fy);
+    let (ix, iy) = (x0 as i64, y0 as i64);
+    let n00 = value_noise(ix, iy, seed);
+    let n10 = value_noise(ix + 1, iy, seed);
+    let n01 = value_noise(ix, iy + 1, seed);
+    let n11 = value_noise(ix + 1, iy + 1, seed);
+    let a = n00 + sx * (n10 - n00);
+    let b = n01 + sx * (n11 - n01);
+    a + sy * (b - a)
+}
+
+/// Texture renderer.
+pub struct TextureSynth {
+    h: usize,
+    w: usize,
+    /// Additive sensor-noise σ in pixel-value units.
+    noise_sigma: f32,
+}
+
+impl TextureSynth {
+    pub fn new(h: usize, w: usize, jitter: f64) -> Self {
+        TextureSynth {
+            h,
+            w,
+            noise_sigma: (jitter * 255.0) as f32,
+        }
+    }
+
+    /// Pattern intensity in [0, 1] for a scene at normalised coords (u, v).
+    fn intensity(&self, scene: &SceneSpec, u: f32, v: f32) -> f32 {
+        let p = class_params(scene.class_id);
+        let freq = p.freq * scene.scale;
+        let (s, c) = p.angle.sin_cos();
+        // rotate, then phase-shift
+        let ru = c * u - s * v + scene.phase_x;
+        let rv = s * u + c * v + scene.phase_y;
+        match family(scene.class_id) {
+            Family::Grating => {
+                0.5 + 0.5 * (2.0 * std::f32::consts::PI * freq * ru).sin()
+            }
+            Family::Checker => {
+                let a = ((ru * freq).floor() as i64 + (rv * freq).floor() as i64) & 1;
+                a as f32
+            }
+            Family::Blobs => {
+                smooth_noise(ru * freq, rv * freq, scene.class_id as u64 + 11)
+            }
+            Family::Gradient => {
+                // slow large-scale gradient + gentle ripple (water)
+                let g = (ru + rv) * 0.5;
+                let ripple = 0.12 * (2.0 * std::f32::consts::PI * freq * 1.7 * rv).sin();
+                (g.fract() + ripple).clamp(0.0, 1.0)
+            }
+            Family::Stripes => {
+                let t = (ru * freq).fract();
+                if t < 0.25 {
+                    1.0
+                } else {
+                    0.15
+                }
+            }
+        }
+    }
+
+    /// Render one capture of a scene. `rng` drives the per-capture sensor
+    /// noise only — two captures of the same scene differ just by noise.
+    pub fn render(&self, scene: &SceneSpec, rng: &mut Rng) -> ImageData {
+        let mut pixels = Vec::with_capacity(self.h * self.w * 3);
+        let p = class_params(scene.class_id);
+        for y in 0..self.h {
+            for x in 0..self.w {
+                let u = x as f32 / self.w as f32;
+                let v = y as f32 / self.h as f32;
+                let t = self.intensity(scene, u, v);
+                for ch in 0..3 {
+                    let base = p.base[ch] + (p.alt[ch] - p.base[ch]) * t;
+                    let noisy = base
+                        + scene.illum
+                        + self.noise_sigma * rng.normal() as f32;
+                    pixels.push(noisy.clamp(0.0, 255.0));
+                }
+            }
+        }
+        ImageData::new(self.h, self.w, pixels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth() -> TextureSynth {
+        TextureSynth::new(64, 64, 0.06)
+    }
+
+    /// Plain global SSIM on grayscale — a test-local oracle.
+    fn ssim_gray(a: &ImageData, b: &ImageData) -> f64 {
+        let lum = |img: &ImageData| -> Vec<f64> {
+            (0..img.h * img.w)
+                .map(|i| {
+                    (0.299 * img.pixels[i * 3]
+                        + 0.587 * img.pixels[i * 3 + 1]
+                        + 0.114 * img.pixels[i * 3 + 2]) as f64
+                        / 255.0
+                })
+                .collect()
+        };
+        let xa = lum(a);
+        let xb = lum(b);
+        let n = xa.len() as f64;
+        let ma = xa.iter().sum::<f64>() / n;
+        let mb = xb.iter().sum::<f64>() / n;
+        let va = xa.iter().map(|x| (x - ma).powi(2)).sum::<f64>() / n;
+        let vb = xb.iter().map(|x| (x - mb).powi(2)).sum::<f64>() / n;
+        let cov = xa
+            .iter()
+            .zip(&xb)
+            .map(|(x, y)| (x - ma) * (y - mb))
+            .sum::<f64>()
+            / n;
+        let (c1, c2) = (0.01f64.powi(2), 0.03f64.powi(2));
+        let c3 = c2 / 2.0;
+        ((2.0 * ma * mb + c1) / (ma * ma + mb * mb + c1))
+            * ((2.0 * va.sqrt() * vb.sqrt() + c2) / (va + vb + c2))
+            * ((cov + c3) / (va.sqrt() * vb.sqrt() + c3))
+    }
+
+    #[test]
+    fn deterministic_given_rng_seed() {
+        let s = SceneSpec::sample(0, 3, &mut Rng::new(1));
+        let a = synth().render(&s, &mut Rng::new(9));
+        let b = synth().render(&s, &mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn same_scene_high_ssim() {
+        let synth = synth();
+        for class in [0u16, 4, 9, 13, 20] {
+            let s = SceneSpec::sample(0, class, &mut Rng::new(class as u64));
+            let a = synth.render(&s, &mut Rng::new(1));
+            let b = synth.render(&s, &mut Rng::new(2));
+            let v = ssim_gray(&a, &b);
+            assert!(v > 0.75, "class {class}: intra-scene ssim {v}");
+        }
+    }
+
+    #[test]
+    fn different_class_low_ssim() {
+        let synth = synth();
+        let mut below = 0;
+        let mut total = 0;
+        for ca in 0u16..7 {
+            for cb in (ca + 1)..7 {
+                let sa = SceneSpec::sample(0, ca, &mut Rng::new(5));
+                let sb = SceneSpec::sample(1, cb, &mut Rng::new(6));
+                let a = synth.render(&sa, &mut Rng::new(1));
+                let b = synth.render(&sb, &mut Rng::new(2));
+                let v = ssim_gray(&a, &b);
+                total += 1;
+                if v < 0.7 {
+                    below += 1;
+                }
+            }
+        }
+        // the overwhelming majority of cross-class pairs must fail th_sim
+        assert!(
+            below * 10 >= total * 9,
+            "only {below}/{total} cross-class pairs below th_sim"
+        );
+    }
+
+    #[test]
+    fn pixels_in_range() {
+        let s = SceneSpec::sample(2, 7, &mut Rng::new(3));
+        let img = synth().render(&s, &mut Rng::new(4));
+        assert!(img
+            .pixels
+            .iter()
+            .all(|&p| (0.0..=255.0).contains(&p)));
+    }
+
+    #[test]
+    fn all_classes_render_distinct_images() {
+        let synth = synth();
+        let mut means = Vec::new();
+        for class in 0..21u16 {
+            let s = SceneSpec::sample(class as u32, class, &mut Rng::new(8));
+            let img = synth.render(&s, &mut Rng::new(1));
+            let mean: f32 =
+                img.pixels.iter().sum::<f32>() / img.pixels.len() as f32;
+            means.push(mean);
+        }
+        // not all identical
+        let first = means[0];
+        assert!(means.iter().any(|m| (m - first).abs() > 1.0));
+    }
+
+    #[test]
+    fn noise_free_renders_identical() {
+        let synth = TextureSynth::new(32, 32, 0.0);
+        let s = SceneSpec::sample(0, 1, &mut Rng::new(2));
+        let a = synth.render(&s, &mut Rng::new(1));
+        let b = synth.render(&s, &mut Rng::new(99));
+        assert_eq!(a, b, "zero jitter must be capture-independent");
+    }
+}

@@ -1,0 +1,279 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! proptest is unavailable in this offline image, so the harness is a
+//! seeded random-sweep driver: each property runs across many generated
+//! cases; failures print the seed for exact reproduction.
+
+use ccrsat::compute::Preprocessed;
+use ccrsat::coordinator::sccr::{select_source, AreaPolicy};
+use ccrsat::coordinator::scrt::{Record, Scrt};
+use ccrsat::coordinator::srs::srs;
+use ccrsat::network::{CommModel, GridTopology};
+use ccrsat::config::SimConfig;
+use ccrsat::util::rng::Rng;
+
+const CASES: u64 = 200;
+
+fn pre(rng: &mut Rng, dim: usize) -> Preprocessed {
+    Preprocessed {
+        h: 1,
+        w: dim,
+        pd: (0..dim * 3).map(|_| rng.f32()).collect(),
+        gray: (0..dim).map(|_| rng.f32()).collect(),
+    }
+}
+
+fn record(id: usize, rng: &mut Rng) -> Record {
+    Record {
+        id,
+        pre: pre(rng, 8),
+        task_type: (rng.below(3)) as u16,
+        result: rng.below(21) as u32,
+        reuse_count: rng.below(10) as u32,
+        last_used: rng.f64() * 100.0,
+        origin: rng.below(25),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SCRT invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_scrt_never_exceeds_capacity() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let cap = 1 + rng.below(20);
+        let buckets = 1 << (1 + rng.below(3));
+        let mut scrt = Scrt::new(buckets, cap);
+        for i in 0..cap * 3 {
+            scrt.insert(rng.below(buckets) as u32, record(i, &mut rng));
+            assert!(
+                scrt.len() <= cap,
+                "seed {seed}: len {} > cap {cap}",
+                scrt.len()
+            );
+        }
+        assert_eq!(scrt.len(), cap, "seed {seed}: table should be full");
+    }
+}
+
+#[test]
+fn prop_scrt_eviction_removes_minimum_value() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xE11C);
+        let cap = 2 + rng.below(10);
+        let mut scrt = Scrt::new(4, cap);
+        for i in 0..cap {
+            scrt.insert(rng.below(4) as u32, record(i, &mut rng));
+        }
+        // min (reuse_count, last_used) before the insert
+        let min_key = scrt
+            .iter()
+            .map(|(_, r)| (r.reuse_count, r.last_used, r.id))
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+            .unwrap();
+        let evicted = scrt.insert(0, record(9999, &mut rng)).unwrap();
+        assert_eq!(evicted, min_key.2, "seed {seed}: wrong victim");
+    }
+}
+
+#[test]
+fn prop_scrt_top_tau_sorted_and_bounded() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x70AA);
+        let mut scrt = Scrt::new(4, 64);
+        let count = rng.below(30);
+        for i in 0..count {
+            scrt.insert(rng.below(4) as u32, record(i, &mut rng));
+        }
+        let tau = 1 + rng.below(15);
+        let top = scrt.top_tau(tau);
+        assert!(top.len() <= tau.min(count));
+        for w in top.windows(2) {
+            assert!(
+                w[0].1.reuse_count >= w[1].1.reuse_count,
+                "seed {seed}: top_tau not sorted"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_scrt_nearest_is_exact_argmin() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x4EA2);
+        let mut scrt = Scrt::new(2, 64);
+        let count = 1 + rng.below(20);
+        for i in 0..count {
+            let mut r = record(i, &mut rng);
+            r.task_type = 0;
+            scrt.insert(0, r);
+        }
+        let probe = pre(&mut rng, 8);
+        if let Some((slot, d)) = scrt.nearest(0, 0, &probe) {
+            // brute force
+            let best = scrt
+                .iter()
+                .filter(|(b, r)| *b == 0 && r.task_type == 0)
+                .map(|(_, r)| {
+                    r.pre
+                        .pd
+                        .iter()
+                        .zip(&probe.pd)
+                        .map(|(x, y)| (x - y) * (x - y))
+                        .sum::<f32>()
+                })
+                .fold(f32::INFINITY, f32::min);
+            assert!(
+                (d - best).abs() < 1e-5,
+                "seed {seed}: nearest {d} != brute-force {best} (slot {slot})"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SRS / Alg. 2 invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_srs_bounded_and_monotone() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x55AA);
+        let beta = rng.f64();
+        let rr = rng.f64();
+        let cpu = rng.f64();
+        let v = srs(beta, rr, cpu);
+        assert!((0.0..=1.0).contains(&v), "seed {seed}: srs {v}");
+        // raising rr never lowers SRS; raising cpu never raises it
+        assert!(srs(beta, (rr + 0.1).min(1.0), cpu) >= v - 1e-12);
+        assert!(srs(beta, rr, (cpu + 0.1).min(1.0)) <= v + 1e-12);
+    }
+}
+
+#[test]
+fn prop_select_source_respects_threshold_and_membership() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xC0DE);
+        let n = 3 + rng.below(6);
+        let topo = GridTopology::new(n);
+        let srs_values: Vec<f64> = (0..topo.len()).map(|_| rng.f64()).collect();
+        let req = rng.below(topo.len());
+        let th = rng.f64();
+        for policy in [
+            AreaPolicy::InitialOnly,
+            AreaPolicy::WithExpansion,
+            AreaPolicy::GlobalSrsPriority,
+        ] {
+            if let Some(d) = select_source(&topo, req, &srs_values, th, policy) {
+                assert_ne!(d.source, req, "seed {seed}: self-serve");
+                assert!(d.area.contains(&d.source), "seed {seed}: source outside area");
+                assert!(d.area.contains(&req), "seed {seed}: requester outside area");
+                if policy != AreaPolicy::GlobalSrsPriority {
+                    assert!(
+                        srs_values[d.source] > th,
+                        "seed {seed}: source below threshold"
+                    );
+                    // source is the max over its area (minus requester)
+                    let max = d
+                        .area
+                        .iter()
+                        .filter(|&&s| s != req)
+                        .map(|&s| srs_values[s])
+                        .fold(f64::NEG_INFINITY, f64::max);
+                    assert!(srs_values[d.source] >= max - 1e-12);
+                }
+            } else if policy == AreaPolicy::WithExpansion {
+                // termination implies nobody in the expanded area clears th
+                let expanded = topo.expand_area(&topo.area(req, 1));
+                for &s in &expanded {
+                    if s != req {
+                        assert!(
+                            srs_values[s] <= th,
+                            "seed {seed}: viable source missed"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_expanded_area_contains_initial() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xA5EA);
+        let n = 2 + rng.below(8);
+        let topo = GridTopology::new(n);
+        let center = rng.below(topo.len());
+        let initial = topo.area(center, 1);
+        let expanded = topo.expand_area(&initial);
+        for s in &initial {
+            assert!(expanded.contains(s), "seed {seed}: expansion lost a member");
+        }
+        assert!(expanded.len() >= initial.len());
+        assert!(expanded.len() <= topo.len());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Communication-model invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_broadcast_plan_consistent() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xB10C);
+        let n = 3 + rng.below(6);
+        let cfg = SimConfig::paper_default(n);
+        let topo = GridTopology::new(n);
+        let comm = CommModel::new(&cfg.network, &cfg.comm);
+        let src = rng.below(topo.len());
+        let radius = 1 + rng.below(2);
+        let area = topo.area(src, radius);
+        let records = 1 + rng.below(15);
+        let plan = comm.plan_broadcast(&topo, src, &area, records);
+        // bytes = records × (|area|-1) × record size
+        let want = records as f64 * comm.record_bytes() * (area.len() - 1) as f64;
+        assert!(
+            (plan.bytes - want).abs() < 1.0,
+            "seed {seed}: plan bytes {} != {want}",
+            plan.bytes
+        );
+        assert!(plan.airtime_s > 0.0);
+        assert_eq!(plan.arrivals.len(), area.len() - 1);
+        // arrivals are monotone in k and depth
+        for &(m, depth) in &plan.arrivals {
+            assert!(depth >= 1 && m != src);
+            assert!(plan.arrival_offset(1, depth) > plan.arrival_offset(0, depth));
+        }
+        // completion covers every arrival
+        let done = plan.completion_offset(records);
+        for &(_, depth) in &plan.arrivals {
+            assert!(plan.arrival_offset(records - 1, depth) <= done + 1e-9);
+        }
+    }
+}
+
+#[test]
+fn prop_delivery_time_increases_with_distance_same_plane() {
+    // Monotonicity only holds along paths of one hop type (intra- and
+    // inter-plane links run at different rates), so compare within a row.
+    let cfg = SimConfig::paper_default(7);
+    let topo = GridTopology::new(7);
+    let comm = CommModel::new(&cfg.network, &cfg.comm);
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xD157);
+        let orbit = rng.below(7);
+        let src = topo.sat_at(orbit, rng.below(7));
+        let mut slots: Vec<usize> = (0..7).collect();
+        slots.sort_by_key(|&s| topo.hops(src, topo.sat_at(orbit, s)));
+        let mut prev = 0.0;
+        for &s in &slots {
+            let d = comm.delivery_seconds(&topo, src, topo.sat_at(orbit, s), 3);
+            assert!(d + 1e-9 >= prev, "seed {seed}: not monotone in-plane");
+            prev = d;
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! Integration tests over the real PJRT runtime + artifacts.
+//!
+//! These need `make artifacts`; every test skips cleanly (with a note)
+//! when the artifacts directory is absent so `cargo test` stays green on a
+//! fresh checkout.
+
+use ccrsat::compute::{ComputeBackend, NativeBackend, PjrtBackend};
+use ccrsat::config::SimConfig;
+use ccrsat::runtime::{Engine, Tensor};
+use ccrsat::util::rng::Rng;
+use ccrsat::workload::texture::{SceneSpec, TextureSynth};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    // tests run from the crate root
+    let p = std::path::PathBuf::from("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(p) => p,
+            None => return,
+        }
+    };
+}
+
+#[test]
+fn engine_loads_and_warms_all_artifacts() {
+    let dir = require_artifacts!();
+    let engine = Engine::new(&dir).unwrap();
+    engine.warmup().unwrap();
+    let stats = engine.stats();
+    assert_eq!(stats.compiles as usize, engine.manifest().entries.len());
+    assert!(engine.platform_name().to_lowercase().contains("cpu"));
+}
+
+#[test]
+fn preprocess_artifact_matches_native() {
+    let dir = require_artifacts!();
+    let cfg = SimConfig::paper_default(5);
+    let pjrt = PjrtBackend::from_dir(&dir).unwrap();
+    let native = NativeBackend::new(&cfg);
+    let synth = TextureSynth::new(64, 64, 0.02);
+    for seed in 0..4 {
+        let scene = SceneSpec::sample(seed, (seed % 21) as u16, &mut Rng::new(seed as u64));
+        let img = synth.render(&scene, &mut Rng::new(100 + seed as u64));
+        let a = pjrt.preprocess(&img).unwrap();
+        let b = native.preprocess(&img).unwrap();
+        assert_eq!(a.pd.len(), b.pd.len());
+        for (x, y) in a.pd.iter().zip(&b.pd) {
+            assert!((x - y).abs() < 1e-4, "pd mismatch {x} vs {y}");
+        }
+        for (x, y) in a.gray.iter().zip(&b.gray) {
+            assert!((x - y).abs() < 1e-4, "gray mismatch {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn ssim_artifact_matches_native_formula() {
+    let dir = require_artifacts!();
+    let cfg = SimConfig::paper_default(5);
+    let pjrt = PjrtBackend::from_dir(&dir).unwrap();
+    let native = NativeBackend::new(&cfg);
+    let synth = TextureSynth::new(64, 64, 0.02);
+    for seed in 0..4u64 {
+        let s1 = SceneSpec::sample(0, (seed % 21) as u16, &mut Rng::new(seed));
+        let s2 = SceneSpec::sample(1, ((seed + 9) % 21) as u16, &mut Rng::new(seed + 1));
+        let pa = pjrt
+            .preprocess(&synth.render(&s1, &mut Rng::new(10 + seed)))
+            .unwrap();
+        let pb = pjrt
+            .preprocess(&synth.render(&s2, &mut Rng::new(20 + seed)))
+            .unwrap();
+        let v_pjrt = pjrt.ssim(&pa, &pb).unwrap();
+        let v_native = native.ssim(&pa, &pb).unwrap();
+        assert!(
+            (v_pjrt - v_native).abs() < 1e-3,
+            "ssim mismatch: pjrt {v_pjrt} vs native {v_native}"
+        );
+        // self-similarity is exactly 1
+        assert!((pjrt.ssim(&pa, &pa).unwrap() - 1.0).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn classifier_single_and_batch_agree() {
+    let dir = require_artifacts!();
+    let pjrt = PjrtBackend::from_dir(&dir).unwrap();
+    let synth = TextureSynth::new(64, 64, 0.02);
+    let pres: Vec<_> = (0..5u64)
+        .map(|seed| {
+            let s = SceneSpec::sample(seed as u32, (seed % 21) as u16, &mut Rng::new(seed));
+            pjrt.preprocess(&synth.render(&s, &mut Rng::new(seed + 50)))
+                .unwrap()
+        })
+        .collect();
+    let singles: Vec<u32> = pres.iter().map(|p| pjrt.classify(p).unwrap()).collect();
+    let refs: Vec<&_> = pres.iter().collect();
+    let batch = pjrt.classify_many(&refs).unwrap();
+    assert_eq!(singles, batch, "batched classifier must match single calls");
+    assert!(singles.iter().all(|&l| l < 21));
+}
+
+#[test]
+fn classifier_is_deterministic_and_capture_stable() {
+    let dir = require_artifacts!();
+    let pjrt = PjrtBackend::from_dir(&dir).unwrap();
+    let synth = TextureSynth::new(64, 64, 0.004);
+    let mut stable = 0;
+    let total = 8;
+    for seed in 0..total {
+        let s = SceneSpec::sample(seed as u32, (seed % 21) as u16, &mut Rng::new(seed as u64));
+        let p1 = pjrt
+            .preprocess(&synth.render(&s, &mut Rng::new(seed as u64 + 100)))
+            .unwrap();
+        let p2 = pjrt
+            .preprocess(&synth.render(&s, &mut Rng::new(seed as u64 + 200)))
+            .unwrap();
+        assert_eq!(
+            pjrt.classify(&p1).unwrap(),
+            pjrt.classify(&p1).unwrap(),
+            "same input must classify identically"
+        );
+        if pjrt.classify(&p1).unwrap() == pjrt.classify(&p2).unwrap() {
+            stable += 1;
+        }
+    }
+    assert!(
+        stable >= total - 1,
+        "labels unstable across captures: {stable}/{total}"
+    );
+}
+
+#[test]
+fn pjrt_backend_passes_shared_conformance() {
+    let dir = require_artifacts!();
+    let pjrt = PjrtBackend::from_dir(&dir).unwrap();
+    // Same checks NativeBackend passes in unit tests.
+    let synth = TextureSynth::new(64, 64, 0.05);
+    let scene_a = SceneSpec::sample(0, 2, &mut Rng::new(1));
+    let img_a1 = synth.render(&scene_a, &mut Rng::new(10));
+    let img_a2 = synth.render(&scene_a, &mut Rng::new(11));
+    let pa1 = pjrt.preprocess(&img_a1).unwrap();
+    let pa2 = pjrt.preprocess(&img_a2).unwrap();
+    assert!(pjrt.ssim(&pa1, &pa2).unwrap() > 0.7);
+    assert_eq!(pjrt.lsh_bucket(&pa1).unwrap(), pjrt.lsh_bucket(&pa2).unwrap());
+    assert!((pjrt.lsh_bucket(&pa1).unwrap() as usize) < pjrt.num_buckets());
+}
+
+#[test]
+fn engine_rejects_wrong_shapes() {
+    let dir = require_artifacts!();
+    let engine = Engine::new(&dir).unwrap();
+    let wrong = Tensor::f32(vec![8, 8, 3], vec![0.0; 192]).unwrap();
+    assert!(engine.execute("preprocess", &[wrong]).is_err());
+    let ok_shape = Tensor::f32(vec![64, 64, 3], vec![0.0; 64 * 64 * 3]).unwrap();
+    assert!(engine.execute("preprocess", &[ok_shape.clone(), ok_shape]).is_err());
+}
+
+#[test]
+fn full_sim_on_pjrt_backend_smoke() {
+    let dir = require_artifacts!();
+    use ccrsat::coordinator::Scenario;
+    use ccrsat::simulator::Simulation;
+    let mut cfg = SimConfig::paper_default(3);
+    cfg.workload.total_tasks = 36;
+    let backend = PjrtBackend::from_dir(&dir).unwrap();
+    let slcr = Simulation::new(&cfg, &backend, Scenario::Slcr).run().unwrap();
+    let scratch = Simulation::new(&cfg, &backend, Scenario::WithoutCr)
+        .run()
+        .unwrap();
+    assert_eq!(slcr.total_tasks, 36);
+    assert!(slcr.reused_tasks > 0);
+    assert!(slcr.completion_time < scratch.completion_time);
+}

@@ -1,0 +1,210 @@
+//! Scenario-level integration tests (native backend — fast, deterministic).
+//!
+//! These check the cross-module behaviours the paper's evaluation relies
+//! on: scenario orderings, conservation laws, failure injection on the
+//! config boundary, and determinism of whole runs.
+
+use ccrsat::compute::NativeBackend;
+use ccrsat::config::SimConfig;
+use ccrsat::coordinator::Scenario;
+use ccrsat::harness::experiments as exp;
+use ccrsat::simulator::{prepare, Simulation};
+use ccrsat::workload::build_workload;
+
+fn cfg(n: usize, tasks: usize) -> SimConfig {
+    let mut c = SimConfig::paper_default(n);
+    c.workload.total_tasks = tasks;
+    c
+}
+
+#[test]
+fn all_scenarios_process_every_task() {
+    let c = cfg(3, 54);
+    let backend = NativeBackend::new(&c);
+    for s in Scenario::ALL {
+        let r = Simulation::new(&c, &backend, s).run().unwrap();
+        assert_eq!(r.total_tasks, 54, "{s} lost tasks");
+        assert_eq!(r.tasks.len(), 54);
+        // conservation: reused + computed = total
+        let computed = r.tasks.iter().filter(|t| !t.reused).count();
+        assert_eq!(computed + r.reused_tasks, 54);
+    }
+}
+
+#[test]
+fn reuse_scenarios_beat_scratch_on_sigma() {
+    let c = cfg(3, 54);
+    let backend = NativeBackend::new(&c);
+    let scratch = Simulation::new(&c, &backend, Scenario::WithoutCr)
+        .run()
+        .unwrap();
+    for s in [Scenario::Slcr, Scenario::SccrInit, Scenario::Sccr] {
+        let r = Simulation::new(&c, &backend, s).run().unwrap();
+        assert!(
+            r.completion_time < scratch.completion_time,
+            "{s}: {} !< {}",
+            r.completion_time,
+            scratch.completion_time
+        );
+        assert!(r.cpu_occupancy < scratch.cpu_occupancy);
+    }
+}
+
+#[test]
+fn sigma_decomposes_into_compute_plus_comm() {
+    let c = cfg(3, 54);
+    let backend = NativeBackend::new(&c);
+    for s in Scenario::ALL {
+        let r = Simulation::new(&c, &backend, s).run().unwrap();
+        let sigma = c.alpha * r.comm_seconds + r.compute_seconds;
+        assert!(
+            (r.completion_time - sigma).abs() < 1e-6,
+            "{s}: eq. 9 decomposition broken"
+        );
+        if !s.collaborates() {
+            assert_eq!(r.comm_seconds, 0.0, "{s} must not communicate");
+        }
+    }
+}
+
+#[test]
+fn full_determinism_across_runs_and_sharing() {
+    let c = cfg(3, 45);
+    let backend = NativeBackend::new(&c);
+    let wl = build_workload(&c);
+    let prep = prepare(&backend, &wl).unwrap();
+    for s in Scenario::ALL {
+        let a = Simulation::new(&c, &backend, s)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .run()
+            .unwrap();
+        let b = Simulation::new(&c, &backend, s).run().unwrap();
+        assert_eq!(a.completion_time, b.completion_time, "{s}");
+        assert_eq!(a.reused_tasks, b.reused_tasks, "{s}");
+        assert_eq!(a.data_transfer_mb, b.data_transfer_mb, "{s}");
+        assert_eq!(a.reuse_accuracy, b.reuse_accuracy, "{s}");
+    }
+}
+
+#[test]
+fn th_sim_above_one_degenerates_to_scratch_plus_lookup() {
+    let mut c = cfg(3, 36);
+    c.reuse.th_sim = 1.0; // SSIM can never exceed 1 strictly
+    let backend = NativeBackend::new(&c);
+    let r = Simulation::new(&c, &backend, Scenario::Slcr).run().unwrap();
+    assert_eq!(r.reused_tasks, 0, "th_sim=1.0 must disable reuse");
+}
+
+#[test]
+fn zero_th_co_never_collaborates_when_everyone_is_fine() {
+    let mut c = cfg(3, 36);
+    c.reuse.th_co = 0.0; // SRS can never be < 0
+    let backend = NativeBackend::new(&c);
+    let r = Simulation::new(&c, &backend, Scenario::Sccr).run().unwrap();
+    assert_eq!(r.collab_events, 0);
+    assert_eq!(r.data_transfer_mb, 0.0);
+}
+
+#[test]
+fn tau_controls_broadcast_size() {
+    let c = cfg(3, 54);
+    let backend = NativeBackend::new(&c);
+    let wl = build_workload(&c);
+    let prep = prepare(&backend, &wl).unwrap();
+    let run_tau = |tau: usize| {
+        let mut c2 = c.clone();
+        c2.reuse.tau = tau;
+        Simulation::new(&c2, &backend, Scenario::Sccr)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .run()
+            .unwrap()
+    };
+    let small = run_tau(1);
+    let large = run_tau(12);
+    // τ upper-bounds the per-event share size
+    assert!(
+        small.broadcast_records <= small.collab_events,
+        "τ=1 must cap shares at one record per event"
+    );
+    if small.collab_events > 0 && large.collab_events > 0 {
+        let per_small = small.broadcast_records as f64 / small.collab_events as f64;
+        let per_large = large.broadcast_records as f64 / large.collab_events as f64;
+        assert!(
+            per_large >= per_small,
+            "larger τ must not shrink shares ({per_large} < {per_small})"
+        );
+    }
+}
+
+#[test]
+fn larger_networks_dilute_per_satellite_load() {
+    // total tasks fixed (the paper's setup): a larger grid means fewer
+    // tasks per satellite and a lower SLCR reuse rate.
+    let backend3 = NativeBackend::new(&cfg(3, 108));
+    let r3 = Simulation::new(&cfg(3, 108), &backend3, Scenario::Slcr)
+        .run()
+        .unwrap();
+    let backend6 = NativeBackend::new(&cfg(6, 108));
+    let r6 = Simulation::new(&cfg(6, 108), &backend6, Scenario::Slcr)
+        .run()
+        .unwrap();
+    assert!(
+        r6.reuse_rate < r3.reuse_rate,
+        "rr must fall with scale: {} !< {}",
+        r6.reuse_rate,
+        r3.reuse_rate
+    );
+}
+
+#[test]
+fn experiment_suite_tables_render() {
+    let base = cfg(3, 36);
+    let backend = NativeBackend::new(&base);
+    let reports =
+        exp::run_scale_suite(&base, &backend, &[3], &Scenario::ALL).unwrap();
+    assert_eq!(reports.len(), 5);
+    for table in [
+        exp::table2_markdown(&reports),
+        exp::table3_markdown(&reports),
+        exp::fig3_markdown(&reports),
+    ] {
+        assert!(table.contains("| 3x3 |"), "missing row:\n{table}");
+        assert!(table.contains("SCCR"));
+    }
+    let csv = exp::suite_csv(&reports);
+    assert_eq!(csv.lines().count(), 6);
+}
+
+#[test]
+fn invalid_configs_rejected_at_run_boundary() {
+    let mut c = cfg(3, 36);
+    c.reuse.tau = 0;
+    let backend = NativeBackend::new(&cfg(3, 36));
+    assert!(Simulation::new(&c, &backend, Scenario::Sccr).run().is_err());
+}
+
+#[test]
+fn srs_priority_transfers_most() {
+    let c = cfg(4, 96);
+    let backend = NativeBackend::new(&c);
+    let wl = build_workload(&c);
+    let prep = prepare(&backend, &wl).unwrap();
+    let sccr = Simulation::new(&c, &backend, Scenario::Sccr)
+        .with_workload(&wl)
+        .with_prepared(&prep)
+        .run()
+        .unwrap();
+    let srs_p = Simulation::new(&c, &backend, Scenario::SrsPriority)
+        .with_workload(&wl)
+        .with_prepared(&prep)
+        .run()
+        .unwrap();
+    if srs_p.collab_events > 0 {
+        assert!(
+            srs_p.data_transfer_mb > sccr.data_transfer_mb,
+            "SRS Priority must flood more data"
+        );
+    }
+}
