@@ -12,20 +12,14 @@
 //! make artifacts && cargo run --release --example disaster_monitoring
 //! ```
 
-use ccrsat::compute::{ComputeBackend, NativeBackend, PjrtBackend};
 use ccrsat::config::SimConfig;
 use ccrsat::coordinator::Scenario;
+use ccrsat::harness::experiments as exp;
 use ccrsat::simulator::Simulation;
 
 fn main() -> ccrsat::Result<()> {
     let base = SimConfig::paper_default(5);
-    let backend: Box<dyn ComputeBackend> =
-        if std::path::Path::new("artifacts/manifest.json").exists() {
-            Box::new(PjrtBackend::from_dir("artifacts")?)
-        } else {
-            eprintln!("note: no artifacts found, using the native backend");
-            Box::new(NativeBackend::new(&base))
-        };
+    let backend = exp::default_backend(&base)?;
 
     println!("disaster-monitoring sweep: redundancy ramps up as the event");
     println!("unfolds (dwell probability ↑, scene diversity ↓)\n");

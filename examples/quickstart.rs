@@ -8,9 +8,10 @@
 //! Uses the PJRT backend (the real Pallas/JAX artifacts) when
 //! `artifacts/manifest.json` exists, else the pure-Rust reference backend.
 
-use ccrsat::compute::{ComputeBackend, NativeBackend, PjrtBackend};
+use ccrsat::compute::ComputeBackend;
 use ccrsat::config::SimConfig;
 use ccrsat::coordinator::Scenario;
+use ccrsat::harness::experiments as exp;
 use ccrsat::simulator::Simulation;
 
 fn main() -> ccrsat::Result<()> {
@@ -20,13 +21,7 @@ fn main() -> ccrsat::Result<()> {
     cfg.workload.total_tasks = 90;
     cfg.validate()?;
 
-    let backend: Box<dyn ComputeBackend> =
-        if std::path::Path::new("artifacts/manifest.json").exists() {
-            Box::new(PjrtBackend::from_dir("artifacts")?)
-        } else {
-            eprintln!("note: no artifacts found, using the native backend");
-            Box::new(NativeBackend::new(&cfg))
-        };
+    let backend = exp::default_backend(&cfg)?;
     println!("backend: {}", backend.name());
 
     for scenario in [Scenario::WithoutCr, Scenario::Slcr] {

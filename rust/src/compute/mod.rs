@@ -33,7 +33,13 @@ pub struct Preprocessed {
 }
 
 /// The data-dependent operations Alg. 1/2 need.
-pub trait ComputeBackend {
+///
+/// `Send + Sync` is a supertrait requirement: the experiment harness
+/// ([`crate::harness::experiments`]) shares one backend across scenario
+/// threads, so implementations must use thread-safe interior mutability
+/// (the PJRT engine's compile cache is a `Mutex`, the native backend is
+/// immutable after construction).
+pub trait ComputeBackend: Send + Sync {
     /// Alg. 1 line 1: resize + normalise + grayscale.
     fn preprocess(&self, raw: &ImageData) -> Result<Preprocessed>;
 

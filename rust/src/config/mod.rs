@@ -215,10 +215,16 @@ impl SimConfig {
             return e(format!("beta={} outside [0, 1]", self.reuse.beta));
         }
         if !(0.0..=1.0).contains(&self.reuse.th_co) {
-            return e(format!("th_co={} outside [0, 1]", self.reuse.th_co));
+            return e(format!(
+                "th_co={} out of range: the cooperation threshold must lie in [0, 1]",
+                self.reuse.th_co
+            ));
         }
         if self.reuse.tau == 0 {
-            return e("tau must be >= 1".into());
+            return e(format!(
+                "tau={} out of range: records broadcast per collaboration must be >= 1",
+                self.reuse.tau
+            ));
         }
         if self.cache_capacity_records() == 0 {
             return e("cache too small to hold a single record".into());
@@ -399,6 +405,30 @@ mod tests {
         let mut c = SimConfig::paper_default(5);
         c.reuse.cache_bytes = 1.0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn tau_rejection_names_value_and_range() {
+        let mut c = SimConfig::paper_default(5);
+        c.reuse.tau = 0;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("tau=0"), "message must name the value: {err}");
+        assert!(err.contains(">= 1"), "message must name the range: {err}");
+    }
+
+    #[test]
+    fn th_co_rejection_names_value_and_range() {
+        let mut c = SimConfig::paper_default(5);
+        c.reuse.th_co = 1.5;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("th_co=1.5"), "message must name the value: {err}");
+        assert!(err.contains("[0, 1]"), "message must name the range: {err}");
+
+        let mut c = SimConfig::paper_default(5);
+        c.reuse.th_co = -0.25;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("th_co=-0.25"), "negative value reported: {err}");
+        assert!(err.contains("[0, 1]"), "range reported: {err}");
     }
 
     #[test]

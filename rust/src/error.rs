@@ -1,33 +1,65 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display` / `std::error::Error` implementations: the offline
+//! build image has no crates.io access, so `thiserror` is not available.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for every CCRSat layer.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// PJRT / XLA runtime failure (compile, execute, literal conversion).
-    #[error("xla runtime: {0}")]
-    Xla(#[from] xla::Error),
+    Xla(String),
 
     /// Artifact or manifest problem (missing file, shape mismatch, ...).
-    #[error("artifact: {0}")]
     Artifact(String),
 
     /// Configuration parse/validation failure.
-    #[error("config: {0}")]
     Config(String),
 
     /// JSON parse failure (manifest, reports).
-    #[error("json: {0}")]
     Json(String),
 
     /// Simulation-level invariant violation.
-    #[error("simulation: {0}")]
     Simulation(String),
 
     /// Anything I/O.
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(m) => write!(f, "xla runtime: {m}"),
+            Error::Artifact(m) => write!(f, "artifact: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Json(m) => write!(f, "json: {m}"),
+            Error::Simulation(m) => write!(f, "simulation: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
 }
 
 impl Error {
@@ -49,3 +81,28 @@ impl Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_layer() {
+        assert_eq!(Error::config("bad n").to_string(), "config: bad n");
+        assert_eq!(
+            Error::simulation("oops").to_string(),
+            "simulation: oops"
+        );
+        assert_eq!(Error::artifact("gone").to_string(), "artifact: gone");
+        assert_eq!(Error::Json("eof".into()).to_string(), "json: eof");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(e.to_string().starts_with("io: "));
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(std::error::Error::source(&Error::config("x")).is_none());
+    }
+}

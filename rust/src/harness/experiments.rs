@@ -10,6 +10,28 @@
 //!
 //! All runners share one workload per network scale so every scenario sees
 //! the identical task stream (as the paper's comparative setup requires).
+//!
+//! ## Parallel execution model
+//!
+//! Preparing a scale (rendering images, preprocessing, oracle labels) is
+//! done **once**; the scenario runs that consume it are then fanned out
+//! across OS threads ([`run_jobs_parallel`], one thread per scenario) via
+//! `std::thread::scope`. This is safe and deterministic because:
+//!
+//! * [`PreparedScale`] is immutable after construction and only shared by
+//!   reference (`Sync` holds structurally — plain data, no cells);
+//! * [`ComputeBackend`] requires `Send + Sync`, so one backend serves all
+//!   threads (the native backend is read-only; the PJRT engine's compile
+//!   cache is a mutex);
+//! * each [`Simulation::run`] keeps all mutable state — event queue,
+//!   SCRTs, satellite states, and the `Rc`-shared broadcast records —
+//!   strictly thread-local, so no cross-thread `Arc` is needed;
+//! * every scenario run is a pure function of `(config, workload,
+//!   prepared)`, so parallel results are bit-identical to sequential ones
+//!   (asserted by the `parallel_matches_sequential` tests).
+//!
+//! [`run_scale_suite_timed`] additionally reports the wall-clock speedup
+//! the fan-out achieved over the implied sequential run.
 
 use crate::compute::{ComputeBackend, NativeBackend, PjrtBackend};
 use crate::config::SimConfig;
@@ -28,15 +50,30 @@ pub const TAU_SWEEP: [usize; 8] = [1, 3, 5, 7, 9, 11, 13, 15];
 /// Fig. 5 sweep values.
 pub const THCO_SWEEP: [f64; 9] = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
 
-/// Default backend policy shared by benches/examples: the PJRT artifacts
-/// when present (the real three-layer path), else the native reference.
-pub fn default_backend(cfg: &SimConfig) -> Result<Box<dyn ComputeBackend>> {
-    if std::path::Path::new("artifacts/manifest.json").exists() {
-        Ok(Box::new(PjrtBackend::from_dir("artifacts")?))
+/// Default backend policy shared by the CLI, benches and examples: the
+/// PJRT artifacts when usable (the real three-layer path), else the
+/// native reference. An unusable artifact dir — including builds without
+/// the `pjrt` feature — falls back rather than failing.
+pub fn default_backend_at(
+    dir: &str,
+    cfg: &SimConfig,
+) -> Result<Box<dyn ComputeBackend>> {
+    if std::path::Path::new(dir).join("manifest.json").exists() {
+        match PjrtBackend::from_dir(dir) {
+            Ok(b) => return Ok(Box::new(b)),
+            Err(e) => eprintln!(
+                "note: cannot use artifacts at '{dir}' ({e}); falling back to the native backend"
+            ),
+        }
     } else {
-        eprintln!("note: artifacts/ missing — falling back to the native backend");
-        Ok(Box::new(NativeBackend::new(cfg)))
+        eprintln!("note: no artifacts at '{dir}' — falling back to the native backend");
     }
+    Ok(Box::new(NativeBackend::new(cfg)))
+}
+
+/// [`default_backend_at`] with the conventional `artifacts/` directory.
+pub fn default_backend(cfg: &SimConfig) -> Result<Box<dyn ComputeBackend>> {
+    default_backend_at("artifacts", cfg)
 }
 
 /// A workload + prepared inputs, cached per scale.
@@ -76,24 +113,124 @@ pub fn run_scenario(
         .run()
 }
 
-/// Run one scenario with config tweaks (sweeps) on a prepared scale.
-pub fn run_scenario_with(
+/// Run `(scenario, config)` jobs concurrently against one prepared
+/// workload, one OS thread per job. Results come back in job order, so the
+/// output is deterministic regardless of thread scheduling; a failed job
+/// surfaces its error after all threads have joined.
+pub fn run_jobs_parallel(
     ps: &PreparedScale,
     backend: &dyn ComputeBackend,
-    scenario: Scenario,
-    tweak: impl Fn(&mut SimConfig),
-) -> Result<RunReport> {
-    let mut cfg = ps.cfg.clone();
-    tweak(&mut cfg);
-    cfg.validate()?;
-    Simulation::new(&cfg, backend, scenario)
-        .with_workload(&ps.workload)
-        .with_prepared(&ps.prepared)
-        .run()
+    jobs: &[(Scenario, SimConfig)],
+) -> Result<Vec<RunReport>> {
+    let mut results: Vec<Option<Result<RunReport>>> =
+        (0..jobs.len()).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for (slot, job) in results.iter_mut().zip(jobs) {
+            scope.spawn(move || {
+                let (scenario, cfg) = (job.0, &job.1);
+                *slot = Some(
+                    Simulation::new(cfg, backend, scenario)
+                        .with_workload(&ps.workload)
+                        .with_prepared(&ps.prepared)
+                        .run(),
+                );
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|r| r.expect("scenario worker completed"))
+        .collect()
+}
+
+/// Run several scenarios of one prepared scale concurrently (the shared
+/// `Prepared` workload guarantees every scenario sees the identical task
+/// stream, exactly as in the sequential path).
+pub fn run_scenarios_parallel(
+    ps: &PreparedScale,
+    backend: &dyn ComputeBackend,
+    scenarios: &[Scenario],
+) -> Result<Vec<RunReport>> {
+    let jobs: Vec<(Scenario, SimConfig)> =
+        scenarios.iter().map(|&s| (s, ps.cfg.clone())).collect();
+    run_jobs_parallel(ps, backend, &jobs)
+}
+
+/// Wall-clock accounting of a parallel suite run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SuiteTiming {
+    /// Sum of the per-scenario wall-clock seconds, as measured inside the
+    /// concurrent runs. On an oversubscribed host this includes time the
+    /// threads spent descheduled, so it is an *upper bound* on what a
+    /// true sequential run would have cost (excluding preparation).
+    pub sequential_s: f64,
+    /// Observed wall-clock seconds of the parallel fan-out.
+    pub parallel_s: f64,
+}
+
+impl SuiteTiming {
+    /// Speedup of the fan-out over the implied sequential run (an upper
+    /// bound when scenario threads contend for cores — see
+    /// [`SuiteTiming::sequential_s`]).
+    pub fn speedup(&self) -> f64 {
+        if self.parallel_s > 0.0 {
+            self.sequential_s / self.parallel_s
+        } else {
+            1.0
+        }
+    }
+
+    /// One-line human summary for run reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "parallel harness: {:.2}s wall for {:.2}s of in-thread scenario work (speedup ≤ {:.2}x)",
+            self.parallel_s,
+            self.sequential_s,
+            self.speedup()
+        )
+    }
+}
+
+/// Tables II & III + Fig. 3: all scenarios × the requested scales, with
+/// scenario runs fanned out across threads per scale. Also returns the
+/// wall-clock speedup achieved over the implied sequential run.
+pub fn run_scale_suite_timed(
+    base: &SimConfig,
+    backend: &dyn ComputeBackend,
+    scales: &[usize],
+    scenarios: &[Scenario],
+) -> Result<(Vec<RunReport>, SuiteTiming)> {
+    let mut out = Vec::with_capacity(scales.len() * scenarios.len());
+    let mut parallel_s = 0.0;
+    for &n in scales {
+        let ps = prepare_scale(base, backend, n)?;
+        let t0 = std::time::Instant::now();
+        out.extend(run_scenarios_parallel(&ps, backend, scenarios)?);
+        parallel_s += t0.elapsed().as_secs_f64();
+    }
+    let sequential_s = out.iter().map(|r| r.wallclock_s).sum();
+    Ok((
+        out,
+        SuiteTiming {
+            sequential_s,
+            parallel_s,
+        },
+    ))
 }
 
 /// Tables II & III + Fig. 3: all scenarios × the requested scales.
 pub fn run_scale_suite(
+    base: &SimConfig,
+    backend: &dyn ComputeBackend,
+    scales: &[usize],
+    scenarios: &[Scenario],
+) -> Result<Vec<RunReport>> {
+    Ok(run_scale_suite_timed(base, backend, scales, scenarios)?.0)
+}
+
+/// Sequential reference path of [`run_scale_suite`] — kept for determinism
+/// cross-checks and single-core environments.
+pub fn run_scale_suite_sequential(
     base: &SimConfig,
     backend: &dyn ComputeBackend,
     scales: &[usize],
@@ -120,14 +257,18 @@ pub fn tau_sweep(
     let ps = prepare_scale(base, backend, n)?;
     let mut rows = Vec::with_capacity(taus.len());
     for &tau in taus {
-        let init = run_scenario_with(&ps, backend, Scenario::SccrInit, |c| {
-            c.reuse.tau = tau
-        })?;
-        let full =
-            run_scenario_with(&ps, backend, Scenario::Sccr, |c| c.reuse.tau = tau)?;
+        let mut cfg = ps.cfg.clone();
+        cfg.reuse.tau = tau;
+        cfg.validate()?;
+        // Both series of one sweep point run concurrently.
+        let jobs = [
+            (Scenario::SccrInit, cfg.clone()),
+            (Scenario::Sccr, cfg),
+        ];
+        let reports = run_jobs_parallel(&ps, backend, &jobs)?;
         rows.push((
             tau as f64,
-            vec![init.completion_time, full.completion_time],
+            reports.iter().map(|r| r.completion_time).collect(),
         ));
     }
     Ok(rows)
@@ -145,16 +286,20 @@ pub fn thco_sweep(
     let slcr = run_scenario(&ps, backend, Scenario::Slcr)?;
     let mut rows = Vec::with_capacity(thcos.len());
     for &th in thcos {
-        let init = run_scenario_with(&ps, backend, Scenario::SccrInit, |c| {
-            c.reuse.th_co = th
-        })?;
-        let full =
-            run_scenario_with(&ps, backend, Scenario::Sccr, |c| c.reuse.th_co = th)?;
+        let mut cfg = ps.cfg.clone();
+        cfg.reuse.th_co = th;
+        cfg.validate()?;
+        // Both series of one sweep point run concurrently.
+        let jobs = [
+            (Scenario::SccrInit, cfg.clone()),
+            (Scenario::Sccr, cfg),
+        ];
+        let reports = run_jobs_parallel(&ps, backend, &jobs)?;
         rows.push((
             th,
             vec![
-                init.completion_time,
-                full.completion_time,
+                reports[0].completion_time,
+                reports[1].completion_time,
                 slcr.completion_time,
             ],
         ));
@@ -266,5 +411,82 @@ mod tests {
         assert_eq!(rows[0].1.len(), 3);
         // SLCR reference identical across rows (it ignores th_co)
         assert_eq!(rows[0].1[2], rows[1].1[2]);
+    }
+
+    /// All deterministic RunReport fields (everything but wallclock_s).
+    fn assert_reports_identical(a: &RunReport, b: &RunReport) {
+        assert_eq!(a.scenario, b.scenario);
+        assert_eq!(a.n, b.n);
+        assert_eq!(a.completion_time, b.completion_time);
+        assert_eq!(a.compute_seconds, b.compute_seconds);
+        assert_eq!(a.comm_seconds, b.comm_seconds);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.reuse_rate, b.reuse_rate);
+        assert_eq!(a.cpu_occupancy, b.cpu_occupancy);
+        assert_eq!(a.reuse_accuracy, b.reuse_accuracy);
+        assert_eq!(a.data_transfer_mb, b.data_transfer_mb);
+        assert_eq!(a.total_tasks, b.total_tasks);
+        assert_eq!(a.reused_tasks, b.reused_tasks);
+        assert_eq!(a.collab_events, b.collab_events);
+        assert_eq!(a.expanded_events, b.expanded_events);
+        assert_eq!(a.aborted_collabs, b.aborted_collabs);
+        assert_eq!(a.broadcast_records, b.broadcast_records);
+        assert_eq!(a.mean_latency, b.mean_latency);
+        assert_eq!(a.p95_latency, b.p95_latency);
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let base = small_base();
+        let backend = NativeBackend::new(&base);
+        let par = run_scale_suite(&base, &backend, &[3], &Scenario::ALL).unwrap();
+        let seq =
+            run_scale_suite_sequential(&base, &backend, &[3], &Scenario::ALL)
+                .unwrap();
+        assert_eq!(par.len(), seq.len());
+        for (a, b) in par.iter().zip(&seq) {
+            assert_reports_identical(a, b);
+        }
+    }
+
+    #[test]
+    fn parallel_preserves_scenario_order() {
+        let base = small_base();
+        let backend = NativeBackend::new(&base);
+        let ps = prepare_scale(&base, &backend, 3).unwrap();
+        let reports =
+            run_scenarios_parallel(&ps, &backend, &Scenario::ALL).unwrap();
+        assert_eq!(reports.len(), Scenario::ALL.len());
+        for (r, &s) in reports.iter().zip(Scenario::ALL.iter()) {
+            assert_eq!(r.scenario, s);
+        }
+    }
+
+    #[test]
+    fn suite_timing_accounts_for_all_scenarios() {
+        let base = small_base();
+        let backend = NativeBackend::new(&base);
+        let (reports, timing) =
+            run_scale_suite_timed(&base, &backend, &[3], &Scenario::ALL).unwrap();
+        assert_eq!(reports.len(), 5);
+        let sum: f64 = reports.iter().map(|r| r.wallclock_s).sum();
+        assert_eq!(timing.sequential_s, sum);
+        assert!(timing.parallel_s > 0.0);
+        assert!(timing.speedup() > 0.0);
+        assert!(timing.summary().contains("speedup"));
+    }
+
+    #[test]
+    fn run_jobs_parallel_propagates_config_errors() {
+        let base = small_base();
+        let backend = NativeBackend::new(&base);
+        let ps = prepare_scale(&base, &backend, 3).unwrap();
+        let mut bad = ps.cfg.clone();
+        bad.reuse.tau = 0; // invalid: rejected at the run boundary
+        let jobs = [
+            (Scenario::Slcr, ps.cfg.clone()),
+            (Scenario::Sccr, bad),
+        ];
+        assert!(run_jobs_parallel(&ps, &backend, &jobs).is_err());
     }
 }

@@ -26,6 +26,12 @@
 //! let report = Simulation::new(&cfg, &backend, Scenario::Sccr).run().unwrap();
 //! println!("{}", report.summary());
 //! ```
+//!
+//! See `README.md` for the repository layout and `docs/ARCHITECTURE.md`
+//! for the event flow and module map.
+
+#![deny(rustdoc::broken_intra_doc_links)]
+#![forbid(unsafe_code)]
 
 pub mod compute;
 pub mod config;

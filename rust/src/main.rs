@@ -167,15 +167,9 @@ fn load_backend(flags: &Flags, cfg: &SimConfig) -> Result<Box<dyn ComputeBackend
         Some("native") => Ok(Box::new(NativeBackend::new(cfg))),
         Some("pjrt") => Ok(Box::new(PjrtBackend::from_dir(dir)?)),
         Some(other) => Err(Error::config(format!("unknown backend '{other}'"))),
-        None => {
-            // default: pjrt when artifacts are present, else native
-            if std::path::Path::new(dir).join("manifest.json").exists() {
-                Ok(Box::new(PjrtBackend::from_dir(dir)?))
-            } else {
-                eprintln!("note: no artifacts at '{dir}', using native backend");
-                Ok(Box::new(NativeBackend::new(cfg)))
-            }
-        }
+        // default: pjrt when artifacts are usable, else native. Only an
+        // explicit `--backend pjrt` hard-errors on unusable artifacts.
+        None => exp::default_backend_at(dir, cfg),
     }
 }
 
@@ -213,17 +207,20 @@ fn cmd_reproduce(flags: &Flags) -> Result<()> {
     let needs_suite = matches!(experiment, "table2" | "table3" | "fig3" | "all");
     let suite = if needs_suite {
         eprintln!(
-            "running {} scenarios × {:?} scales on backend '{}'...",
+            "running {} scenarios × {:?} scales on backend '{}' ({} threads per scale)...",
             Scenario::ALL.len(),
             scales,
-            backend.name()
+            backend.name(),
+            Scenario::ALL.len(),
         );
-        Some(exp::run_scale_suite(
+        let (reports, timing) = exp::run_scale_suite_timed(
             &cfg,
             backend.as_ref(),
             &scales,
             &Scenario::ALL,
-        )?)
+        )?;
+        eprintln!("{}", timing.summary());
+        Some(reports)
     } else {
         None
     };

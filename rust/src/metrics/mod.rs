@@ -1,6 +1,24 @@
 //! Run metrics — the paper's five evaluation criteria (Sec. V-A) plus
 //! diagnostics, with markdown/CSV table emission shaped like the paper's
 //! tables and figures.
+//!
+//! The simulator emits one [`TaskLog`] per completed task and one
+//! [`SatSummary`] per satellite; [`aggregate`] folds them into a
+//! [`RunReport`] carrying the five criteria:
+//!
+//! 1. **task completion time** `ς = α·Ψ + χ` (eq. 9) — total communication
+//!    plus computation seconds across the network;
+//! 2. **reuse rate** — reused tasks / total tasks;
+//! 3. **CPU occupancy** — mean per-satellite busy fraction;
+//! 4. **reuse accuracy** — correctly reused / reused (1.0 when nothing
+//!    was reused);
+//! 5. **data transfer volume** — every byte crossing an inter-satellite
+//!    link, in MB.
+//!
+//! [`scale_scenario_table`] and [`sweep_table`] render the paper's table
+//! and figure layouts in markdown; [`reports_to_csv`] feeds plotting
+//! pipelines. Reports serialize to JSON via [`RunReport::to_json`] for the
+//! CLI's `--json` mode.
 
 use crate::coordinator::Scenario;
 use crate::util::json::Json;
@@ -89,6 +107,9 @@ pub struct RunReport {
     pub per_satellite: Vec<SatSummary>,
     pub tasks: Vec<TaskLog>,
     /// Wall-clock seconds the simulation itself took (perf accounting).
+    /// When the run came from the parallel experiment harness, scenario
+    /// threads contend for cores, so this includes descheduled time —
+    /// compare wallclocks only between runs executed the same way.
     pub wallclock_s: f64,
 }
 

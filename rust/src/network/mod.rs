@@ -1,4 +1,13 @@
 //! Constellation substrate: grid topology and the ISL communication model.
+//!
+//! * [`topology`] — the N×N constellation grid of the paper's Fig. 1:
+//!   row-major satellite ids, 4-neighbour inter-satellite links, Manhattan
+//!   routing distances, and the Chebyshev collaboration areas Alg. 2
+//!   searches ([`GridTopology::area`] / [`GridTopology::expand_area`]);
+//! * [`comm`] — the link-budget physics of eqs. (1)–(5): free-space path
+//!   loss, SNR and Shannon rate per link class, and the spanning-tree
+//!   broadcast planner ([`CommModel::plan_broadcast`]) that prices every
+//!   record share in bytes and airtime for the data-transfer criterion.
 
 pub mod comm;
 pub mod topology;

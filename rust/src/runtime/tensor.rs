@@ -1,8 +1,9 @@
 //! Host-side tensors crossing the PJRT boundary.
 //!
 //! A deliberately small representation: contiguous row-major data plus a
-//! shape, convertible to/from [`xla::Literal`]. Only the two element types
-//! the artifacts use (f32, u32) are supported.
+//! shape, convertible to/from `xla::Literal` when the `pjrt` feature is
+//! enabled. Only the two element types the artifacts use (f32, u32) are
+//! supported.
 
 use crate::error::{Error, Result};
 use crate::runtime::manifest::{DType, TensorSpec};
@@ -99,7 +100,8 @@ impl Tensor {
         self.shape() == spec.shape.as_slice() && self.dtype() == spec.dtype
     }
 
-    /// Convert to an [`xla::Literal`] with the right shape.
+    /// Convert to an `xla::Literal` with the right shape.
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -110,7 +112,8 @@ impl Tensor {
         Ok(lit.reshape(&dims)?)
     }
 
-    /// Convert from an [`xla::Literal`] using the manifest spec for shape.
+    /// Convert from an `xla::Literal` using the manifest spec for shape.
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Self> {
         match spec.dtype {
             DType::F32 => Tensor::f32(spec.shape.clone(), lit.to_vec::<f32>()?),

@@ -1,5 +1,16 @@
 //! Per-satellite server state: an M/M/1-style FIFO server on the virtual
 //! clock, plus the counters the SRS metric (eq. 11) reads.
+//!
+//! Each satellite in the simulated constellation is a single-server FIFO
+//! queue: tasks arrive (Poisson per satellite), wait for the on-board CPU,
+//! are served for either the full-compute or the reuse-lookup cost, and
+//! complete. [`SatelliteState`] tracks the server clock (`next_free`), the
+//! accumulated busy time, and the reuse counters from which
+//! [`SatelliteState::reuse_rate`] and [`SatelliteState::cpu_occupancy`]
+//! derive — the two inputs of the SRS metric ([`crate::coordinator::srs`]).
+//! The collaboration bookkeeping (`last_collab_request`,
+//! `collab_requests`, `times_source`) feeds Alg. 2's trigger and the
+//! per-satellite diagnostics in [`crate::metrics::SatSummary`].
 
 use crate::workload::SatId;
 

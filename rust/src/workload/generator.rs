@@ -9,7 +9,7 @@
 //!   lag (`STREAM_LAG` tasks): the leader processes scenes its followers
 //!   will see shortly — exactly the redundancy collaborative reuse mines;
 //! * adjacent orbits inherit a fraction of each other's scenes
-//!   ([`INTER_ORBIT_SHARE`]), like overlapping swaths of adjacent planes;
+//!   (`INTER_ORBIT_SHARE`), like overlapping swaths of adjacent planes;
 //! * per-orbit *redundancy heterogeneity* (run lengths drawn around
 //!   `scene_repeat_prob ± repeat_prob_spread/2`) creates the SRS contrast
 //!   between reuse-rich and reuse-poor satellites that Alg. 2 exploits;

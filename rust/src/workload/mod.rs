@@ -5,8 +5,19 @@
 //! duplicates, scenes repeat along a satellite's ground track, and
 //! neighbouring satellites observe overlapping scene pools. The procedural
 //! generator reproduces exactly that structure with controllable knobs
-//! (`WorkloadConfig`), while the per-record *payload size* used by the
-//! communication model stays at the paper's 20.5 MB per image.
+//! ([`crate::config::WorkloadConfig`]), while the per-record *payload
+//! size* used by the communication model stays at the paper's 20.5 MB per
+//! image.
+//!
+//! Module map:
+//!
+//! * [`generator`] — who sees which scene, when: regional ground-track
+//!   streams with slot lag, inter-orbit inheritance and Poisson arrivals,
+//!   assembled by [`build_workload`] into a [`Workload`] of [`Task`]s;
+//! * [`texture`] — procedural land-use texture synthesis: each
+//!   [`SceneSpec`] renders a class-specific parametric pattern, and
+//!   repeated captures differ only by sensor noise, giving the
+//!   high-intra / low-inter scene similarity the SSIM gate relies on.
 
 pub mod generator;
 pub mod texture;

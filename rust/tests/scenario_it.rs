@@ -186,6 +186,50 @@ fn invalid_configs_rejected_at_run_boundary() {
 }
 
 #[test]
+fn parallel_harness_matches_sequential_runs() {
+    // The tentpole invariant: fanning scenario runs out across threads
+    // against one shared Prepared workload must be observationally
+    // identical to running them one after another.
+    let c = cfg(3, 45);
+    let backend = NativeBackend::new(&c);
+    let ps = exp::prepare_scale(&c, &backend, 3).unwrap();
+    let par = exp::run_scenarios_parallel(&ps, &backend, &Scenario::ALL).unwrap();
+    assert_eq!(par.len(), Scenario::ALL.len());
+    for (report, &scenario) in par.iter().zip(Scenario::ALL.iter()) {
+        assert_eq!(report.scenario, scenario, "order must be preserved");
+        let seq = exp::run_scenario(&ps, &backend, scenario).unwrap();
+        assert_eq!(report.completion_time, seq.completion_time, "{scenario}");
+        assert_eq!(report.compute_seconds, seq.compute_seconds, "{scenario}");
+        assert_eq!(report.comm_seconds, seq.comm_seconds, "{scenario}");
+        assert_eq!(report.makespan, seq.makespan, "{scenario}");
+        assert_eq!(report.reuse_rate, seq.reuse_rate, "{scenario}");
+        assert_eq!(report.reuse_accuracy, seq.reuse_accuracy, "{scenario}");
+        assert_eq!(report.data_transfer_mb, seq.data_transfer_mb, "{scenario}");
+        assert_eq!(report.reused_tasks, seq.reused_tasks, "{scenario}");
+        assert_eq!(report.total_tasks, seq.total_tasks, "{scenario}");
+        assert_eq!(report.cpu_occupancy, seq.cpu_occupancy, "{scenario}");
+        assert_eq!(report.mean_latency, seq.mean_latency, "{scenario}");
+        assert_eq!(report.p95_latency, seq.p95_latency, "{scenario}");
+        assert_eq!(report.collab_events, seq.collab_events, "{scenario}");
+        assert_eq!(report.expanded_events, seq.expanded_events, "{scenario}");
+        assert_eq!(report.aborted_collabs, seq.aborted_collabs, "{scenario}");
+        assert_eq!(report.broadcast_records, seq.broadcast_records, "{scenario}");
+    }
+}
+
+#[test]
+fn timed_suite_reports_fanout_speedup_inputs() {
+    let c = cfg(3, 36);
+    let backend = NativeBackend::new(&c);
+    let (reports, timing) =
+        exp::run_scale_suite_timed(&c, &backend, &[3], &Scenario::ALL).unwrap();
+    assert_eq!(reports.len(), Scenario::ALL.len());
+    assert!(timing.parallel_s > 0.0);
+    assert!(timing.sequential_s > 0.0);
+    assert!(timing.speedup() > 0.0);
+}
+
+#[test]
 fn srs_priority_transfers_most() {
     let c = cfg(4, 96);
     let backend = NativeBackend::new(&c);
