@@ -1,121 +1,22 @@
 //! Hot-path microbenchmarks — the L3 performance budget.
 //!
-//! Measures every operation on the per-task path (SCRT nearest-neighbour,
-//! insert/evict, top-τ, native SSIM/LSH, PJRT artifact dispatch) plus the
-//! end-to-end scenario throughput. Results feed EXPERIMENTS.md §Perf.
+//! Thin wrapper over the shared suite in `ccrsat::harness::hotpath`
+//! (also behind `ccrsat bench` and the CI perf job): measures every
+//! operation on the per-task path (SCRT nearest-neighbour, identity
+//! probe, insert/evict, top-τ, native SSIM/LSH, PJRT artifact dispatch)
+//! plus end-to-end scenario throughput, and emits the machine-readable
+//! `BENCH_hotpath.json` artifact. Pass `--scale` for the
+//! production-scale SCRT tables and the 11×11 / 15×15 grids.
 
-use std::time::Duration;
-
-use ccrsat::compute::{native::ssim_global, ComputeBackend, NativeBackend, Preprocessed};
-use ccrsat::config::SimConfig;
-use ccrsat::coordinator::scrt::{Record, Scrt};
-use ccrsat::coordinator::Scenario;
-use ccrsat::harness::bench::{black_box, Bencher};
-use ccrsat::simulator::{prepare, Simulation};
-use ccrsat::util::rng::Rng;
-use ccrsat::workload::build_workload;
-
-fn fake_pre(rng: &mut Rng) -> Preprocessed {
-    let pd: Vec<f32> = (0..3072).map(|_| rng.f32()).collect();
-    let gray: Vec<f32> = (0..1024).map(|_| rng.f32()).collect();
-    Preprocessed {
-        h: 32,
-        w: 32,
-        pd,
-        gray,
-    }
-}
-
-fn fake_record(id: usize, rng: &mut Rng) -> Record {
-    Record {
-        id,
-        pre: fake_pre(rng),
-        task_type: 0,
-        result: (id % 21) as u32,
-        reuse_count: (id % 7) as u32,
-        last_used: id as f64,
-        origin: id % 25,
-    }
-}
+use ccrsat::harness::hotpath::{run_suite, HotpathOpts, DEFAULT_OUT};
 
 fn main() {
-    let mut b = Bencher::new("hotpath").with_budget(
-        Duration::from_millis(150),
-        Duration::from_millis(700),
-    );
-    let mut rng = Rng::new(42);
-
-    // ---- SCRT operations -------------------------------------------------
-    let mut scrt = Scrt::new(4, 32);
-    for i in 0..31 {
-        scrt.insert((i % 4) as u32, fake_record(i, &mut rng));
-    }
-    let probe = fake_pre(&mut rng);
-    b.bench("scrt::nearest (31 records, 3072-dim)", || {
-        black_box(scrt.nearest(1, 0, &probe));
-    });
-    b.bench("scrt::top_tau(11)", || {
-        black_box(scrt.top_tau(11));
-    });
-    let mut i = 1000;
-    b.bench("scrt::insert+evict (full table)", || {
-        i += 1;
-        scrt.insert((i % 4) as u32, fake_record(i, &mut rng));
-    });
-
-    // ---- native kernels ----------------------------------------------------
-    let a = fake_pre(&mut rng);
-    let c = fake_pre(&mut rng);
-    b.bench("native ssim_global (1024 px)", || {
-        black_box(ssim_global(&a.gray, &c.gray));
-    });
-    let cfg = SimConfig::paper_default(5);
-    let native = NativeBackend::new(&cfg);
-    b.bench("native lsh_bucket (p_k=2, 3072-dim)", || {
-        black_box(native.lsh_bucket(&a).unwrap());
-    });
-    b.bench("native classify (21 classes)", || {
-        black_box(native.classify(&a).unwrap());
-    });
-
-    // ---- PJRT dispatch (only when artifacts exist) -------------------------
-    if std::path::Path::new("artifacts/manifest.json").exists() {
-        let pjrt =
-            ccrsat::compute::PjrtBackend::from_dir("artifacts").expect("engine");
-        pjrt.engine().warmup().expect("warmup");
-        b.bench("pjrt ssim dispatch", || {
-            black_box(pjrt.ssim(&a, &c).unwrap());
-        });
-        b.bench("pjrt lsh_hash dispatch", || {
-            black_box(pjrt.lsh_bucket(&a).unwrap());
-        });
-        b.bench("pjrt classify dispatch", || {
-            black_box(pjrt.classify(&a).unwrap());
-        });
-    }
-
-    // ---- end-to-end scenario (native backend, 3×3/45 tasks) ----------------
-    let mut small = SimConfig::paper_default(3);
-    small.workload.total_tasks = 45;
-    let backend = NativeBackend::new(&small);
-    let wl = build_workload(&small);
-    let prep = prepare(&backend, &wl).expect("prepare");
-    b.bench("simulate SLCR 3x3/45 (native, prepared)", || {
-        let r = Simulation::new(&small, &backend, Scenario::Slcr)
-            .with_workload(&wl)
-            .with_prepared(&prep)
-            .run()
-            .unwrap();
-        black_box(r.reused_tasks);
-    });
-    b.bench("simulate SCCR 3x3/45 (native, prepared)", || {
-        let r = Simulation::new(&small, &backend, Scenario::Sccr)
-            .with_workload(&wl)
-            .with_prepared(&prep)
-            .run()
-            .unwrap();
-        black_box(r.reused_tasks);
-    });
-
+    let opts = HotpathOpts {
+        scale: std::env::args().any(|a| a == "--scale"),
+        ..HotpathOpts::default()
+    };
+    let b = run_suite(&opts).expect("hotpath suite");
     b.report();
+    b.write_json(DEFAULT_OUT).expect("write bench artifact");
+    eprintln!("wrote {DEFAULT_OUT} ({} measurements)", b.results().len());
 }

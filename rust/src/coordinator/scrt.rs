@@ -7,10 +7,32 @@
 //! evicted — reuse *value*, then LRU, mirroring how the paper reasons about
 //! high-value records.
 //!
-//! Nearest-neighbour search inside a bucket is an exact L2 scan over the
-//! pre-processed feature vectors (what FALCONN does after hashing); the
-//! expensive SSIM gate (eq. 12) then runs on the single best candidate, via
-//! the compute backend — exactly Alg. 1 lines 2 & 8.
+//! ## Indexed hot path
+//!
+//! Every per-task operation is backed by a maintained index instead of a
+//! whole-table scan (the paper's gains depend on lookups staying far
+//! cheaper than recomputation, so the table is a first-class data
+//! structure, not a scan):
+//!
+//! * **identity** — an id → `(bucket, slot)` map makes [`Scrt::contains`]
+//!   and the broadcast-merge dedup (Sec. IV-A step 4) O(1);
+//! * **value order** — an ordered index over ascending
+//!   `(N_t, last_used, id)` keys serves both ends of the value spectrum:
+//!   eviction pops the minimum in O(log n) and [`Scrt::top_tau`] reads the
+//!   τ maxima in O(τ + log n), replacing the old full-table victim scan
+//!   and full sort. `last_used` is keyed through the IEEE-754 total order
+//!   (`f64::total_cmp` semantics), so a NaN recency can never panic the
+//!   comparator; ties break on the record id, deterministically;
+//! * **features** — each bucket stores its feature vectors
+//!   structure-of-arrays style in one contiguous `Vec<f32>` (stride = pd
+//!   length), so the exact nearest-neighbour scan in [`Scrt::nearest`] is
+//!   a cache-friendly chunked L2 pass (what FALCONN does after hashing)
+//!   instead of a pointer chase through per-record heap allocations.
+//!
+//! The expensive SSIM gate (eq. 12) then runs on the single best
+//! candidate, via the compute backend — exactly Alg. 1 lines 2 & 8.
+
+use std::collections::{BTreeSet, HashMap};
 
 use crate::compute::Preprocessed;
 use crate::workload::SatId;
@@ -19,7 +41,10 @@ use crate::workload::SatId;
 /// copies keep the id so "already cached" (Sec. IV-A step 4) is decidable.
 pub type RecordId = usize;
 
-/// One reuse record.
+/// One reuse record in exchange form — what callers insert and what
+/// broadcasts carry. Inside the table the fields are split across the
+/// bucket's SoA feature array and the per-slot metadata; [`Scrt::top_tau`]
+/// reassembles full records for the wire.
 #[derive(Clone, Debug)]
 pub struct Record {
     pub id: RecordId,
@@ -38,12 +63,85 @@ pub struct Record {
     pub origin: SatId,
 }
 
+/// Borrowed view of one cached record, reassembled by reference from the
+/// table's SoA storage. This is the read API for callers that previously
+/// borrowed a whole `&Record`.
+#[derive(Clone, Copy, Debug)]
+pub struct RecordView<'a> {
+    pub id: RecordId,
+    pub task_type: u16,
+    pub result: u32,
+    pub reuse_count: u32,
+    pub last_used: f64,
+    pub origin: SatId,
+    /// Feature vector `PD_t`, borrowed from the bucket's SoA array.
+    pub pd: &'a [f32],
+    /// Grayscale plane for the SSIM gate.
+    pub gray: &'a [f32],
+    pub h: usize,
+    pub w: usize,
+}
+
+/// Per-slot metadata. The feature vector deliberately does *not* live
+/// here: it sits in the owning bucket's contiguous `feats` array so the
+/// NN scan never chases per-record heap pointers.
+#[derive(Clone, Debug)]
+struct Slot {
+    id: RecordId,
+    task_type: u16,
+    result: u32,
+    reuse_count: u32,
+    last_used: f64,
+    origin: SatId,
+    /// Stored input with `pd` intentionally empty (it was moved into the
+    /// bucket's `feats`); `h`/`w`/`gray` remain — exactly what the SSIM
+    /// gate consumes via [`Scrt::candidate_pre`].
+    gray_pre: Preprocessed,
+}
+
+/// One LSH bucket: SoA feature storage plus parallel slot metadata.
+/// Slot `i`'s feature vector occupies `feats[i * dim .. (i + 1) * dim]`.
+#[derive(Clone, Debug, Default)]
+struct Bucket {
+    feats: Vec<f32>,
+    slots: Vec<Slot>,
+}
+
+/// Ascending eviction/broadcast value key: `(N_t, recency, id)`.
+type ValueKey = (u32, u64, RecordId);
+
+/// Map an `f64` recency onto a `u64` whose unsigned order equals the
+/// IEEE-754 total order (`f64::total_cmp`): NaN can never panic the value
+/// index, it simply orders at the extremes (positive NaN above `+inf`,
+/// negative NaN below `-inf`).
+#[inline]
+fn time_key(t: f64) -> u64 {
+    let bits = t.to_bits();
+    if bits >> 63 == 1 {
+        !bits
+    } else {
+        bits | (1u64 << 63)
+    }
+}
+
+#[inline]
+fn value_key(reuse_count: u32, last_used: f64, id: RecordId) -> ValueKey {
+    (reuse_count, time_key(last_used), id)
+}
+
 /// The reuse table of one satellite.
 #[derive(Clone, Debug)]
 pub struct Scrt {
-    buckets: Vec<Vec<Record>>,
+    buckets: Vec<Bucket>,
+    /// Identity index: record id → (bucket, slot). Slots move on
+    /// eviction (`swap_remove`), so the index is updated in lock-step.
+    index: HashMap<RecordId, (u32, usize)>,
+    /// Value index, ascending `(N_t, recency, id)`: the minimum end is
+    /// the eviction victim, the maximum end feeds `top_tau`.
+    order: BTreeSet<ValueKey>,
+    /// Feature stride (pd length), fixed by the first insert.
+    dim: Option<usize>,
     capacity: usize,
-    len: usize,
     /// Total evictions (observability).
     pub evictions: u64,
 }
@@ -54,19 +152,21 @@ impl Scrt {
         assert!(num_buckets.is_power_of_two(), "buckets must be 2^p_k");
         assert!(capacity > 0, "capacity must be positive");
         Scrt {
-            buckets: vec![Vec::new(); num_buckets],
+            buckets: vec![Bucket::default(); num_buckets],
+            index: HashMap::new(),
+            order: BTreeSet::new(),
+            dim: None,
             capacity,
-            len: 0,
             evictions: 0,
         }
     }
 
     pub fn len(&self) -> usize {
-        self.len
+        self.index.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len == 0
+        self.index.is_empty()
     }
 
     pub fn capacity(&self) -> usize {
@@ -77,26 +177,36 @@ impl Scrt {
         self.buckets.len()
     }
 
-    /// Is a record with this identity already cached?
+    /// Is a record with this identity already cached? O(1).
     pub fn contains(&self, id: RecordId) -> bool {
-        self.buckets.iter().any(|b| b.iter().any(|r| r.id == id))
+        self.index.contains_key(&id)
+    }
+
+    /// Where a record currently lives, if cached. O(1).
+    pub fn location(&self, id: RecordId) -> Option<(u32, usize)> {
+        self.index.get(&id).copied()
     }
 
     /// Exact nearest neighbour (min L2 over `pd`) within a bucket, filtered
-    /// by task type. Returns `(bucket_slot, distance²)`.
+    /// by task type. Returns `(bucket_slot, distance²)`. The scan walks the
+    /// bucket's contiguous SoA feature array in stride-`dim` chunks.
     pub fn nearest(
         &self,
         bucket: u32,
         task_type: u16,
         pre: &Preprocessed,
     ) -> Option<(usize, f32)> {
+        let dim = self.dim?;
+        debug_assert_eq!(pre.pd.len(), dim, "probe stride mismatch");
         let b = &self.buckets[bucket as usize];
         let mut best: Option<(usize, f32)> = None;
-        for (slot, rec) in b.iter().enumerate() {
-            if rec.task_type != task_type {
+        for (slot, (s, feat)) in
+            b.slots.iter().zip(b.feats.chunks_exact(dim)).enumerate()
+        {
+            if s.task_type != task_type {
                 continue;
             }
-            let d = l2_sq(&rec.pre.pd, &pre.pd);
+            let d = l2_sq(feat, &pre.pd);
             if best.map_or(true, |(_, bd)| d < bd) {
                 best = Some((slot, d));
             }
@@ -104,34 +214,93 @@ impl Scrt {
         best
     }
 
-    /// Borrow a record by (bucket, slot).
-    pub fn record(&self, bucket: u32, slot: usize) -> &Record {
-        &self.buckets[bucket as usize][slot]
+    /// Borrow a record view by (bucket, slot).
+    pub fn view(&self, bucket: u32, slot: usize) -> RecordView<'_> {
+        let dim = self.dim.expect("viewing a slot implies a prior insert");
+        let b = &self.buckets[bucket as usize];
+        let s = &b.slots[slot];
+        RecordView {
+            id: s.id,
+            task_type: s.task_type,
+            result: s.result,
+            reuse_count: s.reuse_count,
+            last_used: s.last_used,
+            origin: s.origin,
+            pd: &b.feats[slot * dim..(slot + 1) * dim],
+            gray: &s.gray_pre.gray,
+            h: s.gray_pre.h,
+            w: s.gray_pre.w,
+        }
+    }
+
+    /// The stored input of a candidate, for the SSIM gate (Alg. 1 line 8).
+    ///
+    /// The returned [`Preprocessed`] carries the grayscale plane and dims;
+    /// its `pd` is **empty** — the feature vector lives in the bucket's SoA
+    /// array (borrow it via [`Scrt::view`] when needed). Both compute
+    /// backends gate on the gray plane only, per eq. (12).
+    pub fn candidate_pre(&self, bucket: u32, slot: usize) -> &Preprocessed {
+        &self.buckets[bucket as usize].slots[slot].gray_pre
     }
 
     /// Register a successful reuse of a record (Alg. 1 line 11).
     pub fn mark_reused(&mut self, bucket: u32, slot: usize, now: f64) {
-        let rec = &mut self.buckets[bucket as usize][slot];
-        rec.reuse_count += 1;
-        rec.last_used = now;
+        let s = &mut self.buckets[bucket as usize].slots[slot];
+        let old = value_key(s.reuse_count, s.last_used, s.id);
+        s.reuse_count += 1;
+        s.last_used = now;
+        let new = value_key(s.reuse_count, s.last_used, s.id);
+        let removed = self.order.remove(&old);
+        debug_assert!(removed, "value index out of sync");
+        self.order.insert(new);
     }
 
     /// Insert a record into a bucket, evicting the lowest-value record
-    /// (min `(reuse_count, last_used)`, scanned across all buckets) if full.
-    /// Returns the evicted record id, if any.
+    /// (min `(reuse_count, last_used, id)` across all buckets, read off
+    /// the value index in O(log n)) if full. Returns the evicted record
+    /// id, if any. Panics on an id that is already cached — a duplicate
+    /// would desync the identity/value indexes, so the contract is
+    /// enforced unconditionally ([`Scrt::merge_broadcast`] dedups
+    /// broadcasts; the O(1) probe is negligible next to the insert).
     pub fn insert(&mut self, bucket: u32, record: Record) -> Option<RecordId> {
+        assert!(!self.contains(record.id), "duplicate record id");
+        let dim = *self.dim.get_or_insert(record.pre.pd.len());
+        assert_eq!(record.pre.pd.len(), dim, "pd stride mismatch");
         let mut evicted = None;
-        if self.len >= self.capacity {
+        if self.len() >= self.capacity {
             evicted = self.evict_lowest_value();
         }
-        self.buckets[bucket as usize].push(record);
-        self.len += 1;
+        let Record {
+            id,
+            mut pre,
+            task_type,
+            result,
+            reuse_count,
+            last_used,
+            origin,
+        } = record;
+        let b = &mut self.buckets[bucket as usize];
+        let slot = b.slots.len();
+        // Move the feature vector into the SoA array; `pre` keeps only
+        // the grayscale plane for the SSIM gate.
+        b.feats.append(&mut pre.pd);
+        b.slots.push(Slot {
+            id,
+            task_type,
+            result,
+            reuse_count,
+            last_used,
+            origin,
+            gray_pre: pre,
+        });
+        self.index.insert(id, (bucket, slot));
+        self.order.insert(value_key(reuse_count, last_used, id));
         evicted
     }
 
     /// Merge a broadcast record (Sec. IV-A step 4): skip when already
-    /// cached; otherwise insert with `N_t` reset to zero. Returns true if
-    /// the record was actually inserted.
+    /// cached (O(1) identity probe); otherwise insert with `N_t` reset to
+    /// zero. Returns true if the record was actually inserted.
     pub fn merge_broadcast(&mut self, bucket: u32, mut record: Record, now: f64) -> bool {
         if self.contains(record.id) {
             return false;
@@ -143,52 +312,75 @@ impl Scrt {
     }
 
     /// The `τ` records with the highest reuse counts (ties broken by
-    /// recency), cloned for broadcast, with their bucket ids.
+    /// recency, then id), cloned for broadcast with their bucket ids.
+    /// Reads the τ maxima straight off the value index — O(τ + log n)
+    /// instead of collecting and fully sorting the table.
     pub fn top_tau(&self, tau: usize) -> Vec<(u32, Record)> {
-        let mut all: Vec<(u32, &Record)> = Vec::with_capacity(self.len);
-        for (b, bucket) in self.buckets.iter().enumerate() {
-            for rec in bucket {
-                all.push((b as u32, rec));
-            }
-        }
-        all.sort_by(|(_, x), (_, y)| {
-            y.reuse_count
-                .cmp(&x.reuse_count)
-                .then(y.last_used.partial_cmp(&x.last_used).unwrap())
-        });
-        all.truncate(tau);
-        all.into_iter().map(|(b, r)| (b, r.clone())).collect()
-    }
-
-    /// All records (diagnostics / tests).
-    pub fn iter(&self) -> impl Iterator<Item = (u32, &Record)> {
-        self.buckets
+        self.order
             .iter()
-            .enumerate()
-            .flat_map(|(b, bucket)| bucket.iter().map(move |r| (b as u32, r)))
+            .rev()
+            .take(tau)
+            .map(|&(_, _, id)| {
+                let (bucket, slot) = self.index[&id];
+                (bucket, self.rebuild_record(bucket, slot))
+            })
+            .collect()
     }
 
-    fn evict_lowest_value(&mut self) -> Option<RecordId> {
-        let mut victim: Option<(usize, usize, u32, f64)> = None; // (bucket, slot, count, last)
-        for (bi, bucket) in self.buckets.iter().enumerate() {
-            for (si, rec) in bucket.iter().enumerate() {
-                let worse = match victim {
-                    None => true,
-                    Some((_, _, c, l)) => {
-                        rec.reuse_count < c || (rec.reuse_count == c && rec.last_used < l)
-                    }
-                };
-                if worse {
-                    victim = Some((bi, si, rec.reuse_count, rec.last_used));
-                }
-            }
-        }
-        victim.map(|(bi, si, _, _)| {
-            let rec = self.buckets[bi].swap_remove(si);
-            self.len -= 1;
-            self.evictions += 1;
-            rec.id
+    /// All records (diagnostics / tests), as borrowed views.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, RecordView<'_>)> + '_ {
+        self.buckets.iter().enumerate().flat_map(move |(b, bucket)| {
+            (0..bucket.slots.len())
+                .map(move |slot| (b as u32, self.view(b as u32, slot)))
         })
+    }
+
+    /// Reassemble a full exchange-form [`Record`] (pd copied back out of
+    /// the SoA array) — broadcast payloads travel by value.
+    fn rebuild_record(&self, bucket: u32, slot: usize) -> Record {
+        let v = self.view(bucket, slot);
+        Record {
+            id: v.id,
+            pre: Preprocessed {
+                h: v.h,
+                w: v.w,
+                pd: v.pd.to_vec(),
+                gray: v.gray.to_vec(),
+            },
+            task_type: v.task_type,
+            result: v.result,
+            reuse_count: v.reuse_count,
+            last_used: v.last_used,
+            origin: v.origin,
+        }
+    }
+
+    /// Pop the minimum of the value index and remove that record.
+    fn evict_lowest_value(&mut self) -> Option<RecordId> {
+        let (_, _, id) = self.order.pop_first()?;
+        let (bucket, slot) = self
+            .index
+            .remove(&id)
+            .expect("value index entry is always indexed");
+        self.remove_slot(bucket, slot);
+        self.evictions += 1;
+        Some(id)
+    }
+
+    /// `swap_remove` a slot and mirror the swap in the SoA feature array,
+    /// fixing up the identity index of the record that moved.
+    fn remove_slot(&mut self, bucket: u32, slot: usize) {
+        let dim = self.dim.expect("removing a slot implies a prior insert");
+        let b = &mut self.buckets[bucket as usize];
+        let last = b.slots.len() - 1;
+        b.slots.swap_remove(slot);
+        if slot != last {
+            let (head, tail) = b.feats.split_at_mut(last * dim);
+            head[slot * dim..(slot + 1) * dim].copy_from_slice(&tail[..dim]);
+            let moved = b.slots[slot].id;
+            self.index.insert(moved, (bucket, slot));
+        }
+        b.feats.truncate(last * dim);
     }
 }
 
@@ -236,7 +428,7 @@ mod tests {
         s.insert(1, rec(1, 0.5, 0, 0.0));
         s.insert(1, rec(2, 0.9, 0, 0.0));
         let (slot, d) = s.nearest(1, 0, &pre(0.55)).unwrap();
-        assert_eq!(s.record(1, slot).id, 1);
+        assert_eq!(s.view(1, slot).id, 1);
         assert!(d < 0.1);
         // other bucket is empty
         assert!(s.nearest(0, 0, &pre(0.5)).is_none());
@@ -291,6 +483,38 @@ mod tests {
     }
 
     #[test]
+    fn top_tau_rebuilds_full_records() {
+        let mut s = Scrt::new(2, 4);
+        s.insert(0, rec(7, 0.25, 3, 1.0));
+        let top = s.top_tau(1);
+        let r = &top[0].1;
+        assert_eq!(r.id, 7);
+        assert_eq!(r.pre.pd, vec![0.25; 12], "pd restored from SoA storage");
+        assert_eq!(r.pre.gray, vec![0.25; 4]);
+        assert_eq!((r.pre.h, r.pre.w), (2, 2));
+    }
+
+    #[test]
+    fn top_tau_and_eviction_are_nan_proof() {
+        // The old comparator called partial_cmp().unwrap() on last_used
+        // and panicked on NaN; the keyed total order must not.
+        let mut s = Scrt::new(2, 3);
+        s.insert(0, rec(0, 0.1, 2, f64::NAN));
+        s.insert(0, rec(1, 0.2, 2, 1.0));
+        s.insert(1, rec(2, 0.3, 0, f64::NAN));
+        let top = s.top_tau(3);
+        assert_eq!(top.len(), 3);
+        // total order: NaN sorts above every finite recency, so on the
+        // count tie the NaN record ranks as most recent.
+        assert_eq!(top[0].1.id, 0);
+        assert_eq!(top[1].1.id, 1);
+        assert_eq!(top[2].1.id, 2);
+        // eviction keeps working: lowest count wins regardless of NaN
+        let evicted = s.insert(1, rec(3, 0.4, 9, 2.0));
+        assert_eq!(evicted, Some(2));
+    }
+
+    #[test]
     fn merge_broadcast_skips_duplicates_and_resets_count() {
         let mut s = Scrt::new(2, 10);
         s.insert(0, rec(7, 0.5, 3, 0.0));
@@ -306,13 +530,63 @@ mod tests {
         s.insert(0, rec(0, 0.5, 0, 0.0));
         let (slot, _) = s.nearest(0, 0, &pre(0.5)).unwrap();
         s.mark_reused(0, slot, 9.0);
-        assert_eq!(s.record(0, slot).reuse_count, 1);
-        assert_eq!(s.record(0, slot).last_used, 9.0);
+        assert_eq!(s.view(0, slot).reuse_count, 1);
+        assert_eq!(s.view(0, slot).last_used, 9.0);
+    }
+
+    #[test]
+    fn index_tracks_slots_across_evictions() {
+        let mut s = Scrt::new(1, 3);
+        s.insert(0, rec(0, 0.0, 0, 0.0));
+        s.insert(0, rec(1, 0.1, 5, 1.0));
+        s.insert(0, rec(2, 0.2, 5, 2.0));
+        // id 0 (count 0) is the victim; id 2 swaps into its slot 0
+        let evicted = s.insert(0, rec(3, 0.3, 5, 3.0));
+        assert_eq!(evicted, Some(0));
+        let fills = [0.0f32, 0.1, 0.2, 0.3];
+        for id in [1, 2, 3] {
+            let (b, slot) = s.location(id).unwrap();
+            assert_eq!(s.view(b, slot).id, id, "index stale for id {id}");
+            assert_eq!(
+                s.view(b, slot).pd,
+                &vec![fills[id]; 12][..],
+                "SoA features must move with the swapped slot"
+            );
+        }
+        assert_eq!(s.location(0), None);
+    }
+
+    #[test]
+    fn candidate_pre_keeps_gray_plane_only() {
+        let mut s = Scrt::new(1, 2);
+        s.insert(0, rec(4, 0.5, 0, 0.0));
+        let p = s.candidate_pre(0, 0);
+        assert!(p.pd.is_empty(), "pd lives in the SoA array");
+        assert_eq!(p.gray, vec![0.5; 4]);
+        assert_eq!((p.h, p.w), (2, 2));
     }
 
     #[test]
     #[should_panic]
     fn non_power_of_two_buckets_rejected() {
         Scrt::new(3, 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_id_insert_rejected() {
+        let mut s = Scrt::new(2, 4);
+        s.insert(0, rec(1, 0.1, 0, 0.0));
+        s.insert(1, rec(1, 0.2, 0, 1.0)); // same id, different bucket
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_stride_rejected() {
+        let mut s = Scrt::new(2, 4);
+        s.insert(0, rec(0, 0.1, 0, 0.0));
+        let mut bad = rec(1, 0.2, 0, 1.0);
+        bad.pre.pd = vec![0.2; 9];
+        s.insert(1, bad);
     }
 }

@@ -54,14 +54,13 @@ pub fn process_task(
     let bucket = backend.lsh_bucket(pre)?;
 
     if let Some((slot, _dist)) = scrt.nearest(bucket, task_type, pre) {
-        let ssim = {
-            let candidate = scrt.record(bucket, slot);
-            backend.ssim(pre, &candidate.pre)?
-        };
+        // The stored candidate exposes its gray plane for the gate; its
+        // feature vector stays in the SCRT's SoA storage.
+        let ssim = backend.ssim(pre, scrt.candidate_pre(bucket, slot))?;
         if f64::from(ssim) > th_sim {
             // Alg. 1 lines 10–11: reuse the cached outcome.
-            let result = scrt.record(bucket, slot).result;
-            let reused_from = scrt.record(bucket, slot).id;
+            let hit = scrt.view(bucket, slot);
+            let (result, reused_from) = (hit.result, hit.id);
             scrt.mark_reused(bucket, slot, now);
             return Ok(SlcrOutcome {
                 bucket,

@@ -7,9 +7,17 @@
 //! let mut b = Bencher::new("scrt");
 //! b.bench("insert", || { /* hot path */ });
 //! b.report();
+//! b.write_json("BENCH_scrt.json").unwrap();
 //! ```
+//!
+//! Besides the stdout report, a [`Bencher`] serializes its measurements to
+//! the machine-readable `BENCH_*.json` schema (`ccrsat-bench-v1`) that the
+//! CI perf budget consumes — see [`crate::harness::hotpath`].
 
 use std::time::{Duration, Instant};
+
+use crate::error::Result;
+use crate::util::json::Json;
 
 /// Defeat the optimizer without `std::hint::black_box` availability issues.
 #[inline]
@@ -25,6 +33,19 @@ pub struct Measurement {
     pub total: Duration,
     pub per_iter_ns: f64,
     pub throughput_per_s: f64,
+}
+
+impl Measurement {
+    /// Serialize one measurement (`ccrsat-bench-v1` entry).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iterations", Json::num(self.iterations as f64)),
+            ("total_ns", Json::num(self.total.as_nanos() as f64)),
+            ("per_iter_ns", Json::num(self.per_iter_ns)),
+            ("throughput_per_s", Json::num(self.throughput_per_s)),
+        ])
+    }
 }
 
 /// Bench runner: warms up, then measures for a wall-clock budget.
@@ -111,6 +132,32 @@ impl Bencher {
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }
+
+    pub fn group(&self) -> &str {
+        &self.group
+    }
+
+    /// Serialize the whole group to the `ccrsat-bench-v1` schema.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("ccrsat-bench-v1")),
+            ("group", Json::str(self.group.clone())),
+            ("warmup_ms", Json::num(self.warmup.as_secs_f64() * 1e3)),
+            ("budget_ms", Json::num(self.budget.as_secs_f64() * 1e3)),
+            (
+                "measurements",
+                Json::Arr(self.results.iter().map(Measurement::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Write the group report as pretty-printed JSON (`BENCH_*.json`).
+    pub fn write_json(&self, path: &str) -> Result<()> {
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text)?;
+        Ok(())
+    }
 }
 
 /// Pretty-print nanoseconds per iteration.
@@ -149,6 +196,28 @@ mod tests {
         let m = b.bench_once("one", || std::thread::sleep(Duration::from_millis(2)));
         assert_eq!(m.iterations, 1);
         assert!(m.per_iter_ns >= 2e6);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut b = Bencher::new("grp").with_budget(
+            Duration::from_millis(1),
+            Duration::from_millis(5),
+        );
+        b.bench("op", || {
+            black_box(1u64.wrapping_add(2));
+        });
+        let text = b.to_json().to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(
+            back.at(&["schema"]).unwrap().as_str().unwrap(),
+            "ccrsat-bench-v1"
+        );
+        assert_eq!(back.at(&["group"]).unwrap().as_str().unwrap(), "grp");
+        let ms = back.at(&["measurements"]).unwrap().as_arr().unwrap();
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].at(&["name"]).unwrap().as_str().unwrap(), "op");
+        assert!(ms[0].at(&["per_iter_ns"]).unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

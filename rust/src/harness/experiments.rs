@@ -45,6 +45,10 @@ use crate::workload::{build_workload, Workload};
 
 /// Paper network scales.
 pub const PAPER_SCALES: [usize; 3] = [5, 7, 9];
+/// Extended grids beyond the paper's 9×9, toward the ROADMAP's
+/// production-scale target. Consumed by `ccrsat bench --scale` and
+/// available to `run_scale_suite_timed` like any other scale list.
+pub const EXTENDED_SCALES: [usize; 2] = [11, 15];
 /// Fig. 4 sweep values.
 pub const TAU_SWEEP: [usize; 8] = [1, 3, 5, 7, 9, 11, 13, 15];
 /// Fig. 5 sweep values.

@@ -1,0 +1,334 @@
+//! The hot-path benchmark suite and the perf-regression budget.
+//!
+//! One suite, three consumers: `cargo bench --bench hotpath`, the
+//! `ccrsat bench` CLI subcommand, and the CI perf job. All of them run
+//! [`run_suite`], write the machine-readable `BENCH_hotpath.json`
+//! artifact (schema `ccrsat-bench-v1`, see [`crate::harness::bench`]) and
+//! can compare it against the committed `benches/baseline.json` via
+//! [`check_against_baseline`] — which is how "measurably faster" claims
+//! stay enforceable instead of anecdotal.
+//!
+//! The SCRT microbenches run at the paper-sized table (~32 records, the
+//! Table I cache budget) and — in `--scale` mode — at production-scale
+//! table sizes (512/2048 records) plus the extended 11×11 / 15×15 grids
+//! of [`crate::harness::experiments::EXTENDED_SCALES`].
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::compute::{native::ssim_global, ComputeBackend, NativeBackend, Preprocessed};
+use crate::config::SimConfig;
+use crate::coordinator::scrt::{Record, Scrt};
+use crate::coordinator::Scenario;
+use crate::error::Result;
+use crate::harness::bench::{black_box, Bencher, Measurement};
+use crate::harness::experiments::{run_scale_suite_timed, EXTENDED_SCALES};
+use crate::simulator::{prepare, Simulation};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::build_workload;
+
+/// Default output artifact of the suite.
+pub const DEFAULT_OUT: &str = "BENCH_hotpath.json";
+
+/// Committed perf baseline the CI budget compares against. Refresh with
+/// `ccrsat bench --scale --out benches/baseline.json` on a quiet machine.
+pub const BASELINE_PATH: &str = "benches/baseline.json";
+
+/// Default regression factor: fail when a tracked per-iteration time is
+/// more than 2× its baseline.
+pub const DEFAULT_FACTOR: f64 = 2.0;
+
+/// Paper-sized SCRT table (Table I cache budget ≈ 31 records).
+const SCRT_PAPER: usize = 32;
+
+/// Production-scale SCRT tables exercised in `--scale` mode.
+const SCRT_SCALE: [usize; 2] = [512, 2048];
+
+/// Options for one suite run.
+#[derive(Clone, Copy, Debug)]
+pub struct HotpathOpts {
+    pub warmup: Duration,
+    pub budget: Duration,
+    /// Also run the production-scale SCRT sizes and the 11×11 / 15×15
+    /// end-to-end scale suites (minutes, not milliseconds).
+    pub scale: bool,
+}
+
+impl Default for HotpathOpts {
+    fn default() -> Self {
+        HotpathOpts {
+            warmup: Duration::from_millis(150),
+            budget: Duration::from_millis(700),
+            scale: false,
+        }
+    }
+}
+
+fn fake_pre(rng: &mut Rng) -> Preprocessed {
+    let pd: Vec<f32> = (0..3072).map(|_| rng.f32()).collect();
+    let gray: Vec<f32> = (0..1024).map(|_| rng.f32()).collect();
+    Preprocessed {
+        h: 32,
+        w: 32,
+        pd,
+        gray,
+    }
+}
+
+fn fake_record(id: usize, rng: &mut Rng) -> Record {
+    Record {
+        id,
+        pre: fake_pre(rng),
+        task_type: 0,
+        result: (id % 21) as u32,
+        reuse_count: (id % 7) as u32,
+        last_used: id as f64,
+        origin: id % 25,
+    }
+}
+
+/// SCRT microbenches at one table size: NN scan, identity probe, top-τ
+/// selection and the insert-at-capacity eviction path.
+fn scrt_benches(b: &mut Bencher, cap: usize, rng: &mut Rng) {
+    let mut scrt = Scrt::new(4, cap);
+    for i in 0..cap - 1 {
+        scrt.insert((i % 4) as u32, fake_record(i, rng));
+    }
+    let probe = fake_pre(rng);
+    b.bench(&format!("scrt_nearest_{cap}"), || {
+        black_box(scrt.nearest(1, 0, &probe));
+    });
+    let present = cap / 2;
+    b.bench(&format!("scrt_contains_{cap}"), || {
+        black_box(scrt.contains(present) | scrt.contains(usize::MAX));
+    });
+    b.bench(&format!("scrt_top_tau_11_{cap}"), || {
+        black_box(scrt.top_tau(11));
+    });
+    // Insert from a small clone pool so record construction stays cheap
+    // and the eviction path dominates the measurement.
+    let pool: Vec<Record> = (0..8).map(|k| fake_record(k, rng)).collect();
+    let mut next_id = 1_000_000usize;
+    b.bench(&format!("scrt_insert_evict_{cap}"), || {
+        let mut r = pool[next_id % 8].clone();
+        r.id = next_id;
+        r.reuse_count = (next_id % 7) as u32;
+        r.last_used = next_id as f64;
+        black_box(scrt.insert((next_id % 4) as u32, r));
+        next_id += 1;
+    });
+}
+
+/// Run the hot-path suite and return the populated [`Bencher`].
+pub fn run_suite(opts: &HotpathOpts) -> Result<Bencher> {
+    let mut b = Bencher::new("hotpath").with_budget(opts.warmup, opts.budget);
+    let mut rng = Rng::new(42);
+
+    // ---- SCRT operations (paper-sized, then production-scale) ----------
+    scrt_benches(&mut b, SCRT_PAPER, &mut rng);
+    if opts.scale {
+        for &cap in &SCRT_SCALE {
+            scrt_benches(&mut b, cap, &mut rng);
+        }
+    }
+
+    // ---- native kernels -------------------------------------------------
+    let a = fake_pre(&mut rng);
+    let c = fake_pre(&mut rng);
+    b.bench("ssim_global_1024", || {
+        black_box(ssim_global(&a.gray, &c.gray));
+    });
+    let cfg = SimConfig::paper_default(5);
+    let native = NativeBackend::new(&cfg);
+    b.bench("lsh_bucket_3072", || {
+        black_box(native.lsh_bucket(&a).unwrap());
+    });
+    b.bench("classify_3072", || {
+        black_box(native.classify(&a).unwrap());
+    });
+
+    // ---- PJRT dispatch (only when artifacts are usable) -----------------
+    // An unusable engine (missing feature, stale artifacts, failed
+    // warmup) skips these three benches but never aborts the suite: the
+    // native measurements the perf budget tracks must always land.
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        match crate::compute::PjrtBackend::from_dir("artifacts") {
+            Ok(pjrt) => match pjrt.engine().warmup() {
+                Ok(()) => {
+                    b.bench("pjrt_ssim_dispatch", || {
+                        black_box(pjrt.ssim(&a, &c).unwrap());
+                    });
+                    b.bench("pjrt_lsh_dispatch", || {
+                        black_box(pjrt.lsh_bucket(&a).unwrap());
+                    });
+                    b.bench("pjrt_classify_dispatch", || {
+                        black_box(pjrt.classify(&a).unwrap());
+                    });
+                }
+                Err(e) => eprintln!(
+                    "note: skipping pjrt dispatch benches (warmup failed: {e})"
+                ),
+            },
+            Err(e) => eprintln!("note: skipping pjrt dispatch benches ({e})"),
+        }
+    }
+
+    // ---- end-to-end scenarios (native backend, 3×3 / 45 tasks) ----------
+    let mut small = SimConfig::paper_default(3);
+    small.workload.total_tasks = 45;
+    let backend = NativeBackend::new(&small);
+    let wl = build_workload(&small);
+    let prep = prepare(&backend, &wl)?;
+    b.bench("simulate_slcr_3x3_45", || {
+        let r = Simulation::new(&small, &backend, Scenario::Slcr)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .run()
+            .unwrap();
+        black_box(r.reused_tasks);
+    });
+    b.bench("simulate_sccr_3x3_45", || {
+        let r = Simulation::new(&small, &backend, Scenario::Sccr)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .run()
+            .unwrap();
+        black_box(r.reused_tasks);
+    });
+
+    // ---- extended grids (11×11, 15×15), one timed pass each -------------
+    if opts.scale {
+        let base = SimConfig::paper_default(5);
+        let backend = NativeBackend::new(&base);
+        for &n in &EXTENDED_SCALES {
+            b.bench_once(&format!("scale_suite_{n}x{n}"), || {
+                let (reports, _timing) =
+                    run_scale_suite_timed(&base, &backend, &[n], &Scenario::ALL)
+                        .expect("extended scale suite");
+                black_box(reports.len());
+            });
+        }
+    }
+
+    Ok(b)
+}
+
+/// One tracked perf regression against the committed baseline.
+#[derive(Clone, Debug)]
+pub struct Regression {
+    pub name: String,
+    pub measured_ns: f64,
+    pub baseline_ns: f64,
+}
+
+impl Regression {
+    pub fn ratio(&self) -> f64 {
+        self.measured_ns / self.baseline_ns
+    }
+}
+
+/// Load a `ccrsat-bench-v1` document from disk.
+pub fn load_bench_json(path: &str) -> Result<Json> {
+    Json::parse(&std::fs::read_to_string(path)?)
+}
+
+/// Compare measurements against a `ccrsat-bench-v1` baseline document: a
+/// measurement regresses when `per_iter_ns > factor × baseline`.
+///
+/// Measured names absent from the baseline are ignored (new benches need
+/// a baseline refresh, not a CI failure); baseline names that were not
+/// measured are fine too (reduced-budget CI runs skip `--scale` entries).
+pub fn check_against_baseline(
+    measurements: &[Measurement],
+    baseline: &Json,
+    factor: f64,
+) -> Result<Vec<Regression>> {
+    let entries = baseline.at(&["measurements"])?.as_arr()?;
+    let mut base = BTreeMap::new();
+    for e in entries {
+        base.insert(
+            e.at(&["name"])?.as_str()?.to_string(),
+            e.at(&["per_iter_ns"])?.as_f64()?,
+        );
+    }
+    let mut regressions = Vec::new();
+    for m in measurements {
+        if let Some(&baseline_ns) = base.get(&m.name) {
+            if m.per_iter_ns > factor * baseline_ns {
+                regressions.push(Regression {
+                    name: m.name.clone(),
+                    measured_ns: m.per_iter_ns,
+                    baseline_ns,
+                });
+            }
+        }
+    }
+    Ok(regressions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduced_suite_measures_the_hot_path() {
+        let opts = HotpathOpts {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(5),
+            scale: false,
+        };
+        let b = run_suite(&opts).unwrap();
+        let names: Vec<&str> = b.results().iter().map(|m| m.name.as_str()).collect();
+        for expect in [
+            "scrt_nearest_32",
+            "scrt_contains_32",
+            "scrt_top_tau_11_32",
+            "scrt_insert_evict_32",
+            "ssim_global_1024",
+            "lsh_bucket_3072",
+            "classify_3072",
+            "simulate_slcr_3x3_45",
+            "simulate_sccr_3x3_45",
+        ] {
+            assert!(names.contains(&expect), "missing bench '{expect}'");
+        }
+        for m in b.results() {
+            assert!(m.per_iter_ns > 0.0, "{} measured nothing", m.name);
+        }
+    }
+
+    #[test]
+    fn baseline_check_flags_only_regressions() {
+        let baseline = Json::parse(
+            r#"{"schema": "ccrsat-bench-v1", "measurements": [
+                {"name": "fast", "per_iter_ns": 100.0},
+                {"name": "slow", "per_iter_ns": 100.0},
+                {"name": "unmeasured", "per_iter_ns": 1.0}
+            ]}"#,
+        )
+        .unwrap();
+        let mk = |name: &str, ns: f64| Measurement {
+            name: name.to_string(),
+            iterations: 1,
+            total: Duration::from_nanos(ns as u64),
+            per_iter_ns: ns,
+            throughput_per_s: 1e9 / ns,
+        };
+        let ms = vec![
+            mk("fast", 150.0),    // within 2x: fine
+            mk("slow", 250.0),    // over 2x: regression
+            mk("untracked", 1e9), // not in baseline: ignored
+        ];
+        let regs = check_against_baseline(&ms, &baseline, 2.0).unwrap();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].name, "slow");
+        assert!((regs[0].ratio() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn baseline_check_rejects_malformed_documents() {
+        let bad = Json::parse(r#"{"schema": "x"}"#).unwrap();
+        assert!(check_against_baseline(&[], &bad, 2.0).is_err());
+    }
+}

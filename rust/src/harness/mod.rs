@@ -4,6 +4,9 @@
 //! not available in this offline image); [`experiments`] hosts the runners
 //! that regenerate every table and figure of the paper's evaluation —
 //! shared by `benches/*.rs`, `examples/` and the `ccrsat reproduce` CLI.
+//! [`hotpath`] is the per-task-path benchmark suite behind `ccrsat bench`,
+//! `benches/hotpath.rs` and the CI perf-regression budget.
 
 pub mod bench;
 pub mod experiments;
+pub mod hotpath;

@@ -4,6 +4,7 @@
 //! ccrsat run        --scenario sccr [--config F] [--n 5] [--backend pjrt|native]
 //! ccrsat reproduce  --experiment table2|table3|fig3|fig4|fig5|all [...]
 //! ccrsat sweep      --param tau|thco [...]
+//! ccrsat bench      [--scale] [--check] [--out F]   # hot-path perf suite
 //! ccrsat inspect    [--artifacts DIR]        # artifact/manifest report
 //! ccrsat selftest   [--artifacts DIR]        # cross-check pjrt vs native
 //! ```
@@ -18,6 +19,7 @@ use ccrsat::compute::{ComputeBackend, NativeBackend, PjrtBackend};
 use ccrsat::config::SimConfig;
 use ccrsat::coordinator::Scenario;
 use ccrsat::harness::experiments as exp;
+use ccrsat::harness::hotpath;
 use ccrsat::metrics::reports_to_csv;
 use ccrsat::simulator::Simulation;
 use ccrsat::util::json::Json;
@@ -33,8 +35,18 @@ COMMANDS:
     run         run one scenario and print the report
     reproduce   regenerate a paper table/figure (table2|table3|fig3|fig4|fig5|all)
     sweep       parameter sensitivity sweep (tau | thco)
+    bench       run the hot-path benchmark suite, write BENCH_hotpath.json
     inspect     print the artifact manifest summary
     selftest    cross-check the PJRT artifacts against the native backend
+
+BENCH OPTIONS:
+    --warmup-ms <MS>     per-bench warmup budget (default 150)
+    --budget-ms <MS>     per-bench measurement budget (default 700)
+    --scale              add production-scale SCRT tables + 11x11/15x15 grids
+    --out <FILE>         JSON artifact path (default BENCH_hotpath.json)
+    --check              compare against the committed baseline, fail on regression
+    --baseline <FILE>    baseline to check against (default benches/baseline.json)
+    --factor <X>         regression factor for --check (default 2.0)
 
 COMMON OPTIONS:
     --config <FILE>      TOML config (defaults: paper Table I values)
@@ -77,7 +89,9 @@ impl Flags {
                 .strip_prefix("--")
                 .ok_or_else(|| Error::config(format!("unexpected argument '{a}'")))?;
             match key {
-                "json" | "csv" | "help" | "quiet" => bools.push(key.to_string()),
+                "json" | "csv" | "help" | "quiet" | "scale" | "check" => {
+                    bools.push(key.to_string())
+                }
                 _ => {
                     let v = args.get(i + 1).ok_or_else(|| {
                         Error::config(format!("--{key} needs a value"))
@@ -107,6 +121,15 @@ impl Flags {
             })
             .transpose()
     }
+
+    fn parse_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|_| Error::config(format!("--{key} wants a number, got '{v}'")))
+            })
+            .transpose()
+    }
 }
 
 fn dispatch(args: &[String]) -> Result<()> {
@@ -131,6 +154,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "run" => cmd_run(&flags),
         "reproduce" => cmd_reproduce(&flags),
         "sweep" => cmd_sweep(&flags),
+        "bench" => cmd_bench(&flags),
         "inspect" => cmd_inspect(&flags),
         "selftest" => cmd_selftest(&flags),
         other => Err(Error::config(format!(
@@ -283,6 +307,54 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
                 "--param must be tau or thco, got {other:?}"
             )))
         }
+    }
+    Ok(())
+}
+
+/// `ccrsat bench`: run the hot-path suite, write the `BENCH_hotpath.json`
+/// artifact and — with `--check` — enforce the committed perf baseline.
+fn cmd_bench(flags: &Flags) -> Result<()> {
+    let ms = std::time::Duration::from_millis;
+    let opts = hotpath::HotpathOpts {
+        warmup: ms(flags.parse_usize("warmup-ms")?.unwrap_or(150) as u64),
+        budget: ms(flags.parse_usize("budget-ms")?.unwrap_or(700) as u64),
+        scale: flags.has("scale"),
+    };
+    let b = hotpath::run_suite(&opts)?;
+    if !flags.has("quiet") {
+        b.report();
+    }
+    let out = flags.get("out").unwrap_or(hotpath::DEFAULT_OUT);
+    b.write_json(out)?;
+    eprintln!("wrote {out} ({} measurements)", b.results().len());
+
+    if flags.has("check") {
+        let baseline_path = flags.get("baseline").unwrap_or(hotpath::BASELINE_PATH);
+        let factor = flags
+            .parse_f64("factor")?
+            .unwrap_or(hotpath::DEFAULT_FACTOR);
+        let baseline = hotpath::load_bench_json(baseline_path)?;
+        let regressions =
+            hotpath::check_against_baseline(b.results(), &baseline, factor)?;
+        if regressions.is_empty() {
+            println!(
+                "perf check OK: no tracked bench regressed > {factor:.1}x vs {baseline_path}"
+            );
+            return Ok(());
+        }
+        for r in &regressions {
+            eprintln!(
+                "REGRESSION {:<28} {:>12.1} ns/iter vs baseline {:>12.1} ns/iter ({:.2}x)",
+                r.name,
+                r.measured_ns,
+                r.baseline_ns,
+                r.ratio()
+            );
+        }
+        return Err(Error::simulation(format!(
+            "{} tracked bench(es) regressed > {factor:.1}x vs {baseline_path}",
+            regressions.len()
+        )));
     }
     Ok(())
 }

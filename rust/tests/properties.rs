@@ -112,13 +112,12 @@ fn prop_scrt_nearest_is_exact_argmin() {
         }
         let probe = pre(&mut rng, 8);
         if let Some((slot, d)) = scrt.nearest(0, 0, &probe) {
-            // brute force
+            // brute force over the borrowed SoA views
             let best = scrt
                 .iter()
                 .filter(|(b, r)| *b == 0 && r.task_type == 0)
                 .map(|(_, r)| {
-                    r.pre
-                        .pd
+                    r.pd
                         .iter()
                         .zip(&probe.pd)
                         .map(|(x, y)| (x - y) * (x - y))
@@ -129,6 +128,247 @@ fn prop_scrt_nearest_is_exact_argmin() {
                 (d - best).abs() < 1e-5,
                 "seed {seed}: nearest {d} != brute-force {best} (slot {slot})"
             );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Indexed SCRT ≡ naive reference model
+// ---------------------------------------------------------------------------
+
+/// Total-order value comparison `(reuse_count, last_used, id)` — the
+/// ordering contract the indexed SCRT maintains (NaN-proof via
+/// `f64::total_cmp`, deterministic id tie-break).
+fn value_cmp(a: (u32, f64, usize), b: (u32, f64, usize)) -> std::cmp::Ordering {
+    a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)).then(a.2.cmp(&b.2))
+}
+
+/// Naive O(n) reference model of the SCRT: per-bucket `Vec<Record>` with
+/// `swap_remove` eviction, whole-table victim scans and full sorts. The
+/// indexed implementation must be behaviorally identical to this, slot
+/// for slot.
+struct NaiveScrt {
+    buckets: Vec<Vec<Record>>,
+    capacity: usize,
+}
+
+impl NaiveScrt {
+    fn new(num_buckets: usize, capacity: usize) -> Self {
+        NaiveScrt {
+            buckets: vec![Vec::new(); num_buckets],
+            capacity,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.buckets.iter().map(Vec::len).sum()
+    }
+
+    fn contains(&self, id: usize) -> bool {
+        self.buckets.iter().any(|b| b.iter().any(|r| r.id == id))
+    }
+
+    fn nearest(
+        &self,
+        bucket: u32,
+        task_type: u16,
+        probe: &Preprocessed,
+    ) -> Option<(usize, f32)> {
+        let mut best: Option<(usize, f32)> = None;
+        for (slot, r) in self.buckets[bucket as usize].iter().enumerate() {
+            if r.task_type != task_type {
+                continue;
+            }
+            let d: f32 = r
+                .pre
+                .pd
+                .iter()
+                .zip(&probe.pd)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum();
+            if best.map_or(true, |(_, bd)| d < bd) {
+                best = Some((slot, d));
+            }
+        }
+        best
+    }
+
+    fn insert(&mut self, bucket: u32, rec: Record) -> Option<usize> {
+        let mut evicted = None;
+        if self.len() >= self.capacity {
+            let (bi, si, _) = self
+                .buckets
+                .iter()
+                .enumerate()
+                .flat_map(|(bi, b)| {
+                    b.iter().enumerate().map(move |(si, r)| {
+                        (bi, si, (r.reuse_count, r.last_used, r.id))
+                    })
+                })
+                .min_by(|a, b| value_cmp(a.2, b.2))
+                .expect("full table has a victim");
+            let victim = self.buckets[bi].swap_remove(si);
+            evicted = Some(victim.id);
+        }
+        self.buckets[bucket as usize].push(rec);
+        evicted
+    }
+
+    fn mark_reused(&mut self, bucket: u32, slot: usize, now: f64) {
+        let r = &mut self.buckets[bucket as usize][slot];
+        r.reuse_count += 1;
+        r.last_used = now;
+    }
+
+    fn merge_broadcast(&mut self, bucket: u32, mut rec: Record, now: f64) -> bool {
+        if self.contains(rec.id) {
+            return false;
+        }
+        rec.reuse_count = 0;
+        rec.last_used = now;
+        self.insert(bucket, rec);
+        true
+    }
+
+    /// Top-τ record ids by descending `(reuse_count, last_used, id)`.
+    fn top_tau(&self, tau: usize) -> Vec<(u32, usize)> {
+        let mut all: Vec<(u32, (u32, f64, usize))> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .flat_map(|(b, bucket)| {
+                bucket
+                    .iter()
+                    .map(move |r| (b as u32, (r.reuse_count, r.last_used, r.id)))
+            })
+            .collect();
+        all.sort_by(|a, b| value_cmp(b.1, a.1));
+        all.truncate(tau);
+        all.into_iter().map(|(b, key)| (b, key.2)).collect()
+    }
+}
+
+/// Flatten both tables in (bucket, slot) order and compare every field,
+/// including the SoA-stored feature vectors.
+fn assert_tables_equal(seed: u64, step: usize, real: &Scrt, model: &NaiveScrt) {
+    let real_flat: Vec<_> = real
+        .iter()
+        .map(|(b, v)| {
+            (
+                b,
+                v.id,
+                v.reuse_count,
+                v.last_used,
+                v.task_type,
+                v.result,
+                v.pd.to_vec(),
+                v.gray.to_vec(),
+            )
+        })
+        .collect();
+    let model_flat: Vec<_> = model
+        .buckets
+        .iter()
+        .enumerate()
+        .flat_map(|(b, bucket)| {
+            bucket.iter().map(move |r| {
+                (
+                    b as u32,
+                    r.id,
+                    r.reuse_count,
+                    r.last_used,
+                    r.task_type,
+                    r.result,
+                    r.pre.pd.clone(),
+                    r.pre.gray.clone(),
+                )
+            })
+        })
+        .collect();
+    assert_eq!(
+        real_flat, model_flat,
+        "seed {seed} step {step}: tables diverged"
+    );
+}
+
+#[test]
+fn prop_indexed_scrt_matches_naive_reference() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x1DE7);
+        let cap = 2 + rng.below(12);
+        let num_buckets = 1 << (1 + rng.below(3));
+        let mut real = Scrt::new(num_buckets, cap);
+        let mut model = NaiveScrt::new(num_buckets, cap);
+        let mut next_id = 0usize;
+        for step in 0..60 {
+            match rng.below(6) {
+                0 | 1 => {
+                    // plain insert (Alg. 1 lines 5/14)
+                    let r = record(next_id, &mut rng);
+                    next_id += 1;
+                    let b = rng.below(num_buckets) as u32;
+                    let ev_real = real.insert(b, r.clone());
+                    let ev_model = model.insert(b, r);
+                    assert_eq!(
+                        ev_real, ev_model,
+                        "seed {seed} step {step}: eviction victims diverge"
+                    );
+                }
+                2 => {
+                    // NN probe, sometimes followed by a reuse hit
+                    let b = rng.below(num_buckets) as u32;
+                    let tt = rng.below(3) as u16;
+                    let probe = pre(&mut rng, 8);
+                    let got = real.nearest(b, tt, &probe);
+                    let want = model.nearest(b, tt, &probe);
+                    assert_eq!(got, want, "seed {seed} step {step}: nearest");
+                    if let Some((slot, _)) = got {
+                        let now = rng.f64() * 1e3;
+                        real.mark_reused(b, slot, now);
+                        model.mark_reused(b, slot, now);
+                    }
+                }
+                3 => {
+                    // broadcast merge, half the time a duplicate id
+                    let dup = next_id > 0 && rng.below(2) == 0;
+                    let id = if dup { rng.below(next_id) } else { next_id };
+                    if !dup {
+                        next_id += 1;
+                    }
+                    let r = record(id, &mut rng);
+                    let b = rng.below(num_buckets) as u32;
+                    let now = rng.f64() * 1e3;
+                    assert_eq!(
+                        real.merge_broadcast(b, r.clone(), now),
+                        model.merge_broadcast(b, r, now),
+                        "seed {seed} step {step}: merge"
+                    );
+                }
+                4 => {
+                    // broadcast selection order
+                    let tau = 1 + rng.below(8);
+                    let got: Vec<(u32, usize)> = real
+                        .top_tau(tau)
+                        .iter()
+                        .map(|(b, r)| (*b, r.id))
+                        .collect();
+                    assert_eq!(
+                        got,
+                        model.top_tau(tau),
+                        "seed {seed} step {step}: top_tau"
+                    );
+                }
+                _ => {
+                    // identity probe
+                    let id = rng.below(next_id.max(1));
+                    assert_eq!(
+                        real.contains(id),
+                        model.contains(id),
+                        "seed {seed} step {step}: contains"
+                    );
+                }
+            }
+            assert_tables_equal(seed, step, &real, &model);
         }
     }
 }
