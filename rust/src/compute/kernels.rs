@@ -1,0 +1,218 @@
+//! Blocked, flat-matrix linear-algebra kernels for the native backend.
+//!
+//! The per-task tax of the reuse pipeline (Alg. 1) is a handful of dense
+//! dot products: `p_k` hyperplane projections for the LSH bucket and
+//! `num_classes` rows of the classifier projection. The seed implementation
+//! walked `Vec<Vec<f32>>` rows with `iter().zip().sum()` — a strict-order
+//! IEEE reduction LLVM must keep scalar, on top of a pointer chase per row.
+//!
+//! These kernels fix both halves:
+//!
+//! * **flat row-major storage** — one contiguous `Vec<f32>` per matrix,
+//!   `rows × cols`, walked in stride-`cols` chunks (no per-row heap hops);
+//! * **multi-accumulator lanes** — the inner loop keeps [`LANES`]
+//!   independent partial sums, so the reduction is re-associated into a
+//!   form the autovectorizer can turn into SIMD adds/FMAs;
+//! * **row blocking** — [`gemm_nt`] walks the weight matrix once per block
+//!   of [`GEMM_ROW_BLOCK`] input rows, so weights stream from cache instead
+//!   of from memory once per task.
+//!
+//! Determinism contract: every kernel reduces each dot product in exactly
+//! the same order ([`dot`]'s fixed lane tree), so `gemm_nt` is bitwise
+//! identical to a loop of [`gemv`] calls, which is bitwise identical to a
+//! loop of [`dot`] calls. The batched backend entry points therefore
+//! produce the same labels/buckets as the single-task paths, bit for bit.
+//! (Results differ from the seed's strict left-to-right sum by normal
+//! floating-point re-association — within ~1e-4 relative error, see the
+//! property tests in `tests/properties.rs`.)
+
+/// Independent partial sums kept by the inner loops. Eight f32 lanes fill
+/// two SSE / one AVX register — enough to hide FP add latency without
+/// spilling on any x86-64 or aarch64 target.
+pub const LANES: usize = 8;
+
+/// Input rows per [`gemm_nt`] block: the block (8 × 3072 floats ≈ 96 KiB
+/// at paper dims) stays L2-resident while the weight matrix streams over
+/// it once per block.
+pub const GEMM_ROW_BLOCK: usize = 8;
+
+/// Reduce the lane accumulators in a fixed pairwise tree. One order,
+/// everywhere — this is what makes batched and single-task paths agree
+/// bitwise.
+#[inline]
+fn reduce(acc: [f32; LANES]) -> f32 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// Lane-accumulator dot product over equal-length slices.
+///
+/// Panics if the lengths differ (the backend validates dims before any
+/// kernel call, so a mismatch here is a bug, not an input error).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot: length mismatch");
+    let split = a.len() - a.len() % LANES;
+    let (a_main, a_tail) = a.split_at(split);
+    let (b_main, b_tail) = b.split_at(split);
+    let mut acc = [0f32; LANES];
+    for (ca, cb) in a_main.chunks_exact(LANES).zip(b_main.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            acc[l] += ca[l] * cb[l];
+        }
+    }
+    let mut tail = 0f32;
+    for (x, y) in a_tail.iter().zip(b_tail.iter()) {
+        tail += x * y;
+    }
+    reduce(acc) + tail
+}
+
+/// `out = A · x` for a row-major `rows × cols` matrix `A`.
+///
+/// One [`dot`] per row over the contiguous row slice; `out` must hold
+/// exactly `rows` elements.
+pub fn gemv(a: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), rows * cols, "gemv: matrix shape mismatch");
+    assert_eq!(x.len(), cols, "gemv: input length mismatch");
+    assert_eq!(out.len(), rows, "gemv: output length mismatch");
+    if cols == 0 {
+        out.fill(0.0); // keep the gemm_nt ≡ gemv-loop contract at k = 0
+        return;
+    }
+    for (row, o) in a.chunks_exact(cols).zip(out.iter_mut()) {
+        *o = dot(row, x);
+    }
+}
+
+/// `out[n × m] = X[n × k] · W[m × k]ᵀ` — the batched classifier/LSH GEMM.
+///
+/// `X` is task-major (one task's feature vector per row), `W` is the flat
+/// weight matrix. Blocked over [`GEMM_ROW_BLOCK`] input rows so `W`
+/// streams once per block instead of once per task. Each output element is
+/// computed by [`dot`], so the result is bitwise identical to calling
+/// [`gemv`] per input row.
+pub fn gemm_nt(x: &[f32], n: usize, w: &[f32], m: usize, k: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), n * k, "gemm_nt: input shape mismatch");
+    assert_eq!(w.len(), m * k, "gemm_nt: weight shape mismatch");
+    assert_eq!(out.len(), n * m, "gemm_nt: output shape mismatch");
+    if n == 0 || m == 0 {
+        return; // out is empty by the shape contract
+    }
+    if k == 0 {
+        out.fill(0.0);
+        return;
+    }
+    for (xb, ob) in x
+        .chunks(GEMM_ROW_BLOCK * k)
+        .zip(out.chunks_mut(GEMM_ROW_BLOCK * m))
+    {
+        for (j, wrow) in w.chunks_exact(k).enumerate() {
+            for (i, xrow) in xb.chunks_exact(k).enumerate() {
+                ob[i * m + j] = dot(xrow, wrow);
+            }
+        }
+    }
+}
+
+/// Index of the first maximum (ties keep the earliest index — the same
+/// contract as the seed's scalar argmax over classifier scores).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_dot_f64(a: &[f32], b: &[f32]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| f64::from(x) * f64::from(y))
+            .sum()
+    }
+
+    fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.f32() - 0.5).collect()
+    }
+
+    #[test]
+    fn dot_matches_f64_reference_across_lengths() {
+        let mut rng = Rng::new(11);
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 65, 1024, 3072] {
+            let a = randvec(&mut rng, n);
+            let b = randvec(&mut rng, n);
+            let got = f64::from(dot(&a, &b));
+            let want = naive_dot_f64(&a, &b);
+            let scale: f64 = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| (f64::from(x) * f64::from(y)).abs())
+                .sum::<f64>()
+                + 1.0;
+            assert!(
+                (got - want).abs() <= 1e-4 * scale,
+                "n={n}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn gemv_is_per_row_dot() {
+        let mut rng = Rng::new(12);
+        let (rows, cols) = (5, 129);
+        let a = randvec(&mut rng, rows * cols);
+        let x = randvec(&mut rng, cols);
+        let mut out = vec![0f32; rows];
+        gemv(&a, rows, cols, &x, &mut out);
+        for (r, &o) in out.iter().enumerate() {
+            let d = dot(&a[r * cols..(r + 1) * cols], &x);
+            assert_eq!(o.to_bits(), d.to_bits(), "row {r}");
+        }
+    }
+
+    #[test]
+    fn gemm_bitwise_matches_gemv_loop() {
+        let mut rng = Rng::new(13);
+        // deliberately not a multiple of the row block
+        let (n, m, k) = (11, 3, 257);
+        let x = randvec(&mut rng, n * k);
+        let w = randvec(&mut rng, m * k);
+        let mut got = vec![0f32; n * m];
+        gemm_nt(&x, n, &w, m, k, &mut got);
+        let mut want = vec![0f32; n * m];
+        for i in 0..n {
+            gemv(&w, m, k, &x[i * k..(i + 1) * k], &mut want[i * m..(i + 1) * m]);
+        }
+        let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got_bits, want_bits);
+    }
+
+    #[test]
+    fn gemm_handles_empty_and_degenerate_shapes() {
+        let mut out = vec![0f32; 0];
+        gemm_nt(&[], 0, &[], 0, 4, &mut out);
+        let mut out = vec![1f32; 6];
+        gemm_nt(&[], 2, &[], 3, 0, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0), "k=0 zeroes the output");
+        let mut out = vec![1f32; 3];
+        gemv(&[], 3, 0, &[], &mut out);
+        assert!(out.iter().all(|&v| v == 0.0), "gemv matches gemm at k=0");
+    }
+
+    #[test]
+    fn argmax_prefers_first_of_equal_maxima() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+        assert_eq!(argmax(&[0.5]), 0);
+    }
+}

@@ -11,6 +11,7 @@
 //!   sweeps and as a cross-check against the artifacts (the integration
 //!   suite asserts both backends agree on SSIM and preprocessing).
 
+pub mod kernels;
 pub mod native;
 pub mod pjrt;
 
@@ -43,8 +44,21 @@ pub trait ComputeBackend: Send + Sync {
     /// Alg. 1 line 1: resize + normalise + grayscale.
     fn preprocess(&self, raw: &ImageData) -> Result<Preprocessed>;
 
+    /// Batched preprocess — the bulk entry point `simulator::prepare`
+    /// drives. The default maps [`ComputeBackend::preprocess`]; backends
+    /// with batch kernels override. Output order matches input order.
+    fn preprocess_many(&self, raws: &[&ImageData]) -> Result<Vec<Preprocessed>> {
+        raws.iter().map(|&raw| self.preprocess(raw)).collect()
+    }
+
     /// Alg. 1 line 2: LSH bucket of a pre-processed input.
     fn lsh_bucket(&self, pre: &Preprocessed) -> Result<u32>;
+
+    /// Batched LSH hashing; the default maps
+    /// [`ComputeBackend::lsh_bucket`]. Output order matches input order.
+    fn lsh_bucket_many(&self, pres: &[&Preprocessed]) -> Result<Vec<u32>> {
+        pres.iter().map(|&pre| self.lsh_bucket(pre)).collect()
+    }
 
     /// Alg. 1 line 8: SSIM between two pre-processed inputs (eq. 12).
     fn ssim(&self, a: &Preprocessed, b: &Preprocessed) -> Result<f32>;
@@ -113,6 +127,16 @@ mod tests {
         let many = backend.classify_many(&[&pa1, &pb]).unwrap();
         assert_eq!(many[0], l1);
         assert_eq!(many[1], backend.classify(&pb).unwrap());
+
+        // batched preprocess / LSH match the single-task paths
+        let pre_many = backend.preprocess_many(&[&img_a1, &img_b]).unwrap();
+        assert_eq!(pre_many.len(), 2);
+        assert_eq!(pre_many[0], pa1);
+        assert_eq!(pre_many[1], pb);
+        let bucket_many = backend.lsh_bucket_many(&[&pa1, &pa2, &pb]).unwrap();
+        assert_eq!(bucket_many[0], b1);
+        assert_eq!(bucket_many[1], b1);
+        assert_eq!(bucket_many[2], backend.lsh_bucket(&pb).unwrap());
     }
 
     #[test]

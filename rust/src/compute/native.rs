@@ -6,7 +6,16 @@
 //! MicroGoogLeNet. It exists for three reasons: fast unit tests of the
 //! coordinator, ablation sweeps that don't need PJRT, and a numeric
 //! cross-check of the artifacts in the integration suite.
+//!
+//! The LSH hyperplanes and the classifier projection are stored as flat
+//! row-major matrices and evaluated through the blocked kernels in
+//! [`crate::compute::kernels`]; the batched entry points
+//! ([`ComputeBackend::classify_many`], [`ComputeBackend::lsh_bucket_many`])
+//! run a real GEMM over a task-major input matrix and are bitwise
+//! identical to the single-task paths (the kernels share one dot-product
+//! reduction order).
 
+use crate::compute::kernels::{argmax, gemm_nt, gemv};
 use crate::compute::{ComputeBackend, Preprocessed};
 use crate::config::SimConfig;
 use crate::error::{Error, Result};
@@ -24,15 +33,26 @@ const LSH_SEED: u64 = 0x5a7e111e;
 /// Seed for the classifier projection.
 const CLS_SEED: u64 = 0xc1a551f7;
 
+/// Tasks per GEMM block in the batched entry points: 64 × 3072 floats of
+/// input (≈ 768 KiB) amortise the weight-matrix traffic without blowing
+/// the cache.
+const BATCH: usize = 64;
+
+/// Hard cap on `p_k` so LSH projections fit a stack buffer (the config
+/// layer validates `p_k ∈ [1, 16]` already).
+const MAX_PLANES: usize = 16;
+
 /// Pure-Rust backend.
 pub struct NativeBackend {
     pre_h: usize,
     pre_w: usize,
     p_k: usize,
-    /// `p_k × feature_dim` Gaussian hyperplanes.
-    planes: Vec<Vec<f32>>,
-    /// `num_classes × feature_dim` classifier projection.
-    proj: Vec<Vec<f32>>,
+    feature_dim: usize,
+    num_classes: usize,
+    /// `p_k × feature_dim` Gaussian hyperplanes, flat row-major.
+    planes: Vec<f32>,
+    /// `num_classes × feature_dim` classifier projection, flat row-major.
+    proj: Vec<f32>,
 }
 
 impl NativeBackend {
@@ -42,18 +62,22 @@ impl NativeBackend {
         let pre_w = cfg.workload.raw_w / 2;
         let feature_dim = pre_h * pre_w * 3;
         let p_k = cfg.reuse.p_k;
+        assert!(p_k <= MAX_PLANES, "p_k {p_k} exceeds {MAX_PLANES}");
+        let num_classes = cfg.workload.num_classes;
         let mut lsh_rng = Rng::new(LSH_SEED);
-        let planes = (0..p_k)
-            .map(|_| (0..feature_dim).map(|_| lsh_rng.normal() as f32).collect())
+        let planes = (0..p_k * feature_dim)
+            .map(|_| lsh_rng.normal() as f32)
             .collect();
         let mut cls_rng = Rng::new(CLS_SEED);
-        let proj = (0..cfg.workload.num_classes)
-            .map(|_| (0..feature_dim).map(|_| cls_rng.normal() as f32).collect())
+        let proj = (0..num_classes * feature_dim)
+            .map(|_| cls_rng.normal() as f32)
             .collect();
         NativeBackend {
             pre_h,
             pre_w,
             p_k,
+            feature_dim,
+            num_classes,
             planes,
             proj,
         }
@@ -68,11 +92,32 @@ impl NativeBackend {
         }
         Ok(())
     }
+
+    /// MSB-first bucket id from the signs of the plane projections.
+    fn bucket_from_projections(&self, dots: &[f32]) -> u32 {
+        let mut bucket = 0u32;
+        for (i, &d) in dots.iter().enumerate() {
+            if d >= 0.0 {
+                bucket |= 1 << (self.p_k - 1 - i);
+            }
+        }
+        bucket
+    }
 }
 
 /// Global SSIM per eq. (12); exposed for tests and the SCRT module.
-pub fn ssim_global(a: &[f32], b: &[f32]) -> f32 {
-    assert_eq!(a.len(), b.len());
+///
+/// Returns [`Error::Simulation`] when the planes have different lengths
+/// (the seed version `assert_eq!`-panicked, which took the whole run down
+/// on a malformed record instead of surfacing a recoverable error).
+pub fn ssim_global(a: &[f32], b: &[f32]) -> Result<f32> {
+    if a.len() != b.len() {
+        return Err(Error::simulation(format!(
+            "ssim_global: mismatched plane lengths {} vs {}",
+            a.len(),
+            b.len()
+        )));
+    }
     let n = a.len() as f64;
     let (mut sa, mut sb, mut saa, mut sbb, mut sab) = (0f64, 0f64, 0f64, 0f64, 0f64);
     for (&x, &y) in a.iter().zip(b) {
@@ -91,7 +136,7 @@ pub fn ssim_global(a: &[f32], b: &[f32]) -> f32 {
     let lum = (2.0 * ma * mb + C1) / (ma * ma + mb * mb + C1);
     let con = (2.0 * va.sqrt() * vb.sqrt() + C2) / (va + vb + C2);
     let stru = (cov + C3) / (va.sqrt() * vb.sqrt() + C3);
-    (lum * con * stru) as f32
+    Ok((lum * con * stru) as f32)
 }
 
 impl ComputeBackend for NativeBackend {
@@ -105,18 +150,25 @@ impl ComputeBackend for NativeBackend {
         let (h, w) = (self.pre_h, self.pre_w);
         let mut pd = vec![0f32; h * w * 3];
         let mut gray = vec![0f32; h * w];
+        // One fused pass: 2×2 mean pool + normalise + BT.601 grayscale,
+        // walking two flat raw rows per output row (no per-pixel index
+        // arithmetic). The arithmetic order matches the seed exactly, so
+        // pd/gray are bit-identical to the unfused version.
+        let raw_row = raw.w * 3;
         for y in 0..h {
+            let r0 = &raw.pixels[2 * y * raw_row..(2 * y + 1) * raw_row];
+            let r1 = &raw.pixels[(2 * y + 1) * raw_row..(2 * y + 2) * raw_row];
+            let pd_row = &mut pd[y * w * 3..(y + 1) * w * 3];
+            let gray_row = &mut gray[y * w..(y + 1) * w];
             for x in 0..w {
-                let mut px = [0f32; 3];
-                for c in 0..3 {
-                    let sum = raw.at(2 * y, 2 * x, c)
-                        + raw.at(2 * y, 2 * x + 1, c)
-                        + raw.at(2 * y + 1, 2 * x, c)
-                        + raw.at(2 * y + 1, 2 * x + 1, c);
-                    px[c] = sum / 4.0 / 255.0;
-                    pd[(y * w + x) * 3 + c] = px[c];
-                }
-                gray[y * w + x] = 0.299 * px[0] + 0.587 * px[1] + 0.114 * px[2];
+                let o = 6 * x;
+                let r = (r0[o] + r0[o + 3] + r1[o] + r1[o + 3]) / 4.0 / 255.0;
+                let g = (r0[o + 1] + r0[o + 4] + r1[o + 1] + r1[o + 4]) / 4.0 / 255.0;
+                let b = (r0[o + 2] + r0[o + 5] + r1[o + 2] + r1[o + 5]) / 4.0 / 255.0;
+                pd_row[3 * x] = r;
+                pd_row[3 * x + 1] = g;
+                pd_row[3 * x + 2] = b;
+                gray_row[x] = 0.299 * r + 0.587 * g + 0.114 * b;
             }
         }
         Ok(Preprocessed { h, w, pd, gray })
@@ -124,34 +176,82 @@ impl ComputeBackend for NativeBackend {
 
     fn lsh_bucket(&self, pre: &Preprocessed) -> Result<u32> {
         self.check_dims(pre)?;
-        let mut bucket = 0u32;
-        for (i, plane) in self.planes.iter().enumerate() {
-            let dot: f32 = plane.iter().zip(&pre.pd).map(|(p, x)| p * x).sum();
-            if dot >= 0.0 {
-                bucket |= 1 << (self.p_k - 1 - i);
-            }
-        }
-        Ok(bucket)
+        let mut dots = [0f32; MAX_PLANES];
+        gemv(
+            &self.planes,
+            self.p_k,
+            self.feature_dim,
+            &pre.pd,
+            &mut dots[..self.p_k],
+        );
+        Ok(self.bucket_from_projections(&dots[..self.p_k]))
     }
 
     fn ssim(&self, a: &Preprocessed, b: &Preprocessed) -> Result<f32> {
         self.check_dims(a)?;
         self.check_dims(b)?;
-        Ok(ssim_global(&a.gray, &b.gray))
+        ssim_global(&a.gray, &b.gray)
     }
 
     fn classify(&self, pre: &Preprocessed) -> Result<u32> {
         self.check_dims(pre)?;
-        let mut best = 0usize;
-        let mut best_score = f32::NEG_INFINITY;
-        for (c, row) in self.proj.iter().enumerate() {
-            let score: f32 = row.iter().zip(&pre.pd).map(|(w, x)| w * x).sum();
-            if score > best_score {
-                best_score = score;
-                best = c;
-            }
+        let mut scores = vec![0f32; self.num_classes];
+        gemv(
+            &self.proj,
+            self.num_classes,
+            self.feature_dim,
+            &pre.pd,
+            &mut scores,
+        );
+        Ok(argmax(&scores) as u32)
+    }
+
+    /// Batched classify: one GEMM per `BATCH`-task block over a
+    /// task-major input matrix. Bitwise identical to mapping
+    /// [`ComputeBackend::classify`] (shared kernel reduction order).
+    fn classify_many(&self, pres: &[&Preprocessed]) -> Result<Vec<u32>> {
+        for p in pres {
+            self.check_dims(p)?;
         }
-        Ok(best as u32)
+        let k = self.feature_dim;
+        let m = self.num_classes;
+        let mut labels = Vec::with_capacity(pres.len());
+        let mut x = vec![0f32; BATCH.min(pres.len()) * k];
+        let mut scores = vec![0f32; BATCH.min(pres.len()) * m];
+        for chunk in pres.chunks(BATCH) {
+            let n = chunk.len();
+            for (row, p) in x.chunks_exact_mut(k).zip(chunk) {
+                row.copy_from_slice(&p.pd);
+            }
+            gemm_nt(&x[..n * k], n, &self.proj, m, k, &mut scores[..n * m]);
+            labels.extend(scores[..n * m].chunks_exact(m).map(|row| argmax(row) as u32));
+        }
+        Ok(labels)
+    }
+
+    /// Batched LSH: the same GEMM against the hyperplane matrix.
+    fn lsh_bucket_many(&self, pres: &[&Preprocessed]) -> Result<Vec<u32>> {
+        for p in pres {
+            self.check_dims(p)?;
+        }
+        let k = self.feature_dim;
+        let m = self.p_k;
+        let mut buckets = Vec::with_capacity(pres.len());
+        let mut x = vec![0f32; BATCH.min(pres.len()) * k];
+        let mut dots = vec![0f32; BATCH.min(pres.len()) * m];
+        for chunk in pres.chunks(BATCH) {
+            let n = chunk.len();
+            for (row, p) in x.chunks_exact_mut(k).zip(chunk) {
+                row.copy_from_slice(&p.pd);
+            }
+            gemm_nt(&x[..n * k], n, &self.planes, m, k, &mut dots[..n * m]);
+            buckets.extend(
+                dots[..n * m]
+                    .chunks_exact(m)
+                    .map(|row| self.bucket_from_projections(row)),
+            );
+        }
+        Ok(buckets)
     }
 
     fn num_buckets(&self) -> usize {
@@ -199,11 +299,25 @@ mod tests {
     #[test]
     fn ssim_global_matches_identity_and_bounds() {
         let xs: Vec<f32> = (0..1024).map(|i| (i % 97) as f32 / 97.0).collect();
-        assert!((ssim_global(&xs, &xs) - 1.0).abs() < 1e-6);
+        assert!((ssim_global(&xs, &xs).unwrap() - 1.0).abs() < 1e-6);
         let ys: Vec<f32> = xs.iter().map(|x| 1.0 - x).collect();
-        let v = ssim_global(&xs, &ys);
+        let v = ssim_global(&xs, &ys).unwrap();
         assert!((-1.0..1.0).contains(&v));
         assert!(v < 0.5, "anti-correlated ssim {v}");
+    }
+
+    #[test]
+    fn ssim_global_rejects_mismatched_lengths() {
+        // Regression: the seed version `assert_eq!`-panicked here.
+        let a = vec![0.5f32; 16];
+        let b = vec![0.5f32; 15];
+        let err = ssim_global(&a, &b).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("mismatched plane lengths"),
+            "unexpected error: {msg}"
+        );
+        assert!(msg.contains("16") && msg.contains("15"), "{msg}");
     }
 
     #[test]
@@ -245,5 +359,23 @@ mod tests {
         assert_eq!(b.classify(&p1).unwrap(), b.classify(&p2).unwrap());
         assert_eq!(b.lsh_bucket(&p1).unwrap(), b.lsh_bucket(&p2).unwrap());
         assert!(b.ssim(&p1, &p2).unwrap() > 0.99);
+    }
+
+    #[test]
+    fn batched_paths_match_single_task_paths_bitwise() {
+        let b = backend();
+        let pres: Vec<Preprocessed> = (0..7)
+            .map(|seed| b.preprocess(&image(100 + seed)).unwrap())
+            .collect();
+        let refs: Vec<&Preprocessed> = pres.iter().collect();
+        let many_labels = b.classify_many(&refs).unwrap();
+        let many_buckets = b.lsh_bucket_many(&refs).unwrap();
+        for (i, p) in pres.iter().enumerate() {
+            assert_eq!(many_labels[i], b.classify(p).unwrap(), "label {i}");
+            assert_eq!(many_buckets[i], b.lsh_bucket(p).unwrap(), "bucket {i}");
+        }
+        // empty batches are fine
+        assert!(b.classify_many(&[]).unwrap().is_empty());
+        assert!(b.lsh_bucket_many(&[]).unwrap().is_empty());
     }
 }

@@ -16,17 +16,19 @@
 use std::collections::BTreeMap;
 use std::time::Duration;
 
+use crate::compute::kernels::{gemm_nt, gemv};
 use crate::compute::{native::ssim_global, ComputeBackend, NativeBackend, Preprocessed};
 use crate::config::SimConfig;
 use crate::coordinator::scrt::{Record, Scrt};
 use crate::coordinator::Scenario;
 use crate::error::Result;
-use crate::harness::bench::{black_box, Bencher, Measurement};
+use crate::harness::bench::{black_box, format_ns, Bencher, Measurement};
 use crate::harness::experiments::{run_scale_suite_timed, EXTENDED_SCALES};
 use crate::simulator::{prepare, Simulation};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::workload::build_workload;
+use crate::workload::texture::{SceneSpec, TextureSynth};
 
 /// Default output artifact of the suite.
 pub const DEFAULT_OUT: &str = "BENCH_hotpath.json";
@@ -137,7 +139,7 @@ pub fn run_suite(opts: &HotpathOpts) -> Result<Bencher> {
     let a = fake_pre(&mut rng);
     let c = fake_pre(&mut rng);
     b.bench("ssim_global_1024", || {
-        black_box(ssim_global(&a.gray, &c.gray));
+        black_box(ssim_global(&a.gray, &c.gray).unwrap());
     });
     let cfg = SimConfig::paper_default(5);
     let native = NativeBackend::new(&cfg);
@@ -146,6 +148,43 @@ pub fn run_suite(opts: &HotpathOpts) -> Result<Bencher> {
     });
     b.bench("classify_3072", || {
         black_box(native.classify(&a).unwrap());
+    });
+    // Batched classify (GEMM path): per-iteration time covers the whole
+    // 64-task batch, so per-task cost is per_iter / 64.
+    let batch_pres: Vec<Preprocessed> = (0..64).map(|_| fake_pre(&mut rng)).collect();
+    let batch_refs: Vec<&Preprocessed> = batch_pres.iter().collect();
+    b.bench("classify_batch64_3072", || {
+        black_box(native.classify_many(&batch_refs).unwrap());
+    });
+    b.bench("lsh_bucket_batch64_3072", || {
+        black_box(native.lsh_bucket_many(&batch_refs).unwrap());
+    });
+
+    // ---- raw kernels (shapes of the classifier / LSH paths) -------------
+    let wmat: Vec<f32> = (0..21 * 3072).map(|_| rng.f32() - 0.5).collect();
+    let xvec: Vec<f32> = (0..3072).map(|_| rng.f32()).collect();
+    let mut gemv_out = vec![0f32; 21];
+    b.bench("gemv_21x3072", || {
+        gemv(&wmat, 21, 3072, &xvec, &mut gemv_out);
+        black_box(gemv_out[0]);
+    });
+    let xmat: Vec<f32> = (0..64 * 3072).map(|_| rng.f32()).collect();
+    let mut gemm_out = vec![0f32; 64 * 21];
+    b.bench("gemm_64x21x3072", || {
+        gemm_nt(&xmat, 64, &wmat, 21, 3072, &mut gemm_out);
+        black_box(gemm_out[0]);
+    });
+
+    // ---- workload generation + preprocessing ----------------------------
+    let synth = TextureSynth::new(cfg.workload.raw_h, cfg.workload.raw_w, 0.05);
+    let scene = SceneSpec::sample(0, 3, &mut Rng::new(7));
+    let mut render_rng = Rng::new(99);
+    b.bench("render_64x64", || {
+        black_box(synth.render(&scene, &mut render_rng));
+    });
+    let img = synth.render(&scene, &mut Rng::new(100));
+    b.bench("preprocess_64x64", || {
+        black_box(native.preprocess(&img).unwrap());
     });
 
     // ---- PJRT dispatch (only when artifacts are usable) -----------------
@@ -233,6 +272,63 @@ pub fn load_bench_json(path: &str) -> Result<Json> {
     Json::parse(&std::fs::read_to_string(path)?)
 }
 
+/// Extract `name → per_iter_ns` from a `ccrsat-bench-v1` document,
+/// preserving document order.
+fn measurement_entries(doc: &Json) -> Result<Vec<(String, f64)>> {
+    let entries = doc.at(&["measurements"])?.as_arr()?;
+    let mut out = Vec::with_capacity(entries.len());
+    for e in entries {
+        out.push((
+            e.at(&["name"])?.as_str()?.to_string(),
+            e.at(&["per_iter_ns"])?.as_f64()?,
+        ));
+    }
+    Ok(out)
+}
+
+/// Render a markdown before/after table of a measured `ccrsat-bench-v1`
+/// document against the committed baseline — what the CI `bench` job
+/// appends to the workflow summary. Baseline rows the reduced-budget run
+/// skipped show `—`; measured benches absent from the baseline are listed
+/// at the bottom (they need a baseline refresh).
+pub fn comparison_markdown(measured: &Json, baseline: &Json) -> Result<String> {
+    let base = measurement_entries(baseline)?;
+    let meas = measurement_entries(measured)?;
+    let meas_map: BTreeMap<&str, f64> =
+        meas.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+    let mut out = String::from("## Hot-path bench vs committed baseline\n\n");
+    out.push_str("| bench | baseline | measured | measured/baseline |\n");
+    out.push_str("|---|---:|---:|---:|\n");
+    for (name, base_ns) in &base {
+        match meas_map.get(name.as_str()) {
+            Some(&m_ns) => out.push_str(&format!(
+                "| {} | {} | {} | {:.2}x |\n",
+                name,
+                format_ns(*base_ns).trim(),
+                format_ns(m_ns).trim(),
+                m_ns / base_ns
+            )),
+            None => out.push_str(&format!(
+                "| {} | {} | — | — |\n",
+                name,
+                format_ns(*base_ns).trim()
+            )),
+        }
+    }
+    let base_names: std::collections::BTreeSet<&str> =
+        base.iter().map(|(n, _)| n.as_str()).collect();
+    for (name, m_ns) in &meas {
+        if !base_names.contains(name.as_str()) {
+            out.push_str(&format!(
+                "| {} (no baseline) | — | {} | — |\n",
+                name,
+                format_ns(*m_ns).trim()
+            ));
+        }
+    }
+    Ok(out)
+}
+
 /// Compare measurements against a `ccrsat-bench-v1` baseline document: a
 /// measurement regresses when `per_iter_ns > factor × baseline`.
 ///
@@ -288,6 +384,12 @@ mod tests {
             "ssim_global_1024",
             "lsh_bucket_3072",
             "classify_3072",
+            "classify_batch64_3072",
+            "lsh_bucket_batch64_3072",
+            "gemv_21x3072",
+            "gemm_64x21x3072",
+            "render_64x64",
+            "preprocess_64x64",
             "simulate_slcr_3x3_45",
             "simulate_sccr_3x3_45",
         ] {
@@ -330,5 +432,29 @@ mod tests {
     fn baseline_check_rejects_malformed_documents() {
         let bad = Json::parse(r#"{"schema": "x"}"#).unwrap();
         assert!(check_against_baseline(&[], &bad, 2.0).is_err());
+    }
+
+    #[test]
+    fn comparison_markdown_covers_all_rows() {
+        let baseline = Json::parse(
+            r#"{"schema": "ccrsat-bench-v1", "measurements": [
+                {"name": "tracked", "per_iter_ns": 1000.0},
+                {"name": "skipped", "per_iter_ns": 2000.0}
+            ]}"#,
+        )
+        .unwrap();
+        let measured = Json::parse(
+            r#"{"schema": "ccrsat-bench-v1", "measurements": [
+                {"name": "tracked", "per_iter_ns": 500.0},
+                {"name": "brand_new", "per_iter_ns": 42.0}
+            ]}"#,
+        )
+        .unwrap();
+        let md = comparison_markdown(&measured, &baseline).unwrap();
+        assert!(md.contains("| tracked |"), "{md}");
+        assert!(md.contains("0.50x"), "ratio missing:\n{md}");
+        assert!(md.contains("| skipped |") && md.contains("| — | — |"), "{md}");
+        assert!(md.contains("brand_new (no baseline)"), "{md}");
+        assert!(comparison_markdown(&measured, &Json::parse("{}").unwrap()).is_err());
     }
 }

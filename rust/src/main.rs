@@ -5,6 +5,7 @@
 //! ccrsat reproduce  --experiment table2|table3|fig3|fig4|fig5|all [...]
 //! ccrsat sweep      --param tau|thco [...]
 //! ccrsat bench      [--scale] [--check] [--out F]   # hot-path perf suite
+//! ccrsat bench-report [--measured F] [--baseline F] # markdown perf table
 //! ccrsat inspect    [--artifacts DIR]        # artifact/manifest report
 //! ccrsat selftest   [--artifacts DIR]        # cross-check pjrt vs native
 //! ```
@@ -36,6 +37,8 @@ COMMANDS:
     reproduce   regenerate a paper table/figure (table2|table3|fig3|fig4|fig5|all)
     sweep       parameter sensitivity sweep (tau | thco)
     bench       run the hot-path benchmark suite, write BENCH_hotpath.json
+    bench-report  print a markdown before/after table of a bench artifact
+                  vs the committed baseline (no benches are run)
     inspect     print the artifact manifest summary
     selftest    cross-check the PJRT artifacts against the native backend
 
@@ -45,8 +48,9 @@ BENCH OPTIONS:
     --scale              add production-scale SCRT tables + 11x11/15x15 grids
     --out <FILE>         JSON artifact path (default BENCH_hotpath.json)
     --check              compare against the committed baseline, fail on regression
-    --baseline <FILE>    baseline to check against (default benches/baseline.json)
+    --baseline <FILE>    baseline to check/report against (default benches/baseline.json)
     --factor <X>         regression factor for --check (default 2.0)
+    --measured <FILE>    bench-report: measured artifact (default BENCH_hotpath.json)
 
 COMMON OPTIONS:
     --config <FILE>      TOML config (defaults: paper Table I values)
@@ -155,6 +159,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "reproduce" => cmd_reproduce(&flags),
         "sweep" => cmd_sweep(&flags),
         "bench" => cmd_bench(&flags),
+        "bench-report" => cmd_bench_report(&flags),
         "inspect" => cmd_inspect(&flags),
         "selftest" => cmd_selftest(&flags),
         other => Err(Error::config(format!(
@@ -356,6 +361,18 @@ fn cmd_bench(flags: &Flags) -> Result<()> {
             regressions.len()
         )));
     }
+    Ok(())
+}
+
+/// `ccrsat bench-report`: render the measured-vs-baseline markdown table
+/// from existing artifacts (the CI bench job pipes this into the workflow
+/// summary; no benches are run).
+fn cmd_bench_report(flags: &Flags) -> Result<()> {
+    let measured_path = flags.get("measured").unwrap_or(hotpath::DEFAULT_OUT);
+    let baseline_path = flags.get("baseline").unwrap_or(hotpath::BASELINE_PATH);
+    let measured = hotpath::load_bench_json(measured_path)?;
+    let baseline = hotpath::load_bench_json(baseline_path)?;
+    print!("{}", hotpath::comparison_markdown(&measured, &baseline)?);
     Ok(())
 }
 

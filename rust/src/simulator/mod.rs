@@ -26,7 +26,7 @@ use crate::error::{Error, Result};
 use crate::metrics::{aggregate, RunReport, SatSummary, TaskLog};
 use crate::network::{CommModel, GridTopology};
 use crate::satellite::SatelliteState;
-use crate::workload::{build_workload, SatId, Task, Workload};
+use crate::workload::{build_workload, ImageData, SatId, Task, Workload};
 use events::{EventKind, EventQueue};
 
 /// A configured simulation, ready to run.
@@ -47,14 +47,70 @@ pub struct Prepared {
     pub oracle: Vec<u32>,
 }
 
-/// Pre-process every task and compute oracle labels (batched classify).
+/// Floor on tasks per preprocessing thread: below this the spawn overhead
+/// beats the win, so small workloads stay effectively sequential.
+const MIN_TASKS_PER_THREAD: usize = 16;
+
+/// Preprocessing fan-out width for `n` tasks.
+fn preprocess_threads(n: usize) -> usize {
+    let hw = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    hw.min(n.div_ceil(MIN_TASKS_PER_THREAD)).max(1)
+}
+
+/// Pre-process every task and compute oracle labels.
+///
+/// Preprocessing fans out across scoped threads (the same pattern as
+/// `run_scenarios_parallel`): the task list is split into contiguous
+/// chunks, each worker runs the backend's batched
+/// [`ComputeBackend::preprocess_many`] on its chunk, and the chunk results
+/// are concatenated in task order. The oracle labels then come from one
+/// [`ComputeBackend::classify_many`] pass (a real GEMM on the native
+/// backend). Because every per-task result is independent and the batched
+/// kernels share the single-task reduction order, the output is
+/// *identical* to [`prepare_sequential`] — asserted by the determinism
+/// tests below and in `tests/properties.rs`.
 pub fn prepare(backend: &dyn ComputeBackend, workload: &Workload) -> Result<Prepared> {
+    let tasks = &workload.tasks;
+    let n = tasks.len();
+    let threads = preprocess_threads(n);
+    let chunk_len = n.div_ceil(threads).max(1);
+    let num_chunks = n.div_ceil(chunk_len);
+    let mut chunk_results: Vec<Option<Result<Vec<Preprocessed>>>> =
+        (0..num_chunks).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for (slot, chunk) in chunk_results.iter_mut().zip(tasks.chunks(chunk_len)) {
+            scope.spawn(move || {
+                let raws: Vec<&ImageData> = chunk.iter().map(|t| &t.raw).collect();
+                *slot = Some(backend.preprocess_many(&raws));
+            });
+        }
+    });
+    let mut pres = Vec::with_capacity(n);
+    for r in chunk_results {
+        pres.extend(r.expect("preprocess worker completed")?);
+    }
+    let refs: Vec<&Preprocessed> = pres.iter().collect();
+    let oracle = backend.classify_many(&refs)?;
+    Ok(Prepared { pres, oracle })
+}
+
+/// Sequential, unbatched reference implementation of [`prepare`] — one
+/// `preprocess` and one `classify` call per task, in task order. Kept for
+/// determinism cross-checks and single-core environments.
+pub fn prepare_sequential(
+    backend: &dyn ComputeBackend,
+    workload: &Workload,
+) -> Result<Prepared> {
     let mut pres = Vec::with_capacity(workload.tasks.len());
     for t in &workload.tasks {
         pres.push(backend.preprocess(&t.raw)?);
     }
-    let refs: Vec<&Preprocessed> = pres.iter().collect();
-    let oracle = backend.classify_many(&refs)?;
+    let mut oracle = Vec::with_capacity(pres.len());
+    for p in &pres {
+        oracle.push(backend.classify(p)?);
+    }
     Ok(Prepared { pres, oracle })
 }
 
@@ -546,6 +602,50 @@ mod tests {
         assert_eq!(a.reused_tasks, b.reused_tasks);
         assert_eq!(a.data_transfer_mb, b.data_transfer_mb);
         assert_eq!(a.collab_events, b.collab_events);
+    }
+
+    #[test]
+    fn parallel_batched_prepare_matches_sequential() {
+        let cfg = tiny_cfg(3, 40);
+        let backend = NativeBackend::new(&cfg);
+        let wl = build_workload(&cfg);
+        let par = prepare(&backend, &wl).unwrap();
+        let seq = prepare_sequential(&backend, &wl).unwrap();
+        assert_eq!(par.pres.len(), seq.pres.len());
+        for (i, (a, b)) in par.pres.iter().zip(&seq.pres).enumerate() {
+            assert_eq!(a, b, "pre {i} diverged");
+        }
+        assert_eq!(par.oracle, seq.oracle);
+
+        // ... and a run over either Prepared produces identical reports.
+        let ra = Simulation::new(&cfg, &backend, Scenario::Sccr)
+            .with_workload(&wl)
+            .with_prepared(&par)
+            .run()
+            .unwrap();
+        let rb = Simulation::new(&cfg, &backend, Scenario::Sccr)
+            .with_workload(&wl)
+            .with_prepared(&seq)
+            .run()
+            .unwrap();
+        assert_eq!(ra.completion_time, rb.completion_time);
+        assert_eq!(ra.reused_tasks, rb.reused_tasks);
+        assert_eq!(ra.reuse_accuracy, rb.reuse_accuracy);
+        assert_eq!(ra.data_transfer_mb, rb.data_transfer_mb);
+    }
+
+    #[test]
+    fn prepare_handles_empty_workloads() {
+        let cfg = tiny_cfg(3, 12);
+        let backend = NativeBackend::new(&cfg);
+        let wl = Workload {
+            tasks: Vec::new(),
+            per_satellite: vec![0; 9],
+            num_scenes: 0,
+        };
+        let prep = prepare(&backend, &wl).unwrap();
+        assert!(prep.pres.is_empty());
+        assert!(prep.oracle.is_empty());
     }
 
     #[test]

@@ -29,6 +29,8 @@ impl SplitMix64 {
 #[derive(Clone, Debug)]
 pub struct Rng {
     s: [u64; 4],
+    /// Spare normal from the last Box–Muller pair (see [`Rng::normal`]).
+    spare_normal: Option<f64>,
 }
 
 impl Rng {
@@ -36,7 +38,10 @@ impl Rng {
     pub fn new(seed: u64) -> Self {
         let mut sm = SplitMix64::new(seed);
         let s = [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()];
-        Self { s }
+        Self {
+            s,
+            spare_normal: None,
+        }
     }
 
     /// Derive an independent child stream (e.g. per satellite, per class).
@@ -90,13 +95,28 @@ impl Rng {
     }
 
     /// Standard normal via Box–Muller.
+    ///
+    /// Each Box–Muller transform yields an independent *pair* of normals
+    /// from one `(u1, u2)` draw; the seed implementation discarded the
+    /// sine half and paid the `ln`/`sqrt`/trig cost on every call. The
+    /// spare is now cached in the generator state and returned by the next
+    /// call, halving the transcendental work per normal. The stream stays
+    /// fully deterministic (the spare is part of `Clone`d state), but its
+    /// *values* differ from the seed from the second draw of each pair
+    /// onward — goldens that depended on the old draw order were
+    /// re-baselined (see CHANGES.md, PR 3).
     pub fn normal(&mut self) -> f64 {
+        if let Some(spare) = self.spare_normal.take() {
+            return spare;
+        }
         loop {
             let u1 = self.f64();
             if u1 > 1e-300 {
                 let u2 = self.f64();
-                return (-2.0 * u1.ln()).sqrt()
-                    * (2.0 * std::f64::consts::PI * u2).cos();
+                let r = (-2.0 * u1.ln()).sqrt();
+                let theta = 2.0 * std::f64::consts::PI * u2;
+                self.spare_normal = Some(r * theta.sin());
+                return r * theta.cos();
             }
         }
     }
@@ -188,6 +208,32 @@ mod tests {
                 assert!(r.below(n) < n);
             }
         }
+    }
+
+    #[test]
+    fn normal_pair_caching_is_deterministic() {
+        // Two generators with the same seed must produce the same normal
+        // stream, and cloning mid-pair must carry the cached spare along.
+        let mut a = Rng::new(77);
+        let mut b = Rng::new(77);
+        for _ in 0..101 {
+            assert_eq!(a.normal().to_bits(), b.normal().to_bits());
+        }
+        let mut c = a.clone(); // a holds a cached spare here (odd draw count)
+        assert_eq!(a.normal().to_bits(), c.normal().to_bits());
+        assert_eq!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn normal_spare_does_not_disturb_other_streams() {
+        // After an odd number of normal() calls the uniform stream picks
+        // up exactly where the Box–Muller draws left it.
+        let mut a = Rng::new(5150);
+        let mut b = Rng::new(5150);
+        let _ = a.normal(); // consumes (u1, u2), caches the spare
+        let _ = b.f64();
+        let _ = b.f64();
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]

@@ -137,58 +137,71 @@ impl TextureSynth {
         }
     }
 
-    /// Pattern intensity in [0, 1] for a scene at normalised coords (u, v).
-    fn intensity(&self, scene: &SceneSpec, u: f32, v: f32) -> f32 {
-        let p = class_params(scene.class_id);
-        let freq = p.freq * scene.scale;
-        let (s, c) = p.angle.sin_cos();
-        // rotate, then phase-shift
-        let ru = c * u - s * v + scene.phase_x;
-        let rv = s * u + c * v + scene.phase_y;
-        match family(scene.class_id) {
-            Family::Grating => {
-                0.5 + 0.5 * (2.0 * std::f32::consts::PI * freq * ru).sin()
-            }
-            Family::Checker => {
-                let a = ((ru * freq).floor() as i64 + (rv * freq).floor() as i64) & 1;
-                a as f32
-            }
-            Family::Blobs => {
-                smooth_noise(ru * freq, rv * freq, scene.class_id as u64 + 11)
-            }
-            Family::Gradient => {
-                // slow large-scale gradient + gentle ripple (water)
-                let g = (ru + rv) * 0.5;
-                let ripple = 0.12 * (2.0 * std::f32::consts::PI * freq * 1.7 * rv).sin();
-                (g.fract() + ripple).clamp(0.0, 1.0)
-            }
-            Family::Stripes => {
-                let t = (ru * freq).fract();
-                if t < 0.25 {
-                    1.0
-                } else {
-                    0.15
-                }
-            }
-        }
-    }
-
     /// Render one capture of a scene. `rng` drives the per-capture sensor
     /// noise only — two captures of the same scene differ just by noise.
+    ///
+    /// All per-scene work (the class-parameter hash, `sin_cos` of the
+    /// rotation angle, derived frequencies) is hoisted out of the pixel
+    /// loop; the loop itself writes into a preallocated row-major buffer
+    /// and evaluates only the rotated-coordinate pattern plus the sensor
+    /// noise per pixel.
     pub fn render(&self, scene: &SceneSpec, rng: &mut Rng) -> ImageData {
-        let mut pixels = Vec::with_capacity(self.h * self.w * 3);
         let p = class_params(scene.class_id);
-        for y in 0..self.h {
-            for x in 0..self.w {
-                let u = x as f32 / self.w as f32;
-                let v = y as f32 / self.h as f32;
-                let t = self.intensity(scene, u, v);
+        let fam = family(scene.class_id);
+        let freq = p.freq * scene.scale;
+        let (s, c) = p.angle.sin_cos();
+        let two_pi_freq = 2.0 * std::f32::consts::PI * freq;
+        let ripple_freq = 2.0 * std::f32::consts::PI * freq * 1.7;
+        let noise_seed = scene.class_id as u64 + 11;
+        let inv_w = 1.0 / self.w as f32;
+        let inv_h = 1.0 / self.h as f32;
+        // per-channel affine shade: shade = lo[ch] + span[ch] * t + illum
+        let lo = [
+            p.base[0] + scene.illum,
+            p.base[1] + scene.illum,
+            p.base[2] + scene.illum,
+        ];
+        let span = [
+            p.alt[0] - p.base[0],
+            p.alt[1] - p.base[1],
+            p.alt[2] - p.base[2],
+        ];
+        let mut pixels = vec![0f32; self.h * self.w * 3];
+        for (y, row) in pixels.chunks_exact_mut(self.w * 3).enumerate() {
+            let v = y as f32 * inv_h;
+            // rotate, then phase-shift: ru = c·u − s·v + φx, rv = s·u + c·v + φy
+            let ru0 = scene.phase_x - s * v;
+            let rv0 = scene.phase_y + c * v;
+            for (x, out) in row.chunks_exact_mut(3).enumerate() {
+                let u = x as f32 * inv_w;
+                let ru = c * u + ru0;
+                let rv = s * u + rv0;
+                let t = match fam {
+                    Family::Grating => 0.5 + 0.5 * (two_pi_freq * ru).sin(),
+                    Family::Checker => {
+                        let a =
+                            ((ru * freq).floor() as i64 + (rv * freq).floor() as i64) & 1;
+                        a as f32
+                    }
+                    Family::Blobs => smooth_noise(ru * freq, rv * freq, noise_seed),
+                    Family::Gradient => {
+                        // slow large-scale gradient + gentle ripple (water)
+                        let g = (ru + rv) * 0.5;
+                        let ripple = 0.12 * (ripple_freq * rv).sin();
+                        (g.fract() + ripple).clamp(0.0, 1.0)
+                    }
+                    Family::Stripes => {
+                        if (ru * freq).fract() < 0.25 {
+                            1.0
+                        } else {
+                            0.15
+                        }
+                    }
+                };
                 for ch in 0..3 {
-                    let base = p.base[ch] + (p.alt[ch] - p.base[ch]) * t;
-                    let noisy = base
-                        + scene.illum
-                        + self.noise_sigma * rng.normal() as f32;
-                    pixels.push(noisy.clamp(0.0, 255.0));
+                    let noisy =
+                        lo[ch] + span[ch] * t + self.noise_sigma * rng.normal() as f32;
+                    out[ch] = noisy.clamp(0.0, 255.0);
                 }
             }
         }

@@ -4,13 +4,17 @@
 //! seeded random-sweep driver: each property runs across many generated
 //! cases; failures print the seed for exact reproduction.
 
-use ccrsat::compute::Preprocessed;
+use ccrsat::compute::kernels::{dot, gemm_nt, gemv};
+use ccrsat::compute::{ComputeBackend, NativeBackend, Preprocessed};
 use ccrsat::coordinator::sccr::{select_source, AreaPolicy};
 use ccrsat::coordinator::scrt::{Record, Scrt};
 use ccrsat::coordinator::srs::srs;
+use ccrsat::coordinator::Scenario;
 use ccrsat::network::{CommModel, GridTopology};
 use ccrsat::config::SimConfig;
+use ccrsat::simulator::{prepare, prepare_sequential, Simulation};
 use ccrsat::util::rng::Rng;
+use ccrsat::workload::build_workload;
 
 const CASES: u64 = 200;
 
@@ -32,6 +36,168 @@ fn record(id: usize, rng: &mut Rng) -> Record {
         reuse_count: rng.below(10) as u32,
         last_used: rng.f64() * 100.0,
         origin: rng.below(25),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocked GEMV / GEMM kernels ≡ naive per-row reference
+// ---------------------------------------------------------------------------
+
+/// Strict left-to-right f64 dot — the naive per-row reference the blocked
+/// kernels are measured against.
+fn naive_dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| f64::from(x) * f64::from(y))
+        .sum()
+}
+
+/// Condition-aware tolerance scale: re-associating a float sum moves the
+/// result by a multiple of machine epsilon *per magnitude of the summed
+/// terms*, so relative error is measured against Σ|aᵢ·bᵢ| (+1 so
+/// zero-length rows don't divide by zero).
+fn dot_scale(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (f64::from(x) * f64::from(y)).abs())
+        .sum::<f64>()
+        + 1.0
+}
+
+#[test]
+fn prop_blocked_gemv_matches_naive_reference() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x6E44);
+        let rows = 1 + rng.below(24);
+        // shapes straddle the 8-lane boundary and go up to kernel-sized
+        let cols = 1 + rng.below(3100);
+        let a: Vec<f32> = (0..rows * cols).map(|_| rng.f32() - 0.5).collect();
+        let x: Vec<f32> = (0..cols).map(|_| rng.f32() - 0.5).collect();
+        let mut out = vec![0f32; rows];
+        gemv(&a, rows, cols, &x, &mut out);
+        for (r, &got) in out.iter().enumerate() {
+            let row = &a[r * cols..(r + 1) * cols];
+            let want = naive_dot_f64(row, &x);
+            let err = (f64::from(got) - want).abs();
+            let tol = 1e-4 * dot_scale(row, &x);
+            assert!(
+                err <= tol,
+                "seed {seed}: row {r} ({rows}x{cols}): |{got} - {want}| = {err} > {tol}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_blocked_gemm_matches_naive_reference_and_gemv_bitwise() {
+    for seed in 0..CASES / 4 {
+        let mut rng = Rng::new(seed ^ 0x9E88);
+        let n = 1 + rng.below(20);
+        let m = 1 + rng.below(24);
+        let k = 1 + rng.below(800);
+        let x: Vec<f32> = (0..n * k).map(|_| rng.f32() - 0.5).collect();
+        let w: Vec<f32> = (0..m * k).map(|_| rng.f32() - 0.5).collect();
+        let mut out = vec![0f32; n * m];
+        gemm_nt(&x, n, &w, m, k, &mut out);
+        for i in 0..n {
+            let xrow = &x[i * k..(i + 1) * k];
+            // bitwise identical to the per-row GEMV path ...
+            let mut row_out = vec![0f32; m];
+            gemv(&w, m, k, xrow, &mut row_out);
+            for j in 0..m {
+                assert_eq!(
+                    out[i * m + j].to_bits(),
+                    row_out[j].to_bits(),
+                    "seed {seed}: ({i},{j}) of {n}x{m}x{k} diverges from gemv"
+                );
+                assert_eq!(
+                    row_out[j].to_bits(),
+                    dot(xrow, &w[j * k..(j + 1) * k]).to_bits(),
+                    "seed {seed}: gemv vs dot"
+                );
+            }
+            // ... and within 1e-4 relative of the naive reference.
+            for j in 0..m {
+                let wrow = &w[j * k..(j + 1) * k];
+                let want = naive_dot_f64(xrow, wrow);
+                let err = (f64::from(out[i * m + j]) - want).abs();
+                let tol = 1e-4 * dot_scale(xrow, wrow);
+                assert!(err <= tol, "seed {seed}: ({i},{j}): {err} > {tol}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched backend paths ≡ single-task paths; prepare() ≡ sequential
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_native_batched_apis_match_single_task_paths() {
+    let cfg = SimConfig::paper_default(3);
+    let backend = NativeBackend::new(&cfg);
+    let dim = cfg.workload.raw_h / 2;
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed ^ 0xBA7C);
+        let count = 1 + rng.below(90); // straddles the 64-task GEMM block
+        let pres: Vec<Preprocessed> = (0..count)
+            .map(|_| Preprocessed {
+                h: dim,
+                w: dim,
+                pd: (0..dim * dim * 3).map(|_| rng.f32()).collect(),
+                gray: (0..dim * dim).map(|_| rng.f32()).collect(),
+            })
+            .collect();
+        let refs: Vec<&Preprocessed> = pres.iter().collect();
+        let labels = backend.classify_many(&refs).unwrap();
+        let buckets = backend.lsh_bucket_many(&refs).unwrap();
+        assert_eq!(labels.len(), count);
+        assert_eq!(buckets.len(), count);
+        for (i, p) in pres.iter().enumerate() {
+            assert_eq!(
+                labels[i],
+                backend.classify(p).unwrap(),
+                "seed {seed}: label {i} of {count}"
+            );
+            assert_eq!(
+                buckets[i],
+                backend.lsh_bucket(p).unwrap(),
+                "seed {seed}: bucket {i} of {count}"
+            );
+        }
+    }
+}
+
+/// Fixed-seed end-to-end invariance: the parallel + batched `prepare` and
+/// the sequential unbatched reference produce identical `Prepared` data,
+/// and the fixed-seed `RunReport` reuse/accuracy metrics are identical
+/// whichever path fed the simulation.
+#[test]
+fn prop_fixed_seed_reuse_metrics_invariant_across_prepare_paths() {
+    let mut cfg = SimConfig::paper_default(3);
+    cfg.workload.total_tasks = 45;
+    let backend = NativeBackend::new(&cfg);
+    let wl = build_workload(&cfg);
+    let par = prepare(&backend, &wl).unwrap();
+    let seq = prepare_sequential(&backend, &wl).unwrap();
+    assert_eq!(par.pres, seq.pres, "preprocessed inputs diverged");
+    assert_eq!(par.oracle, seq.oracle, "oracle labels diverged");
+    for scenario in [Scenario::Slcr, Scenario::Sccr] {
+        let a = Simulation::new(&cfg, &backend, scenario)
+            .with_workload(&wl)
+            .with_prepared(&par)
+            .run()
+            .unwrap();
+        let b = Simulation::new(&cfg, &backend, scenario)
+            .with_workload(&wl)
+            .with_prepared(&seq)
+            .run()
+            .unwrap();
+        assert_eq!(a.reuse_rate, b.reuse_rate, "{scenario}");
+        assert_eq!(a.reuse_accuracy, b.reuse_accuracy, "{scenario}");
+        assert_eq!(a.reused_tasks, b.reused_tasks, "{scenario}");
+        assert_eq!(a.completion_time, b.completion_time, "{scenario}");
+        assert_eq!(a.data_transfer_mb, b.data_transfer_mb, "{scenario}");
     }
 }
 
