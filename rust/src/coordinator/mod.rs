@@ -6,14 +6,18 @@
 //! * [`slcr`] — Algorithm 1, local computation reuse;
 //! * [`sccr`] — Algorithm 2, collaborative source selection + area
 //!   expansion;
+//! * [`policy`] — the [`CollabPolicy`] trait: per-scenario Alg. 2
+//!   triggering, damping and source selection behind one seam;
 //! * [`scenarios`] — the five evaluation scenarios of Sec. V.
 
+pub mod policy;
 pub mod scenarios;
 pub mod scrt;
 pub mod slcr;
 pub mod sccr;
 pub mod srs;
 
+pub use policy::CollabPolicy;
 pub use scenarios::Scenario;
 pub use scrt::{Record, RecordId, Scrt};
 pub use sccr::{select_source, CollabDecision};

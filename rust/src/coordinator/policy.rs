@@ -1,0 +1,164 @@
+//! Scenario behaviour behind the engine: *when* a satellite requests
+//! collaboration and *how* the data source is chosen.
+//!
+//! The engine ([`crate::simulator::engine`]) is scenario-agnostic: at every
+//! task completion it asks the active [`CollabPolicy`] whether the Alg. 2
+//! trigger fires, and — when it does — delegates source selection to the
+//! policy. The damping/hysteresis special-casing that used to live as
+//! `if self.scenario != Scenario::SrsPriority` branches inside the event
+//! loop is a trait method here, so new scenarios plug in as new impls
+//! instead of new branches.
+//!
+//! Three built-in policies mirror the paper's collaborating scenarios:
+//!
+//! * [`SccrPolicy`] — full SCCR (Alg. 2): damped, one area expansion;
+//! * [`SccrInitPolicy`] — SCCR-INIT: damped, initial area only;
+//! * [`SrsPriorityPolicy`] — the SRS-Priority baseline: global source,
+//!   whole-network flood, **no damping** — exactly the "redundant
+//!   cooperation" behaviour the paper blames for its poor performance.
+
+use crate::coordinator::sccr::{select_source, AreaPolicy, CollabDecision};
+use crate::network::topology::GridTopology;
+use crate::workload::SatId;
+
+/// Per-scenario collaboration behaviour (Alg. 2 trigger + source search).
+///
+/// `Sync` is a supertrait so the engine's `&'static dyn CollabPolicy`
+/// handle is `Send` — one policy instance serves all scenario threads.
+pub trait CollabPolicy: Sync {
+    /// The Alg. 2 area policy driving source selection.
+    fn area_policy(&self) -> AreaPolicy;
+
+    /// Do the damping mechanisms apply — request hysteresis, receiver
+    /// suppression after a delivery, and the network quiet period while a
+    /// broadcast is in flight? The proposed designs damp; the naive SRS
+    /// Priority baseline floods whenever its cooldown allows.
+    fn damped(&self) -> bool {
+        true
+    }
+
+    /// Should a satellite whose SRS is `my_srs` issue a collaboration
+    /// request now? `armed` is the requester's hysteresis state, `cooled`
+    /// whether its cooldown window has elapsed, and `quiet_until` the
+    /// virtual time until which the inter-satellite links are saturated
+    /// with a previous broadcast's payloads.
+    fn should_request(
+        &self,
+        armed: bool,
+        my_srs: f64,
+        th_co: f64,
+        cooled: bool,
+        now: f64,
+        quiet_until: f64,
+    ) -> bool {
+        my_srs < th_co
+            && cooled
+            && (!self.damped() || (armed && now >= quiet_until))
+    }
+
+    /// Run source selection (Alg. 2 lines 1–13 / the baseline variants).
+    fn select_source(
+        &self,
+        topo: &GridTopology,
+        req: SatId,
+        all_srs: &[f64],
+        th_co: f64,
+    ) -> Option<CollabDecision> {
+        select_source(topo, req, all_srs, th_co, self.area_policy())
+    }
+}
+
+/// Full SCCR (Alg. 2): damped, with one area expansion.
+pub struct SccrPolicy;
+
+impl CollabPolicy for SccrPolicy {
+    fn area_policy(&self) -> AreaPolicy {
+        AreaPolicy::WithExpansion
+    }
+}
+
+/// SCCR-INIT baseline: damped, initial collaboration area only.
+pub struct SccrInitPolicy;
+
+impl CollabPolicy for SccrInitPolicy {
+    fn area_policy(&self) -> AreaPolicy {
+        AreaPolicy::InitialOnly
+    }
+}
+
+/// SRS-Priority baseline: global SRS maximum as the source, whole-network
+/// broadcast, no damping.
+pub struct SrsPriorityPolicy;
+
+impl CollabPolicy for SrsPriorityPolicy {
+    fn area_policy(&self) -> AreaPolicy {
+        AreaPolicy::GlobalSrsPriority
+    }
+
+    fn damped(&self) -> bool {
+        false
+    }
+}
+
+/// Shared policy instances ([`crate::coordinator::Scenario::collab_policy`]
+/// hands these out; the policies are stateless, so one of each serves the
+/// whole process).
+pub static SCCR_POLICY: SccrPolicy = SccrPolicy;
+pub static SCCR_INIT_POLICY: SccrInitPolicy = SccrInitPolicy;
+pub static SRS_PRIORITY_POLICY: SrsPriorityPolicy = SrsPriorityPolicy;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn damped_policies_gate_on_hysteresis_and_quiet_period() {
+        let p = &SCCR_POLICY;
+        // below threshold, cooled, armed, network quiet: request
+        assert!(p.should_request(true, 0.2, 0.5, true, 10.0, 5.0));
+        // disarmed: suppressed
+        assert!(!p.should_request(false, 0.2, 0.5, true, 10.0, 5.0));
+        // network still busy: suppressed
+        assert!(!p.should_request(true, 0.2, 0.5, true, 10.0, 20.0));
+        // not cooled: suppressed
+        assert!(!p.should_request(true, 0.2, 0.5, false, 10.0, 5.0));
+        // SRS fine: no need
+        assert!(!p.should_request(true, 0.9, 0.5, true, 10.0, 5.0));
+    }
+
+    #[test]
+    fn flooding_policy_ignores_damping() {
+        let p = &SRS_PRIORITY_POLICY;
+        assert!(!p.damped());
+        // disarmed and network busy — SRS Priority floods anyway
+        assert!(p.should_request(false, 0.2, 0.5, true, 10.0, 20.0));
+        // ... but still respects its own cooldown and threshold
+        assert!(!p.should_request(false, 0.2, 0.5, false, 10.0, 20.0));
+        assert!(!p.should_request(false, 0.9, 0.5, true, 10.0, 20.0));
+    }
+
+    #[test]
+    fn policies_carry_their_area_policies() {
+        assert_eq!(SCCR_POLICY.area_policy(), AreaPolicy::WithExpansion);
+        assert_eq!(SCCR_INIT_POLICY.area_policy(), AreaPolicy::InitialOnly);
+        assert_eq!(
+            SRS_PRIORITY_POLICY.area_policy(),
+            AreaPolicy::GlobalSrsPriority
+        );
+    }
+
+    #[test]
+    fn select_source_delegates_to_area_policy() {
+        let topo = GridTopology::new(5);
+        let mut srs = vec![0.2; 25];
+        let req = topo.sat_at(2, 2);
+        let far = topo.sat_at(0, 0); // only reachable via expansion
+        srs[far] = 0.9;
+        let d = SCCR_POLICY.select_source(&topo, req, &srs, 0.5).unwrap();
+        assert_eq!(d.source, far);
+        assert!(d.expanded);
+        assert!(SCCR_INIT_POLICY
+            .select_source(&topo, req, &srs, 0.5)
+            .is_none());
+    }
+}

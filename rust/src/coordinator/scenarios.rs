@@ -1,5 +1,8 @@
 //! The five evaluation scenarios of Sec. V-A.
 
+use crate::coordinator::policy::{
+    CollabPolicy, SCCR_INIT_POLICY, SCCR_POLICY, SRS_PRIORITY_POLICY,
+};
 use crate::coordinator::sccr::AreaPolicy;
 
 /// Scenario under evaluation.
@@ -41,14 +44,21 @@ impl Scenario {
         )
     }
 
-    /// The Alg. 2 area policy, for collaborating scenarios.
-    pub fn area_policy(&self) -> Option<AreaPolicy> {
+    /// The collaboration behaviour of this scenario — `None` for the
+    /// non-collaborating scenarios. The engine drives Alg. 2 triggering,
+    /// damping and source selection entirely through this trait handle.
+    pub fn collab_policy(&self) -> Option<&'static dyn CollabPolicy> {
         match self {
-            Scenario::SrsPriority => Some(AreaPolicy::GlobalSrsPriority),
-            Scenario::SccrInit => Some(AreaPolicy::InitialOnly),
-            Scenario::Sccr => Some(AreaPolicy::WithExpansion),
+            Scenario::SrsPriority => Some(&SRS_PRIORITY_POLICY),
+            Scenario::SccrInit => Some(&SCCR_INIT_POLICY),
+            Scenario::Sccr => Some(&SCCR_POLICY),
             _ => None,
         }
+    }
+
+    /// The Alg. 2 area policy, for collaborating scenarios.
+    pub fn area_policy(&self) -> Option<AreaPolicy> {
+        self.collab_policy().map(|p| p.area_policy())
     }
 
     /// Column label used in the paper's tables.
@@ -102,6 +112,18 @@ mod tests {
         );
         assert_eq!(Scenario::WithoutCr.area_policy(), None);
         assert_eq!(Scenario::Slcr.area_policy(), None);
+    }
+
+    #[test]
+    fn collab_policies_map_to_scenarios() {
+        assert!(Scenario::WithoutCr.collab_policy().is_none());
+        assert!(Scenario::Slcr.collab_policy().is_none());
+        assert!(Scenario::Sccr.collab_policy().unwrap().damped());
+        assert!(Scenario::SccrInit.collab_policy().unwrap().damped());
+        assert!(
+            !Scenario::SrsPriority.collab_policy().unwrap().damped(),
+            "the SRS Priority baseline floods"
+        );
     }
 
     #[test]

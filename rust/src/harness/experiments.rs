@@ -24,8 +24,8 @@
 //!   threads (the native backend is read-only; the PJRT engine's compile
 //!   cache is a mutex);
 //! * each [`Simulation::run`] keeps all mutable state — event queue,
-//!   SCRTs, satellite states, and the `Rc`-shared broadcast records —
-//!   strictly thread-local, so no cross-thread `Arc` is needed;
+//!   per-satellite nodes, and the `Arc`-shared broadcast records —
+//!   strictly thread-local;
 //! * every scenario run is a pure function of `(config, workload,
 //!   prepared)`, so parallel results are bit-identical to sequential ones
 //!   (asserted by the `parallel_matches_sequential` tests).
@@ -40,7 +40,9 @@ use crate::error::Result;
 use crate::metrics::{
     reports_to_csv, scale_scenario_table, sweep_table, RunReport,
 };
-use crate::simulator::{prepare, Prepared, Simulation};
+use crate::simulator::{
+    prepare, Prepared, PreparedSource, Simulation, StreamConfig, StreamingSource,
+};
 use crate::workload::{build_workload, Workload};
 
 /// Paper network scales.
@@ -115,6 +117,33 @@ pub fn run_scenario(
         .with_workload(&ps.workload)
         .with_prepared(&ps.prepared)
         .run()
+}
+
+/// Run one scenario at scale `n` with *streaming* preparation: task
+/// inputs are prepared in on-demand chunks whose residency is bounded by
+/// `stream`'s window instead of the task count — the entry point for
+/// grids/workloads too large to hold a full [`Prepared`] table. Returns
+/// the report plus the source's peak resident prepared-task count. The
+/// run is aggregate-only (no per-task logs held) and every aggregate
+/// metric is bit-identical to the materialized [`run_scenario`] path
+/// (asserted by tests and `tests/properties.rs`).
+pub fn run_scenario_streaming(
+    base: &SimConfig,
+    backend: &dyn ComputeBackend,
+    n: usize,
+    scenario: Scenario,
+    stream: StreamConfig,
+) -> Result<(RunReport, usize)> {
+    let mut cfg = base.clone();
+    cfg.network.n = n;
+    cfg.validate()?;
+    let workload = build_workload(&cfg);
+    let mut source = StreamingSource::new(backend, &workload, stream)?;
+    let report = Simulation::new(&cfg, backend, scenario)
+        .with_workload(&workload)
+        .aggregate_only()
+        .run_with_source(&mut source)?;
+    Ok((report, source.peak_resident()))
 }
 
 /// Run `(scenario, config)` jobs concurrently against one prepared
@@ -478,6 +507,34 @@ mod tests {
         assert!(timing.parallel_s > 0.0);
         assert!(timing.speedup() > 0.0);
         assert!(timing.summary().contains("speedup"));
+    }
+
+    #[test]
+    fn streaming_suite_matches_materialized_with_bounded_residency() {
+        let base = small_base();
+        let backend = NativeBackend::new(&base);
+        let ps = prepare_scale(&base, &backend, 3).unwrap();
+        let materialized = run_scenario(&ps, &backend, Scenario::Sccr).unwrap();
+        let stream = StreamConfig {
+            chunk_tasks: 6,
+            window_chunks: 2,
+        };
+        let (streamed, peak) = run_scenario_streaming(
+            &base,
+            &backend,
+            3,
+            Scenario::Sccr,
+            stream,
+        )
+        .unwrap();
+        assert_eq!(streamed.completion_time, materialized.completion_time);
+        assert_eq!(streamed.reuse_rate, materialized.reuse_rate);
+        assert_eq!(streamed.reuse_accuracy, materialized.reuse_accuracy);
+        assert_eq!(streamed.data_transfer_mb, materialized.data_transfer_mb);
+        assert_eq!(streamed.collab_events, materialized.collab_events);
+        assert!(peak <= stream.window_tasks(), "residency {peak} over budget");
+        assert!(peak < ps.workload.tasks.len());
+        assert!(streamed.tasks.is_empty(), "streaming helper is aggregate-only");
     }
 
     #[test]

@@ -236,6 +236,34 @@ pub fn run_suite(opts: &HotpathOpts) -> Result<Bencher> {
         black_box(r.reused_tasks);
     });
 
+    // ---- engine event loop, per grid size (preparation excluded) --------
+    // Unlike the simulate_* cases above, these run aggregate-only so the
+    // measurement isolates the engine's event dispatch + per-task reuse
+    // path without TaskLog retention. 3×3 reuses the simulate fixtures.
+    b.bench("event_loop_3x3_45", || {
+        let r = Simulation::new(&small, &backend, Scenario::Sccr)
+            .aggregate_only()
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .run()
+            .unwrap();
+        black_box(r.total_tasks);
+    });
+    let mut mid = SimConfig::paper_default(5);
+    mid.workload.total_tasks = 125;
+    let backend5 = NativeBackend::new(&mid);
+    let wl5 = build_workload(&mid);
+    let prep5 = prepare(&backend5, &wl5)?;
+    b.bench("event_loop_5x5_125", || {
+        let r = Simulation::new(&mid, &backend5, Scenario::Sccr)
+            .aggregate_only()
+            .with_workload(&wl5)
+            .with_prepared(&prep5)
+            .run()
+            .unwrap();
+        black_box(r.total_tasks);
+    });
+
     // ---- extended grids (11×11, 15×15), one timed pass each -------------
     if opts.scale {
         let base = SimConfig::paper_default(5);
@@ -246,6 +274,24 @@ pub fn run_suite(opts: &HotpathOpts) -> Result<Bencher> {
                     run_scale_suite_timed(&base, &backend, &[n], &Scenario::ALL)
                         .expect("extended scale suite");
                 black_box(reports.len());
+            });
+        }
+        // Engine event loop at the extended grids: prepare once outside
+        // the timed region, measure one aggregate-only SCCR pass.
+        for &n in &EXTENDED_SCALES {
+            let mut big = SimConfig::paper_default(n);
+            big.workload.total_tasks = 625;
+            let backend_n = NativeBackend::new(&big);
+            let wl_n = build_workload(&big);
+            let prep_n = prepare(&backend_n, &wl_n)?;
+            b.bench_once(&format!("event_loop_{n}x{n}_625"), || {
+                let r = Simulation::new(&big, &backend_n, Scenario::Sccr)
+                    .aggregate_only()
+                    .with_workload(&wl_n)
+                    .with_prepared(&prep_n)
+                    .run()
+                    .unwrap();
+                black_box(r.total_tasks);
             });
         }
     }
@@ -392,6 +438,8 @@ mod tests {
             "preprocess_64x64",
             "simulate_slcr_3x3_45",
             "simulate_sccr_3x3_45",
+            "event_loop_3x3_45",
+            "event_loop_5x5_125",
         ] {
             assert!(names.contains(&expect), "missing bench '{expect}'");
         }

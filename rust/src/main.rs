@@ -22,8 +22,11 @@ use ccrsat::coordinator::Scenario;
 use ccrsat::harness::experiments as exp;
 use ccrsat::harness::hotpath;
 use ccrsat::metrics::reports_to_csv;
-use ccrsat::simulator::Simulation;
+use ccrsat::simulator::{
+    PreparedSource, Simulation, StreamConfig, StreamingSource,
+};
 use ccrsat::util::json::Json;
+use ccrsat::workload::build_workload;
 use ccrsat::{Error, Result};
 
 const USAGE: &str = "\
@@ -52,9 +55,16 @@ BENCH OPTIONS:
     --factor <X>         regression factor for --check (default 2.0)
     --measured <FILE>    bench-report: measured artifact (default BENCH_hotpath.json)
 
+RUN SCALE OPTIONS:
+    --streaming          prepare task inputs in on-demand chunks with a
+                         bounded residency window (constellation-scale runs)
+    --stream-window <T>  streaming window budget in tasks (default 256)
+    --aggregate-only     keep only aggregate metrics (no per-task logs)
+
 COMMON OPTIONS:
     --config <FILE>      TOML config (defaults: paper Table I values)
     --n <N>              network scale override (5, 7, 9, ...)
+    --grid <N>           alias for --n (wins when both are given)
     --scenario <S>       wo-cr | srs-priority | slcr | sccr-init | sccr
     --backend <B>        pjrt (default when artifacts exist) | native
     --artifacts <DIR>    artifacts directory (default: artifacts)
@@ -93,9 +103,8 @@ impl Flags {
                 .strip_prefix("--")
                 .ok_or_else(|| Error::config(format!("unexpected argument '{a}'")))?;
             match key {
-                "json" | "csv" | "help" | "quiet" | "scale" | "check" => {
-                    bools.push(key.to_string())
-                }
+                "json" | "csv" | "help" | "quiet" | "scale" | "check"
+                | "streaming" | "aggregate-only" => bools.push(key.to_string()),
                 _ => {
                     let v = args.get(i + 1).ok_or_else(|| {
                         Error::config(format!("--{key} needs a value"))
@@ -177,6 +186,11 @@ fn load_config(flags: &Flags) -> Result<SimConfig> {
     if let Some(n) = flags.parse_usize("n")? {
         cfg.network.n = n;
     }
+    // `--grid` is the constellation-scale alias for `--n`; it wins when
+    // both are given.
+    if let Some(n) = flags.parse_usize("grid")? {
+        cfg.network.n = n;
+    }
     if let Some(seed) = flags.get("seed") {
         cfg.workload.seed = seed
             .parse()
@@ -187,6 +201,16 @@ fn load_config(flags: &Flags) -> Result<SimConfig> {
     }
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// The explicit scale override for commands that select their own scale
+/// list (`reproduce`, `sweep`): `--grid` wins over `--n`, mirroring
+/// [`load_config`].
+fn scale_override(flags: &Flags) -> Result<Option<usize>> {
+    Ok(match flags.parse_usize("grid")? {
+        Some(g) => Some(g),
+        None => flags.parse_usize("n")?,
+    })
 }
 
 /// Build the compute backend from --backend/--artifacts.
@@ -210,7 +234,30 @@ fn cmd_run(flags: &Flags) -> Result<()> {
             .ok_or_else(|| Error::config(format!("unknown scenario '{s}'")))?,
         None => Scenario::Sccr,
     };
-    let report = Simulation::new(&cfg, backend.as_ref(), scenario).run()?;
+    let mut sim = Simulation::new(&cfg, backend.as_ref(), scenario);
+    if flags.has("aggregate-only") {
+        sim = sim.aggregate_only();
+    }
+    let report = if flags.has("streaming") {
+        let stream = StreamConfig::with_window_tasks(
+            flags.parse_usize("stream-window")?.unwrap_or(256),
+        );
+        let wl = build_workload(&cfg);
+        let mut source = StreamingSource::new(backend.as_ref(), &wl, stream)?;
+        let report = sim.with_workload(&wl).run_with_source(&mut source)?;
+        eprintln!(
+            "streaming: peak resident {} of {} prepared tasks (window {}, {} chunk preparations, {} recomputed); raw workload {:.1} MB stays resident",
+            source.peak_resident(),
+            wl.tasks.len(),
+            stream.window_tasks(),
+            source.prepared_chunks(),
+            source.recomputed_chunks(),
+            wl.raw_bytes() as f64 / 1e6,
+        );
+        report
+    } else {
+        sim.run()?
+    };
     if flags.has("json") {
         println!("{}", report.to_json().to_string_pretty());
     } else {
@@ -228,7 +275,7 @@ fn cmd_reproduce(flags: &Flags) -> Result<()> {
     let cfg = load_config(flags)?;
     let backend = load_backend(flags, &cfg)?;
     let experiment = flags.get("experiment").unwrap_or("all");
-    let scales: Vec<usize> = match flags.parse_usize("n")? {
+    let scales: Vec<usize> = match scale_override(flags)? {
         Some(n) => vec![n],
         None => exp::PAPER_SCALES.to_vec(),
     };
@@ -297,7 +344,7 @@ fn cmd_reproduce(flags: &Flags) -> Result<()> {
 fn cmd_sweep(flags: &Flags) -> Result<()> {
     let cfg = load_config(flags)?;
     let backend = load_backend(flags, &cfg)?;
-    let n = flags.parse_usize("n")?.unwrap_or(5);
+    let n = scale_override(flags)?.unwrap_or(5);
     match flags.get("param") {
         Some("tau") => {
             let rows = exp::tau_sweep(&cfg, backend.as_ref(), n, &exp::TAU_SWEEP)?;

@@ -161,7 +161,158 @@ impl RunReport {
     }
 }
 
-/// Build the aggregate numbers from raw logs; shared by the simulator.
+/// Incremental run-metrics accumulator: one [`MetricsAccum::record`] call
+/// per completed task, folded on the fly into every aggregate a
+/// [`RunReport`] carries.
+///
+/// The engine feeds this as tasks complete, so constellation-scale runs no
+/// longer need the full `Vec<TaskLog>` in memory when only aggregates are
+/// wanted: with `keep_logs = false` the accumulator retains one `f64`
+/// latency per task (the exact p95 requires the full latency population)
+/// instead of a whole [`TaskLog`], and the report's `tasks` vec comes back
+/// empty. With `keep_logs = true` the result is field-for-field identical
+/// to the batch [`aggregate`] fold — which is itself implemented on top of
+/// this accumulator, so the two paths cannot drift.
+#[derive(Clone, Debug)]
+pub struct MetricsAccum {
+    keep_logs: bool,
+    logs: Vec<TaskLog>,
+    latencies: Vec<f64>,
+    makespan: f64,
+    compute_seconds: f64,
+    total: usize,
+    reused: usize,
+    reused_correct: usize,
+    cross_scene_reuses: usize,
+    foreign_reuses: usize,
+    errors_same_scene: usize,
+    errors_cross_scene: usize,
+}
+
+impl MetricsAccum {
+    /// `keep_logs`: retain the per-task [`TaskLog`]s in the final report
+    /// (O(tasks) memory) or only the running aggregates.
+    pub fn new(keep_logs: bool) -> Self {
+        MetricsAccum {
+            keep_logs,
+            logs: Vec::new(),
+            latencies: Vec::new(),
+            makespan: 0.0,
+            compute_seconds: 0.0,
+            total: 0,
+            reused: 0,
+            reused_correct: 0,
+            cross_scene_reuses: 0,
+            foreign_reuses: 0,
+            errors_same_scene: 0,
+            errors_cross_scene: 0,
+        }
+    }
+
+    /// Fold one completed task into the running aggregates. Call order
+    /// must be completion order — the floating-point sums reproduce the
+    /// batch fold bit for bit only when the order matches.
+    pub fn record(&mut self, t: TaskLog) {
+        self.makespan = f64::max(self.makespan, t.completion);
+        self.compute_seconds += t.completion - t.start;
+        self.total += 1;
+        if t.reused {
+            self.reused += 1;
+            if t.correct {
+                self.reused_correct += 1;
+            }
+            if t.reused_from_scene != Some(t.scene) {
+                self.cross_scene_reuses += 1;
+                if !t.correct {
+                    self.errors_cross_scene += 1;
+                }
+            } else if !t.correct {
+                self.errors_same_scene += 1;
+            }
+            if t.reused_from_sat.is_some_and(|s| s != t.sat) {
+                self.foreign_reuses += 1;
+            }
+        }
+        self.latencies.push(t.latency());
+        if self.keep_logs {
+            self.logs.push(t);
+        }
+    }
+
+    /// Tasks recorded so far.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Latest completion time seen so far (0 before the first task) — the
+    /// engine prices end-of-run CPU occupancy against this.
+    pub fn makespan(&self) -> f64 {
+        self.makespan
+    }
+
+    /// Close the accumulator into a full [`RunReport`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn finish(
+        self,
+        scenario: Scenario,
+        n: usize,
+        per_satellite: Vec<SatSummary>,
+        alpha: f64,
+        comm_seconds: f64,
+        data_transfer_bytes: f64,
+        collab_events: usize,
+        expanded_events: usize,
+        aborted_collabs: usize,
+        broadcast_records: usize,
+        wallclock_s: f64,
+    ) -> RunReport {
+        let completion_time = alpha * comm_seconds + self.compute_seconds;
+        let occupancies: Vec<f64> = per_satellite
+            .iter()
+            .filter(|s| s.tasks > 0)
+            .map(|s| s.cpu_occupancy)
+            .collect();
+        RunReport {
+            scenario,
+            n,
+            completion_time,
+            compute_seconds: self.compute_seconds,
+            comm_seconds,
+            makespan: self.makespan,
+            reuse_rate: if self.total == 0 {
+                0.0
+            } else {
+                self.reused as f64 / self.total as f64
+            },
+            cpu_occupancy: stats::mean(&occupancies),
+            reuse_accuracy: if self.reused == 0 {
+                1.0
+            } else {
+                self.reused_correct as f64 / self.reused as f64
+            },
+            data_transfer_mb: data_transfer_bytes / 1e6,
+            total_tasks: self.total,
+            reused_tasks: self.reused,
+            cross_scene_reuses: self.cross_scene_reuses,
+            foreign_reuses: self.foreign_reuses,
+            errors_same_scene: self.errors_same_scene,
+            errors_cross_scene: self.errors_cross_scene,
+            collab_events,
+            expanded_events,
+            aborted_collabs,
+            broadcast_records,
+            mean_latency: stats::mean(&self.latencies),
+            p95_latency: stats::percentile(&self.latencies, 95.0),
+            per_satellite,
+            tasks: self.logs,
+            wallclock_s,
+        }
+    }
+}
+
+/// Build the aggregate numbers from raw logs; shared by the simulator's
+/// reference path. One [`MetricsAccum`] fold in log order — by definition
+/// identical to the engine's incremental accumulation.
 #[allow(clippy::too_many_arguments)]
 pub fn aggregate(
     scenario: Scenario,
@@ -177,69 +328,23 @@ pub fn aggregate(
     broadcast_records: usize,
     wallclock_s: f64,
 ) -> RunReport {
-    let makespan = tasks.iter().map(|t| t.completion).fold(0.0, f64::max);
-    let compute_seconds: f64 = tasks.iter().map(|t| t.completion - t.start).sum();
-    let completion_time = alpha * comm_seconds + compute_seconds;
-    let total = tasks.len();
-    let reused = tasks.iter().filter(|t| t.reused).count();
-    let correct = tasks.iter().filter(|t| t.reused && t.correct).count();
-    let cross_scene_reuses = tasks
-        .iter()
-        .filter(|t| t.reused && t.reused_from_scene != Some(t.scene))
-        .count();
-    let errors_cross_scene = tasks
-        .iter()
-        .filter(|t| t.reused && !t.correct && t.reused_from_scene != Some(t.scene))
-        .count();
-    let errors_same_scene = tasks
-        .iter()
-        .filter(|t| t.reused && !t.correct && t.reused_from_scene == Some(t.scene))
-        .count();
-    let foreign_reuses = tasks
-        .iter()
-        .filter(|t| t.reused && t.reused_from_sat.map_or(false, |s| s != t.sat))
-        .count();
-    let latencies: Vec<f64> = tasks.iter().map(|t| t.latency()).collect();
-    let occupancies: Vec<f64> = per_satellite
-        .iter()
-        .filter(|s| s.tasks > 0)
-        .map(|s| s.cpu_occupancy)
-        .collect();
-    RunReport {
+    let mut acc = MetricsAccum::new(true);
+    for t in tasks {
+        acc.record(t);
+    }
+    acc.finish(
         scenario,
         n,
-        completion_time,
-        compute_seconds,
+        per_satellite,
+        alpha,
         comm_seconds,
-        makespan,
-        reuse_rate: if total == 0 {
-            0.0
-        } else {
-            reused as f64 / total as f64
-        },
-        cpu_occupancy: stats::mean(&occupancies),
-        reuse_accuracy: if reused == 0 {
-            1.0
-        } else {
-            correct as f64 / reused as f64
-        },
-        data_transfer_mb: data_transfer_bytes / 1e6,
-        total_tasks: total,
-        reused_tasks: reused,
-        cross_scene_reuses,
-        foreign_reuses,
-        errors_same_scene,
-        errors_cross_scene,
+        data_transfer_bytes,
         collab_events,
         expanded_events,
         aborted_collabs,
         broadcast_records,
-        mean_latency: stats::mean(&latencies),
-        p95_latency: stats::percentile(&latencies, 95.0),
-        per_satellite,
-        tasks,
         wallclock_s,
-    }
+    )
 }
 
 /// Render a paper-style markdown table: rows = network scale, columns =
@@ -391,6 +496,64 @@ mod tests {
         assert_eq!(r.cpu_occupancy, 0.5, "idle satellites excluded");
         assert!((r.data_transfer_mb - 20.5).abs() < 1e-9);
         assert_eq!(r.collab_events, 3);
+    }
+
+    #[test]
+    fn aggregate_only_accumulator_matches_batch_fold() {
+        let tasks = vec![
+            mk_task(0, false, true, 1.0),
+            mk_task(1, true, true, 2.0),
+            mk_task(2, true, false, 5.0),
+            mk_task(3, false, true, 4.0),
+        ];
+        let sats = vec![mk_sat(4, 0.5), mk_sat(0, 0.0)];
+        let batch = aggregate(
+            Scenario::Sccr,
+            5,
+            tasks.clone(),
+            sats.clone(),
+            1.0,
+            2.5,
+            20.5e6,
+            3,
+            1,
+            0,
+            33,
+            0.1,
+        );
+        let mut acc = MetricsAccum::new(false);
+        for t in tasks {
+            acc.record(t);
+        }
+        let slim = acc.finish(
+            Scenario::Sccr,
+            5,
+            sats,
+            1.0,
+            2.5,
+            20.5e6,
+            3,
+            1,
+            0,
+            33,
+            0.1,
+        );
+        assert_eq!(slim.completion_time, batch.completion_time);
+        assert_eq!(slim.compute_seconds, batch.compute_seconds);
+        assert_eq!(slim.makespan, batch.makespan);
+        assert_eq!(slim.reuse_rate, batch.reuse_rate);
+        assert_eq!(slim.reuse_accuracy, batch.reuse_accuracy);
+        assert_eq!(slim.cpu_occupancy, batch.cpu_occupancy);
+        assert_eq!(slim.mean_latency, batch.mean_latency);
+        assert_eq!(slim.p95_latency, batch.p95_latency);
+        assert_eq!(slim.cross_scene_reuses, batch.cross_scene_reuses);
+        assert_eq!(slim.errors_same_scene, batch.errors_same_scene);
+        assert_eq!(slim.errors_cross_scene, batch.errors_cross_scene);
+        assert_eq!(slim.foreign_reuses, batch.foreign_reuses);
+        assert_eq!(slim.total_tasks, batch.total_tasks);
+        assert_eq!(slim.reused_tasks, batch.reused_tasks);
+        assert_eq!(batch.tasks.len(), 4, "batch fold keeps the logs");
+        assert!(slim.tasks.is_empty(), "aggregate-only drops the logs");
     }
 
     #[test]

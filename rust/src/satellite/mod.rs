@@ -11,8 +11,68 @@
 //! The collaboration bookkeeping (`last_collab_request`,
 //! `collab_requests`, `times_source`) feeds Alg. 2's trigger and the
 //! per-satellite diagnostics in [`crate::metrics::SatSummary`].
+//!
+//! [`SatNode`] is the full per-satellite aggregate the simulator engine
+//! owns: the server state above plus the satellite's SCRT, its FIFO task
+//! queue, the task currently in flight and the Alg. 2 hysteresis flag —
+//! previously five parallel per-satellite `Vec`s inside the simulator's
+//! event loop.
 
+use std::collections::VecDeque;
+
+use crate::coordinator::scrt::Scrt;
 use crate::workload::SatId;
+
+/// What one satellite is currently executing.
+#[derive(Clone, Debug)]
+pub struct InFlight {
+    /// Index of the task in the workload's task vec.
+    pub task_idx: usize,
+    /// Virtual time service started.
+    pub start: f64,
+    /// Was the task served via computation reuse?
+    pub reused: bool,
+    /// Did the (reused or computed) result match the oracle label?
+    pub correct: bool,
+    /// SSIM against the serving candidate, when one was gated.
+    pub ssim: Option<f32>,
+    /// Scene of the serving record (provenance diagnostics).
+    pub reused_from_scene: Option<u32>,
+    /// Satellite that originally computed the serving record.
+    pub reused_from_sat: Option<usize>,
+}
+
+/// One satellite of the constellation, as the engine sees it: server
+/// state, reuse cache, FIFO queue, in-flight task, hysteresis flag.
+#[derive(Clone, Debug)]
+pub struct SatNode {
+    /// FIFO server clock + SRS counters.
+    pub state: SatelliteState,
+    /// The satellite's reuse table.
+    pub scrt: Scrt,
+    /// Queued task indices, FIFO (indices into the workload task vec).
+    pub queue: VecDeque<usize>,
+    /// The task currently being served, if any.
+    pub in_flight: Option<InFlight>,
+    /// Hysteresis: once this satellite's request triggered a broadcast, it
+    /// may not request again until its SRS has recovered above th_co — a
+    /// satellite that keeps benefiting never re-requests, and one that did
+    /// not benefit waits for the situation to change.
+    pub collab_armed: bool,
+}
+
+impl SatNode {
+    /// A fresh, idle satellite with an empty SCRT.
+    pub fn new(id: SatId, num_buckets: usize, cache_capacity: usize) -> Self {
+        SatNode {
+            state: SatelliteState::new(id),
+            scrt: Scrt::new(num_buckets, cache_capacity),
+            queue: VecDeque::new(),
+            in_flight: None,
+            collab_armed: true,
+        }
+    }
+}
 
 /// Mutable state of one satellite during a simulation run.
 #[derive(Clone, Debug)]
@@ -154,6 +214,17 @@ mod tests {
         assert_eq!(s.reuse_accuracy(), 1.0);
         s.tasks_reused = 2;
         assert_eq!(s.reuse_accuracy(), 0.5);
+    }
+
+    #[test]
+    fn sat_node_starts_idle_and_armed() {
+        let n = SatNode::new(3, 4, 8);
+        assert_eq!(n.state.id, 3);
+        assert!(n.queue.is_empty());
+        assert!(n.in_flight.is_none());
+        assert!(n.collab_armed, "hysteresis starts armed");
+        assert!(n.scrt.is_empty());
+        assert_eq!(n.scrt.capacity(), 8);
     }
 
     #[test]

@@ -1,0 +1,419 @@
+//! The discrete-event engine core.
+//!
+//! [`Engine`] owns one [`SatNode`] per satellite (server state, SCRT, FIFO
+//! queue, in-flight task, hysteresis flag — previously five parallel
+//! `Vec`s inside a ~300-line monolithic loop) and dispatches events
+//! through small handler methods:
+//!
+//! * [`EventKind::Arrival`] → `on_arrival`: enqueue, start service if idle;
+//! * [`EventKind::Completion`] → `on_completion`: log + counters, run the
+//!   Alg. 2 trigger through the scenario's [`CollabPolicy`], dequeue next;
+//! * [`EventKind::BroadcastDeliver`] → `on_broadcast_deliver`: merge the
+//!   record, apply receiver-side damping.
+//!
+//! Scenario behaviour (triggering, damping, source selection) lives behind
+//! the [`CollabPolicy`] trait; run observation goes through [`Observer`]
+//! hooks; task inputs come from a [`PreparedSource`], so fully-materialized
+//! and streaming preparation run through the identical loop. Metrics are
+//! accumulated incrementally ([`MetricsAccum`]) as completions fire.
+//!
+//! The pre-refactor monolithic loop is kept verbatim as
+//! [`Simulation::run_reference`] and the golden-pin tests assert fixed-seed
+//! [`RunReport`] identity between the two for every scenario.
+//!
+//! [`Simulation::run_reference`]: crate::simulator::Simulation::run_reference
+
+use std::sync::Arc;
+
+use crate::compute::ComputeBackend;
+use crate::config::SimConfig;
+use crate::coordinator::policy::CollabPolicy;
+use crate::coordinator::slcr::process_task;
+use crate::coordinator::srs::srs;
+use crate::coordinator::Scenario;
+use crate::error::{Error, Result};
+use crate::metrics::{MetricsAccum, RunReport, SatSummary, TaskLog};
+use crate::network::{CommModel, GridTopology};
+use crate::satellite::{InFlight, SatNode};
+use crate::simulator::events::{EventKind, EventQueue};
+use crate::simulator::observer::Observer;
+use crate::simulator::source::PreparedSource;
+use crate::workload::{SatId, Workload};
+
+/// Collaboration-side run counters (folded into the final report).
+#[derive(Clone, Copy, Debug, Default)]
+struct CollabCounters {
+    transfer_bytes: f64,
+    comm_seconds: f64,
+    collab_events: usize,
+    expanded_events: usize,
+    aborted_collabs: usize,
+    broadcast_records: usize,
+}
+
+/// One configured run of the event loop. Construct with [`Engine::new`],
+/// consume with [`Engine::run`].
+pub struct Engine<'a> {
+    cfg: &'a SimConfig,
+    backend: &'a dyn ComputeBackend,
+    scenario: Scenario,
+    policy: Option<&'static dyn CollabPolicy>,
+    wl: &'a Workload,
+    topo: GridTopology,
+    comm: CommModel,
+    nodes: Vec<SatNode>,
+    q: EventQueue,
+    /// Cost model (eqs. 6–8): seconds of a from-scratch execution.
+    scratch_s: f64,
+    /// Seconds of the lookup path (probe + gate).
+    lookup_s: f64,
+    /// While a broadcast is in flight the inter-satellite links are
+    /// saturated with record payloads; new collaborations wait. This is
+    /// what keeps collaboration *rare* (the paper's Table III volumes
+    /// imply on the order of one broadcast per mission).
+    network_quiet_until: f64,
+    collab: CollabCounters,
+    metrics: MetricsAccum,
+}
+
+impl<'a> Engine<'a> {
+    /// Build an engine over a workload. `keep_logs` selects full per-task
+    /// [`TaskLog`] retention versus aggregate-only accumulation.
+    pub fn new(
+        cfg: &'a SimConfig,
+        backend: &'a dyn ComputeBackend,
+        scenario: Scenario,
+        wl: &'a Workload,
+        keep_logs: bool,
+    ) -> Self {
+        let topo = GridTopology::new(cfg.network.n);
+        let comm = CommModel::new(&cfg.network, &cfg.comm);
+        let sats = topo.len();
+        let cap = cfg.cache_capacity_records();
+        let num_buckets = backend.num_buckets();
+        let nodes = (0..sats)
+            .map(|s| SatNode::new(s, num_buckets, cap))
+            .collect();
+        let c_comp = cfg.compute.capability_flops;
+        Engine {
+            cfg,
+            backend,
+            scenario,
+            policy: scenario.collab_policy(),
+            wl,
+            topo,
+            comm,
+            nodes,
+            q: EventQueue::new(),
+            scratch_s: cfg.compute.task_flops / c_comp,
+            lookup_s: cfg.compute.lookup_fixed_s + cfg.compute.lookup_flops / c_comp,
+            network_quiet_until: f64::NEG_INFINITY,
+            collab: CollabCounters::default(),
+            metrics: MetricsAccum::new(keep_logs),
+        }
+    }
+
+    /// Drive the event loop to completion and aggregate the paper's
+    /// criteria. `source` serves per-task prepared inputs; `obs` receives
+    /// the run's observation hooks. The report's `wallclock_s` covers the
+    /// loop only; callers that prepare inputs up front and want the whole
+    /// call timed (as [`crate::simulator::Simulation::run`] does, matching
+    /// the pre-refactor accounting) use [`Engine::run_from`].
+    pub fn run(
+        self,
+        source: &mut dyn PreparedSource,
+        obs: &mut dyn Observer,
+    ) -> Result<RunReport> {
+        self.run_from(std::time::Instant::now(), source, obs)
+    }
+
+    /// [`Engine::run`] with a caller-supplied wall-clock start, so
+    /// `wallclock_s` can include workload build + preparation time spent
+    /// before the engine was constructed.
+    pub fn run_from(
+        mut self,
+        wall_start: std::time::Instant,
+        source: &mut dyn PreparedSource,
+        obs: &mut dyn Observer,
+    ) -> Result<RunReport> {
+        let wl = self.wl;
+        for (idx, task) in wl.tasks.iter().enumerate() {
+            self.q.push(task.arrival, EventKind::Arrival(idx));
+        }
+        while let Some(ev) = self.q.pop() {
+            let now = ev.time;
+            match ev.kind {
+                EventKind::Arrival(idx) => self.on_arrival(idx, now, source)?,
+                EventKind::Completion(sat) => {
+                    self.on_completion(sat, now, source, obs)?
+                }
+                EventKind::BroadcastDeliver {
+                    dst,
+                    bucket,
+                    record,
+                } => self.on_broadcast_deliver(dst, bucket, &record, now, obs),
+            }
+        }
+
+        // Assemble per-satellite summaries.
+        let makespan = self.metrics.makespan();
+        let per_satellite: Vec<SatSummary> = self
+            .nodes
+            .iter()
+            .map(|node| SatSummary {
+                sat: node.state.id,
+                tasks: node.state.tasks_processed,
+                reused: node.state.tasks_reused,
+                busy_s: node.state.busy_time(),
+                cpu_occupancy: node.state.cpu_occupancy(makespan),
+                collab_requests: node.state.collab_requests,
+                times_source: node.state.times_source,
+                scrt_len: node.scrt.len(),
+                evictions: node.scrt.evictions,
+            })
+            .collect();
+
+        Ok(self.metrics.finish(
+            self.scenario,
+            self.cfg.network.n,
+            per_satellite,
+            self.cfg.alpha,
+            self.collab.comm_seconds,
+            self.collab.transfer_bytes,
+            self.collab.collab_events,
+            self.collab.expanded_events,
+            self.collab.aborted_collabs,
+            self.collab.broadcast_records,
+            wall_start.elapsed().as_secs_f64(),
+        ))
+    }
+
+    /// Current SRS (eq. 11) of one satellite.
+    fn srs_of(&self, sat: SatId, now: f64) -> f64 {
+        srs(
+            self.cfg.reuse.beta,
+            self.nodes[sat].state.reuse_rate(),
+            self.nodes[sat].state.cpu_occupancy(now),
+        )
+    }
+
+    /// A task arrives: enqueue and start service if the satellite is idle.
+    fn on_arrival(
+        &mut self,
+        idx: usize,
+        now: f64,
+        source: &mut dyn PreparedSource,
+    ) -> Result<()> {
+        let sat = self.wl.tasks[idx].satellite;
+        self.nodes[sat].queue.push_back(idx);
+        if self.nodes[sat].in_flight.is_none() {
+            self.start_service(sat, now, source)?;
+        }
+        Ok(())
+    }
+
+    /// A task completes: log it, run the Alg. 2 trigger, dequeue the next.
+    fn on_completion(
+        &mut self,
+        sat: SatId,
+        now: f64,
+        source: &mut dyn PreparedSource,
+        obs: &mut dyn Observer,
+    ) -> Result<()> {
+        let fl: InFlight = self.nodes[sat]
+            .in_flight
+            .take()
+            .ok_or_else(|| Error::simulation("completion w/o task"))?;
+        let task = &self.wl.tasks[fl.task_idx];
+        if fl.reused {
+            let state = &mut self.nodes[sat].state;
+            state.tasks_reused += 1;
+            if fl.correct {
+                state.reused_correct += 1;
+            }
+        }
+        let log = TaskLog {
+            task_id: task.id,
+            sat,
+            arrival: task.arrival,
+            start: fl.start,
+            completion: now,
+            reused: fl.reused,
+            correct: fl.correct,
+            ssim: fl.ssim,
+            scene: task.scene,
+            reused_from_scene: fl.reused_from_scene,
+            reused_from_sat: fl.reused_from_sat,
+        };
+        obs.on_task_complete(&log);
+        self.metrics.record(log);
+
+        self.maybe_collaborate(sat, now, obs);
+
+        if !self.nodes[sat].queue.is_empty() {
+            self.start_service(sat, now, source)?;
+        }
+        Ok(())
+    }
+
+    /// Alg. 2 trigger at a completion, delegated to the scenario's
+    /// [`CollabPolicy`]: re-arm the hysteresis, ask the policy whether to
+    /// request, select the source and schedule the broadcast fan-out.
+    fn maybe_collaborate(&mut self, sat: SatId, now: f64, obs: &mut dyn Observer) {
+        let Some(policy) = self.policy else {
+            return;
+        };
+        let th_co = self.cfg.reuse.th_co;
+        let my_srs = self.srs_of(sat, now);
+        let cooled = now - self.nodes[sat].state.last_collab_request
+            >= self.cfg.reuse.collab_cooldown_s;
+        if my_srs >= th_co {
+            self.nodes[sat].collab_armed = true; // recovered: re-arm
+        }
+        if !policy.should_request(
+            self.nodes[sat].collab_armed,
+            my_srs,
+            th_co,
+            cooled,
+            now,
+            self.network_quiet_until,
+        ) {
+            return;
+        }
+        self.nodes[sat].state.last_collab_request = now;
+        self.nodes[sat].state.collab_requests += 1;
+        let all_srs: Vec<f64> = (0..self.nodes.len())
+            .map(|s| self.srs_of(s, now))
+            .collect();
+        obs.on_collab_request(now, sat, my_srs, &all_srs);
+        let Some(decision) = policy.select_source(&self.topo, sat, &all_srs, th_co)
+        else {
+            self.collab.aborted_collabs += 1;
+            return;
+        };
+        let records = self.nodes[decision.source].scrt.top_tau(self.cfg.reuse.tau);
+        if records.is_empty() {
+            self.collab.aborted_collabs += 1;
+            return;
+        }
+        self.collab.collab_events += 1;
+        self.nodes[sat].collab_armed = false;
+        obs.on_collab_broadcast(now, &decision, records.len());
+        if decision.expanded {
+            self.collab.expanded_events += 1;
+        }
+        self.nodes[decision.source].state.times_source += 1;
+        self.collab.broadcast_records += records.len();
+        // Spanning-tree flood over the area.
+        let plan = self.comm.plan_broadcast(
+            &self.topo,
+            decision.source,
+            &decision.area,
+            records.len(),
+        );
+        self.collab.transfer_bytes += plan.bytes;
+        self.collab.comm_seconds += plan.airtime_s;
+        self.network_quiet_until = now + plan.completion_offset(records.len());
+        let shared: Vec<(u32, Arc<_>)> = records
+            .into_iter()
+            .map(|(b, r)| (b, Arc::new(r)))
+            .collect();
+        for &(dst, depth) in &plan.arrivals {
+            for (k, (bucket, rec)) in shared.iter().enumerate() {
+                self.q.push(
+                    now + plan.arrival_offset(k, depth),
+                    EventKind::BroadcastDeliver {
+                        dst,
+                        bucket: *bucket,
+                        record: rec.clone(),
+                    },
+                );
+            }
+        }
+    }
+
+    /// One broadcast record lands: merge it and apply receiver damping.
+    fn on_broadcast_deliver(
+        &mut self,
+        dst: SatId,
+        bucket: u32,
+        record: &crate::coordinator::scrt::Record,
+        now: f64,
+        obs: &mut dyn Observer,
+    ) {
+        let node = &mut self.nodes[dst];
+        node.scrt.merge_broadcast(bucket, record.clone(), now);
+        // A satellite that just received shared records has had its need
+        // addressed: suppress its own collaboration request until its SRS
+        // recovers above th_co again.
+        node.collab_armed = false;
+        node.state.last_collab_request = node.state.last_collab_request.max(now);
+        obs.on_broadcast_deliver(now, dst);
+    }
+
+    /// Dequeue and start the next task on an idle satellite.
+    fn start_service(
+        &mut self,
+        sat: SatId,
+        now: f64,
+        source: &mut dyn PreparedSource,
+    ) -> Result<()> {
+        let idx = self.nodes[sat].queue.pop_front().ok_or_else(|| {
+            Error::simulation(format!(
+                "start_service on satellite {sat} with an empty queue"
+            ))
+        })?;
+        let wl = self.wl;
+        let task = &wl.tasks[idx];
+
+        let (service_s, reused, correct, ssim, reused_from_scene, reused_from_sat) =
+            if self.scenario.uses_reuse() {
+                let (pre, oracle) = source.fetch(idx)?;
+                let outcome = process_task(
+                    &mut self.nodes[sat].scrt,
+                    self.backend,
+                    sat,
+                    task.id,
+                    task.task_type,
+                    pre,
+                    self.cfg.reuse.th_sim,
+                    now,
+                )?;
+                let correct = outcome.result == oracle;
+                let service = if outcome.reused {
+                    self.lookup_s // eq. 7: χ_reuse = x_t · W
+                } else {
+                    self.lookup_s + self.scratch_s // eq. 6: χ_compute = W + F_t / C^comp
+                };
+                // record ids are the creating task's global id, so the
+                // serving record's scene is recoverable from the workload.
+                let from_scene = outcome.reused_from.map(|rec_id| wl.tasks[rec_id].scene);
+                let from_sat =
+                    outcome.reused_from.map(|rec_id| wl.tasks[rec_id].satellite);
+                (
+                    service,
+                    outcome.reused,
+                    correct,
+                    outcome.ssim,
+                    from_scene,
+                    from_sat,
+                )
+            } else {
+                // w/o CR: straight to the pre-trained model, no lookup at all.
+                (self.scratch_s, false, true, None, None, None)
+            };
+
+        let (start, completion) = self.nodes[sat].state.serve(now, service_s);
+        self.nodes[sat].in_flight = Some(InFlight {
+            task_idx: idx,
+            start,
+            reused,
+            correct,
+            ssim,
+            reused_from_scene,
+            reused_from_sat,
+        });
+        self.q.push(completion, EventKind::Completion(sat));
+        Ok(())
+    }
+}

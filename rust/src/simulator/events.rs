@@ -16,12 +16,14 @@ pub enum EventKind {
     /// One broadcast record reaches a destination satellite. Broadcasts are
     /// *streamed*: record `k` of a τ-record share arrives after `k+1`
     /// payload transmission times, so receivers start benefiting before the
-    /// whole share lands.
+    /// whole share lands. The payload is `Arc`-shared across the fan-out so
+    /// the whole engine state is `Send` (a future sharded/parallel engine
+    /// will not need an event-type rewrite).
     BroadcastDeliver {
         dst: SatId,
         /// LSH bucket of the record (identical hyperplanes fleet-wide).
         bucket: u32,
-        record: std::rc::Rc<Record>,
+        record: std::sync::Arc<Record>,
     },
 }
 
@@ -36,7 +38,7 @@ pub struct Event {
 
 impl PartialEq for Event {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+        self.cmp(other) == Ordering::Equal
     }
 }
 impl Eq for Event {}
@@ -44,10 +46,14 @@ impl Eq for Event {}
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> Ordering {
         // BinaryHeap is a max-heap: invert so the earliest event pops first.
+        // Time is keyed through the IEEE-754 total order (`f64::total_cmp`,
+        // the same remedy as the SCRT recency index): a NaN time is still a
+        // scheduling bug (the `debug_assert` in `push` catches it in debug
+        // builds), but it can no longer panic a release run mid-simulation
+        // — it simply orders at the extremes of the time axis.
         other
             .time
-            .partial_cmp(&self.time)
-            .expect("NaN event time")
+            .total_cmp(&self.time)
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -119,14 +125,53 @@ mod tests {
         assert_eq!(sats, vec![10, 20, 30]);
     }
 
+    #[cfg(debug_assertions)]
     #[test]
-    #[should_panic]
-    fn rejects_nan_time_in_debug() {
+    #[should_panic(expected = "non-finite event time")]
+    fn push_rejects_nan_time_in_debug() {
         let mut q = EventQueue::new();
         q.push(f64::NAN, EventKind::Completion(0));
-        q.push(1.0, EventKind::Completion(1));
-        // popping with a NaN comparison panics (or the debug_assert fired)
-        while q.pop().is_some() {}
-        panic!("should have panicked earlier");
+    }
+
+    #[test]
+    fn nan_event_time_orders_totally_without_panic() {
+        // Regression: `Event::cmp` used `partial_cmp().expect(..)`, so one
+        // NaN time panicked a release run (where the push-side debug_assert
+        // is compiled out). The total-order comparator must instead give
+        // NaN a deterministic place at the extremes of the time axis.
+        let mk = |time: f64, seq: u64| Event {
+            time,
+            seq,
+            kind: EventKind::Completion(0),
+        };
+        // Sign-controlled NaNs: `f64::NAN`'s sign bit is unspecified, so
+        // pin it explicitly with copysign.
+        let pos_nan = f64::NAN.copysign(1.0);
+        let neg_nan = f64::NAN.copysign(-1.0);
+        let mut heap = BinaryHeap::new();
+        heap.push(mk(pos_nan, 0));
+        heap.push(mk(1.0, 1));
+        heap.push(mk(f64::NEG_INFINITY, 2));
+        heap.push(mk(neg_nan, 3));
+        let order: Vec<u64> =
+            std::iter::from_fn(|| heap.pop().map(|e| e.seq)).collect();
+        // IEEE-754 total order: -NaN < -inf < 1.0 < +NaN.
+        assert_eq!(order, vec![3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn equal_nan_times_still_fifo_by_seq() {
+        let mk = |seq: u64| Event {
+            time: f64::NAN,
+            seq,
+            kind: EventKind::Completion(0),
+        };
+        let mut heap = BinaryHeap::new();
+        heap.push(mk(2));
+        heap.push(mk(0));
+        heap.push(mk(1));
+        let order: Vec<u64> =
+            std::iter::from_fn(|| heap.pop().map(|e| e.seq)).collect();
+        assert_eq!(order, vec![0, 1, 2]);
     }
 }

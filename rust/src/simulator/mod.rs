@@ -6,14 +6,35 @@
 //! artifacts on the production path), so reuse decisions and reuse
 //! *accuracy* are genuinely data-dependent, exactly as in the paper.
 //!
+//! The simulator is layered (see `docs/ARCHITECTURE.md`):
+//!
+//! * [`engine`] — the event-loop core: one [`crate::satellite::SatNode`]
+//!   per satellite, events dispatched through small handler methods;
+//! * [`crate::coordinator::policy`] — scenario behaviour (Alg. 2
+//!   triggering, damping, source selection) behind the
+//!   [`crate::coordinator::CollabPolicy`] trait;
+//! * [`observer`] — run observation hooks (tracing, custom diagnostics)
+//!   replacing inline `eprintln!`s;
+//! * [`source`] — prepared-input delivery: fully-materialized
+//!   ([`Prepared`] / [`SharedPrepared`]) or streaming with bounded
+//!   residency ([`StreamingSource`]).
+//!
 //! Event flow per task: `Arrival` → (FIFO queue per satellite) → service
 //! (Alg. 1 decides reuse vs scratch, the cost model prices it) →
 //! `Completion` → SRS update → possibly an Alg. 2 collaboration, which
 //! schedules `BroadcastDeliver` events per receiving satellite.
+//!
+//! [`Simulation::run_reference`] keeps the pre-refactor monolithic loop
+//! verbatim as the determinism reference; the golden-pin tests assert
+//! fixed-seed [`RunReport`] identity between it and the engine for every
+//! scenario.
 
+pub mod engine;
 pub mod events;
+pub mod observer;
+pub mod source;
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::compute::{ComputeBackend, Preprocessed};
 use crate::config::SimConfig;
@@ -25,9 +46,13 @@ use crate::coordinator::Scenario;
 use crate::error::{Error, Result};
 use crate::metrics::{aggregate, RunReport, SatSummary, TaskLog};
 use crate::network::{CommModel, GridTopology};
-use crate::satellite::SatelliteState;
+use crate::satellite::{InFlight, SatelliteState};
 use crate::workload::{build_workload, ImageData, SatId, Task, Workload};
 use events::{EventKind, EventQueue};
+
+pub use engine::Engine;
+pub use observer::{NullObserver, Observer, TraceObserver};
+pub use source::{PreparedSource, SharedPrepared, StreamConfig, StreamingSource};
 
 /// A configured simulation, ready to run.
 pub struct Simulation<'a> {
@@ -39,6 +64,8 @@ pub struct Simulation<'a> {
     workload: Option<&'a Workload>,
     /// Optional pre-computed per-task inputs + oracle labels.
     prepared: Option<&'a Prepared>,
+    /// Drop per-task logs, keep only running aggregates (O(1) per task).
+    aggregate_only: bool,
 }
 
 /// Pre-computed per-task data, shareable across scenario runs.
@@ -59,7 +86,7 @@ fn preprocess_threads(n: usize) -> usize {
     hw.min(n.div_ceil(MIN_TASKS_PER_THREAD)).max(1)
 }
 
-/// Pre-process every task and compute oracle labels.
+/// Pre-process a task slice and compute its oracle labels.
 ///
 /// Preprocessing fans out across scoped threads (the same pattern as
 /// `run_scenarios_parallel`): the task list is split into contiguous
@@ -69,10 +96,11 @@ fn preprocess_threads(n: usize) -> usize {
 /// [`ComputeBackend::classify_many`] pass (a real GEMM on the native
 /// backend). Because every per-task result is independent and the batched
 /// kernels share the single-task reduction order, the output is
-/// *identical* to [`prepare_sequential`] — asserted by the determinism
-/// tests below and in `tests/properties.rs`.
-pub fn prepare(backend: &dyn ComputeBackend, workload: &Workload) -> Result<Prepared> {
-    let tasks = &workload.tasks;
+/// *identical* to [`prepare_sequential`] for any chunking — asserted by
+/// the determinism tests below and in `tests/properties.rs`. This is also
+/// why [`StreamingSource`]'s on-demand chunks are bit-identical to the
+/// up-front table.
+pub fn prepare_tasks(backend: &dyn ComputeBackend, tasks: &[Task]) -> Result<Prepared> {
     let n = tasks.len();
     let threads = preprocess_threads(n);
     let chunk_len = n.div_ceil(threads).max(1);
@@ -96,6 +124,11 @@ pub fn prepare(backend: &dyn ComputeBackend, workload: &Workload) -> Result<Prep
     Ok(Prepared { pres, oracle })
 }
 
+/// Pre-process every task of a workload and compute oracle labels.
+pub fn prepare(backend: &dyn ComputeBackend, workload: &Workload) -> Result<Prepared> {
+    prepare_tasks(backend, &workload.tasks)
+}
+
 /// Sequential, unbatched reference implementation of [`prepare`] — one
 /// `preprocess` and one `classify` call per task, in task order. Kept for
 /// determinism cross-checks and single-core environments.
@@ -114,19 +147,6 @@ pub fn prepare_sequential(
     Ok(Prepared { pres, oracle })
 }
 
-/// What one satellite is currently executing.
-#[derive(Clone, Debug)]
-struct InFlight {
-    task_idx: usize,
-    start: f64,
-    reused: bool,
-    correct: bool,
-    ssim: Option<f32>,
-    /// Scene of the serving record (provenance diagnostics).
-    reused_from_scene: Option<u32>,
-    reused_from_sat: Option<usize>,
-}
-
 impl<'a> Simulation<'a> {
     pub fn new(
         cfg: &'a SimConfig,
@@ -139,6 +159,7 @@ impl<'a> Simulation<'a> {
             scenario,
             workload: None,
             prepared: None,
+            aggregate_only: false,
         }
     }
 
@@ -154,8 +175,115 @@ impl<'a> Simulation<'a> {
         self
     }
 
+    /// Keep only running aggregates: the report's `tasks` vec comes back
+    /// empty and per-task log memory is never held. All aggregate metrics
+    /// are identical to the full run.
+    pub fn aggregate_only(mut self) -> Self {
+        self.aggregate_only = true;
+        self
+    }
+
+    /// The shared workload, or a freshly built one when none was shared.
+    fn resolve_workload(&self) -> std::borrow::Cow<'a, Workload> {
+        match self.workload {
+            Some(w) => std::borrow::Cow::Borrowed(w),
+            None => std::borrow::Cow::Owned(build_workload(self.cfg)),
+        }
+    }
+
     /// Run to completion and aggregate the paper's criteria.
+    ///
+    /// Fully-materialized path: the shared (or freshly built) [`Prepared`]
+    /// table serves every task. For bounded-memory preparation see
+    /// [`Simulation::run_streaming`] / [`Simulation::run_with_source`].
     pub fn run(&self) -> Result<RunReport> {
+        let wall_start = std::time::Instant::now();
+        self.cfg.validate()?;
+        let wl = self.resolve_workload();
+        let owned_prep;
+        let prep = match self.prepared {
+            Some(p) => p,
+            None => {
+                owned_prep = prepare(self.backend, &wl)?;
+                &owned_prep
+            }
+        };
+        if prep.pres.len() != wl.tasks.len() {
+            return Err(Error::simulation("prepared data does not match workload"));
+        }
+        let mut source = SharedPrepared::new(prep);
+        self.run_engine(wall_start, &wl, &mut source)
+    }
+
+    /// Run with streaming preparation: per-task inputs are prepared in
+    /// on-demand chunks with residency bounded by `stream`'s window
+    /// instead of the task count. The report is bit-identical to
+    /// [`Simulation::run`].
+    pub fn run_streaming(&self, stream: StreamConfig) -> Result<RunReport> {
+        let wall_start = std::time::Instant::now();
+        self.cfg.validate()?;
+        let wl = self.resolve_workload();
+        let mut source = StreamingSource::new(self.backend, &wl, stream)?;
+        self.run_engine(wall_start, &wl, &mut source)
+    }
+
+    /// Run against a caller-provided [`PreparedSource`] (callers that want
+    /// to inspect source statistics — peak residency, recomputed chunks —
+    /// after the run keep ownership this way). Mutually exclusive with
+    /// [`Simulation::with_prepared`]: a shared table would be silently
+    /// shadowed by the source, so the combination errors instead.
+    pub fn run_with_source(&self, source: &mut dyn PreparedSource) -> Result<RunReport> {
+        let wall_start = std::time::Instant::now();
+        self.cfg.validate()?;
+        if self.prepared.is_some() {
+            return Err(Error::simulation(
+                "run_with_source would shadow the table installed via \
+                 with_prepared — share the table (run) or the source, not both",
+            ));
+        }
+        let wl = self.resolve_workload();
+        if source.len() != wl.tasks.len() {
+            return Err(Error::simulation(format!(
+                "prepared source covers {} tasks, workload has {}",
+                source.len(),
+                wl.tasks.len()
+            )));
+        }
+        self.run_engine(wall_start, &wl, source)
+    }
+
+    /// Construct the engine and drive it, wiring the `CCRSAT_TRACE`
+    /// observer when the environment asks for it. `wall_start` is the
+    /// instant the public entry point began, so the report's `wallclock_s`
+    /// covers workload build + preparation exactly as the pre-refactor
+    /// monolith did.
+    fn run_engine(
+        &self,
+        wall_start: std::time::Instant,
+        wl: &Workload,
+        source: &mut dyn PreparedSource,
+    ) -> Result<RunReport> {
+        let engine = Engine::new(
+            self.cfg,
+            self.backend,
+            self.scenario,
+            wl,
+            !self.aggregate_only,
+        );
+        if std::env::var("CCRSAT_TRACE").is_ok() {
+            engine.run_from(wall_start, source, &mut TraceObserver)
+        } else {
+            engine.run_from(wall_start, source, &mut NullObserver)
+        }
+    }
+
+    /// The pre-refactor monolithic event loop, kept verbatim as the
+    /// determinism reference for [`Engine`] (the same pattern as
+    /// [`prepare_sequential`]). The golden-pin tests in
+    /// `tests/engine_identity.rs` assert fixed-seed [`RunReport`] identity
+    /// between this and [`Simulation::run`] for every scenario; new
+    /// features land in the engine only.
+    pub fn run_reference(&self) -> Result<RunReport> {
         let wall_start = std::time::Instant::now();
         self.cfg.validate()?;
 
@@ -176,9 +304,7 @@ impl<'a> Simulation<'a> {
             }
         };
         if prep.pres.len() != wl.tasks.len() {
-            return Err(Error::simulation(
-                "prepared data does not match workload",
-            ));
+            return Err(Error::simulation("prepared data does not match workload"));
         }
 
         let topo = GridTopology::new(self.cfg.network.n);
@@ -216,9 +342,7 @@ impl<'a> Simulation<'a> {
         let mut transfer_bytes = 0.0f64;
         let mut comm_seconds = 0.0f64;
         // While a broadcast is in flight the inter-satellite links are
-        // saturated with record payloads; new collaborations wait. This is
-        // what keeps collaboration *rare* (the paper's Table III volumes
-        // imply on the order of one broadcast per mission).
+        // saturated with record payloads; new collaborations wait.
         let mut network_quiet_until = f64::NEG_INFINITY;
         let mut collab_events = 0usize;
         let mut expanded_events = 0usize;
@@ -233,7 +357,7 @@ impl<'a> Simulation<'a> {
                     let sat = wl.tasks[idx].satellite;
                     queues[sat].push_back(idx);
                     if in_flight[sat].is_none() {
-                        self.start_service(
+                        self.start_service_reference(
                             sat,
                             now,
                             wl,
@@ -290,8 +414,7 @@ impl<'a> Simulation<'a> {
                         // receiver suppression, link quiet period) are part
                         // of the PROPOSED on-demand design; the naive SRS
                         // Priority baseline floods whenever its cooldown
-                        // allows — exactly the "redundant cooperation" the
-                        // paper blames for its poor performance.
+                        // allows.
                         let damped = self.scenario != Scenario::SrsPriority;
                         if my_srs < self.cfg.reuse.th_co
                             && cooled
@@ -359,9 +482,9 @@ impl<'a> Simulation<'a> {
                                         comm_seconds += plan.airtime_s;
                                         network_quiet_until = now
                                             + plan.completion_offset(records.len());
-                                        let shared: Vec<(u32, Rc<_>)> = records
+                                        let shared: Vec<(u32, Arc<_>)> = records
                                             .into_iter()
-                                            .map(|(b, r)| (b, Rc::new(r)))
+                                            .map(|(b, r)| (b, Arc::new(r)))
                                             .collect();
                                         for &(dst, depth) in &plan.arrivals {
                                             for (k, (bucket, rec)) in
@@ -386,7 +509,7 @@ impl<'a> Simulation<'a> {
                     }
 
                     if !queues[sat].is_empty() {
-                        self.start_service(
+                        self.start_service_reference(
                             sat,
                             now,
                             wl,
@@ -449,9 +572,10 @@ impl<'a> Simulation<'a> {
         ))
     }
 
-    /// Dequeue and start the next task on an idle satellite.
+    /// Dequeue and start the next task on an idle satellite (reference
+    /// path; the engine's version is `engine::Engine::start_service`).
     #[allow(clippy::too_many_arguments)]
-    fn start_service(
+    fn start_service_reference(
         &self,
         sat: SatId,
         now: f64,
@@ -465,7 +589,11 @@ impl<'a> Simulation<'a> {
         scratch_s: f64,
         lookup_s: f64,
     ) -> Result<()> {
-        let idx = queues[sat].pop_front().expect("queue non-empty");
+        let idx = queues[sat].pop_front().ok_or_else(|| {
+            Error::simulation(format!(
+                "start_service on satellite {sat} with an empty queue"
+            ))
+        })?;
         let task = &wl.tasks[idx];
         let pre = &prep.pres[idx];
 
@@ -682,6 +810,134 @@ mod tests {
                 last = t.completion;
             }
         }
+    }
+
+    #[test]
+    fn aggregate_only_drops_logs_but_keeps_metrics() {
+        let cfg = tiny_cfg(3, 30);
+        let backend = NativeBackend::new(&cfg);
+        let wl = build_workload(&cfg);
+        let prep = prepare(&backend, &wl).unwrap();
+        let full = Simulation::new(&cfg, &backend, Scenario::Sccr)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .run()
+            .unwrap();
+        let slim = Simulation::new(&cfg, &backend, Scenario::Sccr)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .aggregate_only()
+            .run()
+            .unwrap();
+        assert!(slim.tasks.is_empty(), "aggregate-only must not keep logs");
+        assert_eq!(full.tasks.len(), 30);
+        assert_eq!(slim.completion_time, full.completion_time);
+        assert_eq!(slim.compute_seconds, full.compute_seconds);
+        assert_eq!(slim.makespan, full.makespan);
+        assert_eq!(slim.reuse_rate, full.reuse_rate);
+        assert_eq!(slim.reuse_accuracy, full.reuse_accuracy);
+        assert_eq!(slim.cpu_occupancy, full.cpu_occupancy);
+        assert_eq!(slim.mean_latency, full.mean_latency);
+        assert_eq!(slim.p95_latency, full.p95_latency);
+        assert_eq!(slim.data_transfer_mb, full.data_transfer_mb);
+        assert_eq!(slim.collab_events, full.collab_events);
+        assert_eq!(slim.total_tasks, full.total_tasks);
+        assert_eq!(slim.reused_tasks, full.reused_tasks);
+    }
+
+    #[test]
+    fn streaming_run_matches_materialized_run() {
+        let cfg = tiny_cfg(3, 45);
+        let backend = NativeBackend::new(&cfg);
+        let wl = build_workload(&cfg);
+        let prep = prepare(&backend, &wl).unwrap();
+        let materialized = Simulation::new(&cfg, &backend, Scenario::Sccr)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .run()
+            .unwrap();
+        let stream = StreamConfig {
+            chunk_tasks: 8,
+            window_chunks: 2,
+        };
+        let mut source = StreamingSource::new(&backend, &wl, stream).unwrap();
+        let streamed = Simulation::new(&cfg, &backend, Scenario::Sccr)
+            .with_workload(&wl)
+            .run_with_source(&mut source)
+            .unwrap();
+        assert_eq!(streamed.completion_time, materialized.completion_time);
+        assert_eq!(streamed.reused_tasks, materialized.reused_tasks);
+        assert_eq!(streamed.reuse_accuracy, materialized.reuse_accuracy);
+        assert_eq!(streamed.data_transfer_mb, materialized.data_transfer_mb);
+        assert_eq!(streamed.collab_events, materialized.collab_events);
+        assert!(
+            source.peak_resident() <= stream.window_tasks(),
+            "residency {} must stay within the window {}",
+            source.peak_resident(),
+            stream.window_tasks()
+        );
+        assert!(source.peak_resident() < wl.tasks.len());
+    }
+
+    #[test]
+    fn run_streaming_entry_point_matches_run() {
+        let cfg = tiny_cfg(3, 30);
+        let backend = NativeBackend::new(&cfg);
+        let wl = build_workload(&cfg);
+        let prep = prepare(&backend, &wl).unwrap();
+        let materialized = Simulation::new(&cfg, &backend, Scenario::Slcr)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .run()
+            .unwrap();
+        // Shared-workload path.
+        let streamed = Simulation::new(&cfg, &backend, Scenario::Slcr)
+            .with_workload(&wl)
+            .run_streaming(StreamConfig {
+                chunk_tasks: 4,
+                window_chunks: 2,
+            })
+            .unwrap();
+        assert_eq!(streamed.completion_time, materialized.completion_time);
+        assert_eq!(streamed.reused_tasks, materialized.reused_tasks);
+        assert_eq!(streamed.reuse_accuracy, materialized.reuse_accuracy);
+        assert_eq!(streamed.tasks.len(), materialized.tasks.len());
+        // Self-built-workload path (same seed → same stream).
+        let self_built = Simulation::new(&cfg, &backend, Scenario::Slcr)
+            .run_streaming(StreamConfig::default())
+            .unwrap();
+        assert_eq!(self_built.completion_time, materialized.completion_time);
+    }
+
+    #[test]
+    fn mismatched_source_rejected() {
+        let cfg = tiny_cfg(3, 30);
+        let backend = NativeBackend::new(&cfg);
+        let wl = build_workload(&cfg);
+        let mut other_cfg = cfg.clone();
+        other_cfg.workload.total_tasks = 12;
+        let other_wl = build_workload(&other_cfg);
+        let prep = prepare(&backend, &other_wl).unwrap();
+        let mut source = SharedPrepared::new(&prep);
+        let err = Simulation::new(&cfg, &backend, Scenario::Slcr)
+            .with_workload(&wl)
+            .run_with_source(&mut source);
+        assert!(err.is_err(), "12-task source vs 30-task workload");
+    }
+
+    #[test]
+    fn run_with_source_rejects_a_shadowed_prepared_table() {
+        let cfg = tiny_cfg(3, 30);
+        let backend = NativeBackend::new(&cfg);
+        let wl = build_workload(&cfg);
+        let prep = prepare(&backend, &wl).unwrap();
+        let other = prepare(&backend, &wl).unwrap();
+        let mut source = SharedPrepared::new(&other);
+        let err = Simulation::new(&cfg, &backend, Scenario::Slcr)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .run_with_source(&mut source);
+        assert!(err.is_err(), "with_prepared + run_with_source must error");
     }
 
     #[test]

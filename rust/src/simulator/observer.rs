@@ -1,0 +1,142 @@
+//! Run observation hooks.
+//!
+//! The engine reports what happens — task completions, collaboration
+//! requests, broadcasts, deliveries — through an [`Observer`] instead of
+//! ad-hoc `eprintln!` tracing sprinkled through the event loop. The two
+//! built-ins:
+//!
+//! * [`NullObserver`] — the default; every hook is a no-op the optimizer
+//!   erases.
+//! * [`TraceObserver`] — the `CCRSAT_TRACE` diagnostic stream, emitting
+//!   the same `[trace]` lines the pre-refactor inline tracing printed.
+//!
+//! Incremental *metrics* accumulation is deliberately not an observer: the
+//! engine owns a [`crate::metrics::MetricsAccum`] directly (a report must
+//! always be produced), and observers are purely additive diagnostics.
+
+use crate::coordinator::sccr::CollabDecision;
+use crate::metrics::TaskLog;
+use crate::workload::SatId;
+
+/// Hooks the engine fires as the run unfolds. All methods default to
+/// no-ops so an observer implements only what it cares about.
+pub trait Observer {
+    /// A task completed; `log` is the entry the metrics layer records.
+    fn on_task_complete(&mut self, log: &TaskLog) {
+        let _ = log;
+    }
+
+    /// A satellite issued a collaboration request. `all_srs` holds the
+    /// current SRS of every satellite (the requester's is `srs`).
+    fn on_collab_request(&mut self, now: f64, sat: SatId, srs: f64, all_srs: &[f64]) {
+        let _ = (now, sat, srs, all_srs);
+    }
+
+    /// A collaboration found a source and launched a broadcast of
+    /// `records` records over `decision.area`.
+    fn on_collab_broadcast(&mut self, now: f64, decision: &CollabDecision, records: usize) {
+        let _ = (now, decision, records);
+    }
+
+    /// One broadcast record landed at `dst`.
+    fn on_broadcast_deliver(&mut self, now: f64, dst: SatId) {
+        let _ = (now, dst);
+    }
+}
+
+/// The default observer: observes nothing.
+pub struct NullObserver;
+
+impl Observer for NullObserver {}
+
+/// `CCRSAT_TRACE` diagnostics: one line per collaboration request and one
+/// per launched broadcast, on stderr (the format the inline tracing used).
+pub struct TraceObserver;
+
+impl Observer for TraceObserver {
+    fn on_collab_request(&mut self, now: f64, sat: SatId, srs: f64, all_srs: &[f64]) {
+        let max = all_srs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        eprintln!(
+            "[trace] t={now:7.2} req={sat:3} srs={srs:.3} max_srs={max:.3}"
+        );
+    }
+
+    fn on_collab_broadcast(&mut self, now: f64, decision: &CollabDecision, records: usize) {
+        eprintln!(
+            "[trace] t={now:7.2} EVENT src={} area={} recs={} expanded={}",
+            decision.source,
+            decision.area.len(),
+            records,
+            decision.expanded
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Counts every hook — doubles as a compile-time check that custom
+    /// observers can accumulate state.
+    #[derive(Default)]
+    struct Counting {
+        completions: usize,
+        requests: usize,
+        broadcasts: usize,
+        deliveries: usize,
+    }
+
+    impl Observer for Counting {
+        fn on_task_complete(&mut self, _log: &TaskLog) {
+            self.completions += 1;
+        }
+        fn on_collab_request(&mut self, _: f64, _: SatId, _: f64, _: &[f64]) {
+            self.requests += 1;
+        }
+        fn on_collab_broadcast(&mut self, _: f64, _: &CollabDecision, _: usize) {
+            self.broadcasts += 1;
+        }
+        fn on_broadcast_deliver(&mut self, _: f64, _: SatId) {
+            self.deliveries += 1;
+        }
+    }
+
+    #[test]
+    fn default_hooks_are_noops_and_custom_hooks_accumulate() {
+        let log = TaskLog {
+            task_id: 0,
+            sat: 0,
+            arrival: 0.0,
+            start: 0.0,
+            completion: 1.0,
+            reused: false,
+            correct: true,
+            ssim: None,
+            scene: 0,
+            reused_from_scene: None,
+            reused_from_sat: None,
+        };
+        let decision = CollabDecision {
+            source: 1,
+            area: vec![0, 1],
+            expanded: false,
+        };
+        let mut null = NullObserver;
+        null.on_task_complete(&log);
+        null.on_collab_request(0.0, 0, 0.1, &[0.1, 0.9]);
+        null.on_collab_broadcast(0.0, &decision, 3);
+        null.on_broadcast_deliver(0.0, 1);
+
+        let mut c = Counting::default();
+        let obs: &mut dyn Observer = &mut c;
+        obs.on_task_complete(&log);
+        obs.on_collab_request(0.0, 0, 0.1, &[0.1, 0.9]);
+        obs.on_collab_broadcast(0.0, &decision, 3);
+        obs.on_broadcast_deliver(0.0, 1);
+        obs.on_broadcast_deliver(0.5, 0);
+        assert_eq!(
+            (c.completions, c.requests, c.broadcasts, c.deliveries),
+            (1, 1, 1, 2)
+        );
+    }
+}

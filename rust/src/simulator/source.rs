@@ -1,0 +1,360 @@
+//! Prepared-input sources: how the engine obtains per-task
+//! [`Preprocessed`] inputs and oracle labels.
+//!
+//! The seed design required every task to be preprocessed and held in
+//! memory up front ([`Prepared`]) — a hard ceiling on constellation and
+//! workload scale. [`PreparedSource`] abstracts that: the engine asks for
+//! `(pre, oracle)` by task index and does not care whether the answer is
+//! a lookup in a fully-materialized table or a just-in-time batch.
+//!
+//! * [`SharedPrepared`] — a borrow of a fully-materialized [`Prepared`],
+//!   the determinism reference (and what the parallel experiment harness
+//!   shares across scenario threads).
+//! * [`StreamingSource`] — prepares fixed-size chunks on demand (batched
+//!   and threaded exactly like [`prepare`]) and keeps only a bounded
+//!   LRU window of them resident, so on 21×21–31×31 grids and long task
+//!   streams the *prepared* residency is bounded by the window, not the
+//!   task count. (The raw sensor tiles of the [`Workload`] itself remain
+//!   fully resident — `Workload::raw_bytes` is the number to watch there,
+//!   and the CLI's streaming summary prints it.) Because the batched
+//!   kernels are bit-identical to the single-task paths regardless of
+//!   chunking, a streaming run's `RunReport` is bit-identical to a
+//!   materialized run's (asserted by the determinism tests and
+//!   `tests/properties.rs`).
+//!
+//! [`prepare`]: crate::simulator::prepare
+
+use std::collections::VecDeque;
+
+use crate::compute::{ComputeBackend, Preprocessed};
+use crate::error::{Error, Result};
+use crate::simulator::{prepare_tasks, Prepared};
+use crate::workload::Workload;
+
+/// Serves per-task prepared inputs to the engine, by task index.
+pub trait PreparedSource {
+    /// Total number of tasks this source covers.
+    fn len(&self) -> usize;
+
+    /// Is the source empty?
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The preprocessed input and oracle label of task `idx`.
+    fn fetch(&mut self, idx: usize) -> Result<(&Preprocessed, u32)>;
+
+    /// Peak number of [`Preprocessed`] entries simultaneously resident so
+    /// far (for a materialized source this is simply the task count).
+    fn peak_resident(&self) -> usize;
+}
+
+/// A borrowed, fully-materialized [`Prepared`] as a source — the zero-cost
+/// path the experiment harness shares across scenario threads.
+pub struct SharedPrepared<'a>(&'a Prepared);
+
+impl<'a> SharedPrepared<'a> {
+    pub fn new(prepared: &'a Prepared) -> Self {
+        SharedPrepared(prepared)
+    }
+}
+
+impl PreparedSource for SharedPrepared<'_> {
+    fn len(&self) -> usize {
+        self.0.pres.len()
+    }
+
+    fn fetch(&mut self, idx: usize) -> Result<(&Preprocessed, u32)> {
+        match (self.0.pres.get(idx), self.0.oracle.get(idx)) {
+            (Some(pre), Some(&label)) => Ok((pre, label)),
+            _ => Err(Error::simulation(format!(
+                "task index {idx} outside the prepared table ({} tasks)",
+                self.0.pres.len()
+            ))),
+        }
+    }
+
+    fn peak_resident(&self) -> usize {
+        self.0.pres.len()
+    }
+}
+
+/// Shape of a streaming window: tasks per chunk × resident chunks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamConfig {
+    /// Tasks prepared per on-demand batch.
+    pub chunk_tasks: usize,
+    /// Maximum chunks resident at once (LRU-evicted beyond this).
+    pub window_chunks: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            chunk_tasks: 64,
+            window_chunks: 4,
+        }
+    }
+}
+
+impl StreamConfig {
+    /// Derive a config from a total window budget in tasks (the CLI's
+    /// `--stream-window`): roughly four chunks per window, chunk size
+    /// capped so single chunks stay batch-kernel friendly, and the
+    /// resulting [`StreamConfig::window_tasks`] ceiling never *exceeds*
+    /// the budget (the chunk count rounds down). A zero budget yields a
+    /// degenerate config that [`StreamConfig::validate`] rejects — it is
+    /// not silently clamped up.
+    pub fn with_window_tasks(window_tasks: usize) -> Self {
+        if window_tasks == 0 {
+            return StreamConfig {
+                chunk_tasks: 0,
+                window_chunks: 0,
+            };
+        }
+        let chunk_tasks = (window_tasks / 4).clamp(1, 256);
+        let window_chunks = (window_tasks / chunk_tasks).max(1);
+        StreamConfig {
+            chunk_tasks,
+            window_chunks,
+        }
+    }
+
+    /// Upper bound on simultaneously-resident prepared tasks.
+    pub fn window_tasks(&self) -> usize {
+        self.chunk_tasks * self.window_chunks
+    }
+
+    /// Reject degenerate windows.
+    pub fn validate(&self) -> Result<()> {
+        if self.chunk_tasks == 0 || self.window_chunks == 0 {
+            return Err(Error::config(format!(
+                "streaming window must be positive (chunk_tasks={}, window_chunks={})",
+                self.chunk_tasks, self.window_chunks
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// On-demand chunked preparation with a bounded LRU residency window.
+///
+/// Chunks are prepared with [`prepare_tasks`] — the same threaded, batched
+/// path as the up-front [`prepare`] — over contiguous arrival-ordered task
+/// ranges. A chunk evicted by the window and later re-requested (a long
+/// satellite queue reaching back past the window) is simply recomputed;
+/// preparation is deterministic, so the recomputed chunk is identical.
+///
+/// [`prepare`]: crate::simulator::prepare
+pub struct StreamingSource<'a> {
+    backend: &'a dyn ComputeBackend,
+    wl: &'a Workload,
+    cfg: StreamConfig,
+    /// Resident chunks, LRU order (most recently used at the back).
+    chunks: VecDeque<(usize, Prepared)>,
+    /// Which chunk ids have ever been prepared (recompute accounting).
+    prepared_once: Vec<bool>,
+    peak_resident: usize,
+    prepared_chunks: usize,
+    recomputed_chunks: usize,
+}
+
+impl<'a> StreamingSource<'a> {
+    pub fn new(
+        backend: &'a dyn ComputeBackend,
+        wl: &'a Workload,
+        cfg: StreamConfig,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        let num_chunks = wl.tasks.len().div_ceil(cfg.chunk_tasks);
+        Ok(StreamingSource {
+            backend,
+            wl,
+            cfg,
+            chunks: VecDeque::new(),
+            prepared_once: vec![false; num_chunks],
+            peak_resident: 0,
+            prepared_chunks: 0,
+            recomputed_chunks: 0,
+        })
+    }
+
+    /// Chunk preparations run so far (≥ the chunk count when the window
+    /// forced recomputation).
+    pub fn prepared_chunks(&self) -> usize {
+        self.prepared_chunks
+    }
+
+    /// Chunks that had to be prepared a second time after eviction.
+    pub fn recomputed_chunks(&self) -> usize {
+        self.recomputed_chunks
+    }
+
+    /// The window shape this source runs with.
+    pub fn stream_config(&self) -> StreamConfig {
+        self.cfg
+    }
+
+    /// Make chunk `cid` resident and return its position in the LRU deque.
+    fn ensure_resident(&mut self, cid: usize) -> Result<usize> {
+        if let Some(pos) = self.chunks.iter().position(|&(id, _)| id == cid) {
+            if pos + 1 != self.chunks.len() {
+                let entry = self.chunks.remove(pos).expect("position in range");
+                self.chunks.push_back(entry);
+            }
+            return Ok(self.chunks.len() - 1);
+        }
+        // Evict BEFORE preparing: true residency (including the chunk
+        // being built) must never exceed the window, and `peak_resident`
+        // must report the honest maximum.
+        while self.chunks.len() >= self.cfg.window_chunks {
+            self.chunks.pop_front();
+        }
+        let lo = cid * self.cfg.chunk_tasks;
+        let hi = (lo + self.cfg.chunk_tasks).min(self.wl.tasks.len());
+        let chunk = prepare_tasks(self.backend, &self.wl.tasks[lo..hi])?;
+        if self.prepared_once[cid] {
+            self.recomputed_chunks += 1;
+        } else {
+            self.prepared_once[cid] = true;
+        }
+        self.prepared_chunks += 1;
+        self.chunks.push_back((cid, chunk));
+        let resident: usize = self.chunks.iter().map(|(_, p)| p.pres.len()).sum();
+        self.peak_resident = self.peak_resident.max(resident);
+        Ok(self.chunks.len() - 1)
+    }
+}
+
+impl PreparedSource for StreamingSource<'_> {
+    fn len(&self) -> usize {
+        self.wl.tasks.len()
+    }
+
+    fn fetch(&mut self, idx: usize) -> Result<(&Preprocessed, u32)> {
+        if idx >= self.wl.tasks.len() {
+            return Err(Error::simulation(format!(
+                "task index {idx} outside the workload ({} tasks)",
+                self.wl.tasks.len()
+            )));
+        }
+        let cid = idx / self.cfg.chunk_tasks;
+        let pos = self.ensure_resident(cid)?;
+        let (_, chunk) = &self.chunks[pos];
+        let off = idx - cid * self.cfg.chunk_tasks;
+        Ok((&chunk.pres[off], chunk.oracle[off]))
+    }
+
+    fn peak_resident(&self) -> usize {
+        self.peak_resident
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::NativeBackend;
+    use crate::config::SimConfig;
+    use crate::simulator::prepare;
+    use crate::workload::build_workload;
+
+    fn setup() -> (SimConfig, NativeBackend, Workload) {
+        let mut cfg = SimConfig::paper_default(3);
+        cfg.workload.total_tasks = 30;
+        cfg.workload.raw_h = 16;
+        cfg.workload.raw_w = 16;
+        let backend = NativeBackend::new(&cfg);
+        let wl = build_workload(&cfg);
+        (cfg, backend, wl)
+    }
+
+    #[test]
+    fn streaming_fetch_matches_materialized_in_any_order() {
+        let (_cfg, backend, wl) = setup();
+        let full = prepare(&backend, &wl).unwrap();
+        let mut src = StreamingSource::new(
+            &backend,
+            &wl,
+            StreamConfig {
+                chunk_tasks: 7,
+                window_chunks: 2,
+            },
+        )
+        .unwrap();
+        assert_eq!(src.len(), 30);
+        // An out-of-order access pattern spanning evicted chunks.
+        for &idx in &[0usize, 29, 3, 15, 1, 28, 7, 0, 22, 29] {
+            let (pre, label) = src.fetch(idx).unwrap();
+            assert_eq!(pre, &full.pres[idx], "pre {idx} diverged");
+            assert_eq!(label, full.oracle[idx], "oracle {idx} diverged");
+        }
+        assert!(
+            src.recomputed_chunks() > 0,
+            "this pattern must thrash a 2-chunk window"
+        );
+    }
+
+    #[test]
+    fn residency_is_bounded_by_the_window() {
+        let (_cfg, backend, wl) = setup();
+        let cfg = StreamConfig {
+            chunk_tasks: 5,
+            window_chunks: 2,
+        };
+        let mut src = StreamingSource::new(&backend, &wl, cfg).unwrap();
+        for idx in 0..30 {
+            src.fetch(idx).unwrap();
+        }
+        assert!(src.peak_resident() <= cfg.window_tasks());
+        assert!(src.peak_resident() < wl.tasks.len());
+        assert_eq!(src.recomputed_chunks(), 0, "sequential access never thrashes");
+        assert_eq!(src.prepared_chunks(), 6);
+    }
+
+    #[test]
+    fn shared_prepared_reports_full_residency_and_bounds() {
+        let (_cfg, backend, wl) = setup();
+        let full = prepare(&backend, &wl).unwrap();
+        let mut src = SharedPrepared::new(&full);
+        assert_eq!(src.len(), 30);
+        assert_eq!(src.peak_resident(), 30);
+        let (pre, label) = src.fetch(12).unwrap();
+        assert_eq!(pre, &full.pres[12]);
+        assert_eq!(label, full.oracle[12]);
+        assert!(src.fetch(30).is_err(), "out-of-range must error");
+    }
+
+    #[test]
+    fn stream_config_from_window_budget() {
+        let c = StreamConfig::with_window_tasks(128);
+        assert_eq!(c.chunk_tasks, 32);
+        assert_eq!(c.window_chunks, 4);
+        assert_eq!(c.window_tasks(), 128);
+        // tiny budgets stay valid
+        let tiny = StreamConfig::with_window_tasks(1);
+        tiny.validate().unwrap();
+        assert!(tiny.window_tasks() >= 1);
+        // a zero budget is rejected, not clamped up
+        assert!(StreamConfig::with_window_tasks(0).validate().is_err());
+        // the derived ceiling never exceeds the requested budget
+        for budget in [1usize, 3, 5, 130, 257, 10_000] {
+            let c = StreamConfig::with_window_tasks(budget);
+            c.validate().unwrap();
+            assert!(
+                c.window_tasks() <= budget,
+                "budget {budget} -> ceiling {}",
+                c.window_tasks()
+            );
+        }
+        // huge budgets cap the chunk size, not the window
+        let big = StreamConfig::with_window_tasks(10_000);
+        assert_eq!(big.chunk_tasks, 256);
+        assert!(big.window_tasks() >= 9_000);
+        assert!(StreamConfig {
+            chunk_tasks: 0,
+            window_chunks: 1
+        }
+        .validate()
+        .is_err());
+    }
+}

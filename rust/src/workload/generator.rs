@@ -37,6 +37,18 @@ impl Workload {
     pub fn tasks_for(&self, sat: SatId) -> impl Iterator<Item = &Task> {
         self.tasks.iter().filter(move |t| t.satellite == sat)
     }
+
+    /// Total raw sensor-tile payload held by this workload, in bytes
+    /// (pixel buffers only). Streaming preparation bounds the *prepared*
+    /// residency, but the raw tiles stay resident for the whole run — this
+    /// is the number to watch when sizing constellation-scale streams
+    /// (the CLI's streaming summary prints it).
+    pub fn raw_bytes(&self) -> usize {
+        self.tasks
+            .iter()
+            .map(|t| t.raw.pixels.len() * std::mem::size_of::<f32>())
+            .sum()
+    }
 }
 
 /// Classes available to an orbit: a sliding window over the class circle so
@@ -232,6 +244,13 @@ mod tests {
         let wl = build_workload(&cfg);
         assert_eq!(wl.tasks.len(), 625);
         assert!(wl.per_satellite.iter().all(|&c| c == 25));
+    }
+
+    #[test]
+    fn raw_bytes_counts_every_pixel() {
+        let wl = build_workload(&small_cfg());
+        // 45 tasks × 16×16×3 f32 pixels
+        assert_eq!(wl.raw_bytes(), 45 * 16 * 16 * 3 * 4);
     }
 
     #[test]

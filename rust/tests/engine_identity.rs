@@ -1,0 +1,187 @@
+//! Golden pins for the engine rework: fixed-seed `RunReport` identity
+//! between the kept pre-refactor monolithic loop
+//! (`Simulation::run_reference`) and the layered engine
+//! (`Simulation::run`), for every scenario — down to the per-task logs.
+//!
+//! The reference path IS the pre-refactor code (kept verbatim, the same
+//! pattern as `prepare_sequential`), so these tests pin the engine to the
+//! exact numbers the monolith produced at the paper seed. Any behavioural
+//! drift in the rework — event ordering, damping, counter accounting,
+//! float summation order — fails here first.
+
+use ccrsat::compute::NativeBackend;
+use ccrsat::config::SimConfig;
+use ccrsat::coordinator::Scenario;
+use ccrsat::metrics::RunReport;
+use ccrsat::simulator::{
+    prepare, PreparedSource, Simulation, StreamConfig, StreamingSource,
+};
+use ccrsat::workload::build_workload;
+
+fn cfg(n: usize, tasks: usize) -> SimConfig {
+    let mut c = SimConfig::paper_default(n);
+    c.workload.total_tasks = tasks;
+    c
+}
+
+/// Every deterministic aggregate field (everything but wallclock_s).
+fn assert_aggregates_identical(a: &RunReport, b: &RunReport, label: &str) {
+    assert_eq!(a.scenario, b.scenario, "{label}");
+    assert_eq!(a.n, b.n, "{label}");
+    assert_eq!(a.completion_time, b.completion_time, "{label}");
+    assert_eq!(a.compute_seconds, b.compute_seconds, "{label}");
+    assert_eq!(a.comm_seconds, b.comm_seconds, "{label}");
+    assert_eq!(a.makespan, b.makespan, "{label}");
+    assert_eq!(a.reuse_rate, b.reuse_rate, "{label}");
+    assert_eq!(a.cpu_occupancy, b.cpu_occupancy, "{label}");
+    assert_eq!(a.reuse_accuracy, b.reuse_accuracy, "{label}");
+    assert_eq!(a.data_transfer_mb, b.data_transfer_mb, "{label}");
+    assert_eq!(a.total_tasks, b.total_tasks, "{label}");
+    assert_eq!(a.reused_tasks, b.reused_tasks, "{label}");
+    assert_eq!(a.cross_scene_reuses, b.cross_scene_reuses, "{label}");
+    assert_eq!(a.foreign_reuses, b.foreign_reuses, "{label}");
+    assert_eq!(a.errors_same_scene, b.errors_same_scene, "{label}");
+    assert_eq!(a.errors_cross_scene, b.errors_cross_scene, "{label}");
+    assert_eq!(a.collab_events, b.collab_events, "{label}");
+    assert_eq!(a.expanded_events, b.expanded_events, "{label}");
+    assert_eq!(a.aborted_collabs, b.aborted_collabs, "{label}");
+    assert_eq!(a.broadcast_records, b.broadcast_records, "{label}");
+    assert_eq!(a.mean_latency, b.mean_latency, "{label}");
+    assert_eq!(a.p95_latency, b.p95_latency, "{label}");
+}
+
+/// Per-satellite summaries, slot for slot.
+fn assert_satellites_identical(a: &RunReport, b: &RunReport, label: &str) {
+    assert_eq!(a.per_satellite.len(), b.per_satellite.len(), "{label}");
+    for (x, y) in a.per_satellite.iter().zip(&b.per_satellite) {
+        assert_eq!(x.sat, y.sat, "{label}");
+        assert_eq!(x.tasks, y.tasks, "{label} sat {}", x.sat);
+        assert_eq!(x.reused, y.reused, "{label} sat {}", x.sat);
+        assert_eq!(x.busy_s, y.busy_s, "{label} sat {}", x.sat);
+        assert_eq!(x.cpu_occupancy, y.cpu_occupancy, "{label} sat {}", x.sat);
+        assert_eq!(
+            x.collab_requests, y.collab_requests,
+            "{label} sat {}",
+            x.sat
+        );
+        assert_eq!(x.times_source, y.times_source, "{label} sat {}", x.sat);
+        assert_eq!(x.scrt_len, y.scrt_len, "{label} sat {}", x.sat);
+        assert_eq!(x.evictions, y.evictions, "{label} sat {}", x.sat);
+    }
+}
+
+/// Per-task logs, entry for entry (completion order).
+fn assert_logs_identical(a: &RunReport, b: &RunReport, label: &str) {
+    assert_eq!(a.tasks.len(), b.tasks.len(), "{label}");
+    for (x, y) in a.tasks.iter().zip(&b.tasks) {
+        assert_eq!(x.task_id, y.task_id, "{label}");
+        assert_eq!(x.sat, y.sat, "{label} task {}", x.task_id);
+        assert_eq!(x.arrival, y.arrival, "{label} task {}", x.task_id);
+        assert_eq!(x.start, y.start, "{label} task {}", x.task_id);
+        assert_eq!(x.completion, y.completion, "{label} task {}", x.task_id);
+        assert_eq!(x.reused, y.reused, "{label} task {}", x.task_id);
+        assert_eq!(x.correct, y.correct, "{label} task {}", x.task_id);
+        assert_eq!(x.ssim, y.ssim, "{label} task {}", x.task_id);
+        assert_eq!(x.scene, y.scene, "{label} task {}", x.task_id);
+        assert_eq!(
+            x.reused_from_scene, y.reused_from_scene,
+            "{label} task {}",
+            x.task_id
+        );
+        assert_eq!(
+            x.reused_from_sat, y.reused_from_sat,
+            "{label} task {}",
+            x.task_id
+        );
+    }
+}
+
+#[test]
+fn engine_matches_reference_for_every_scenario() {
+    let c = cfg(3, 60);
+    let backend = NativeBackend::new(&c);
+    let wl = build_workload(&c);
+    let prep = prepare(&backend, &wl).unwrap();
+    for s in Scenario::ALL {
+        let engine = Simulation::new(&c, &backend, s)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .run()
+            .unwrap();
+        let reference = Simulation::new(&c, &backend, s)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .run_reference()
+            .unwrap();
+        let label = format!("scenario {s}");
+        assert_aggregates_identical(&engine, &reference, &label);
+        assert_satellites_identical(&engine, &reference, &label);
+        assert_logs_identical(&engine, &reference, &label);
+    }
+}
+
+#[test]
+fn engine_matches_reference_on_a_larger_collaborating_grid() {
+    // 4×4 with more tasks per satellite: exercises queue buildup, the
+    // cooldown window, area expansion and receiver suppression harder
+    // than the 3×3 pin.
+    let c = cfg(4, 96);
+    let backend = NativeBackend::new(&c);
+    let wl = build_workload(&c);
+    let prep = prepare(&backend, &wl).unwrap();
+    for s in [Scenario::Sccr, Scenario::SrsPriority] {
+        let engine = Simulation::new(&c, &backend, s)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .run()
+            .unwrap();
+        let reference = Simulation::new(&c, &backend, s)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .run_reference()
+            .unwrap();
+        let label = format!("scenario {s} 4x4");
+        assert_aggregates_identical(&engine, &reference, &label);
+        assert_satellites_identical(&engine, &reference, &label);
+        assert_logs_identical(&engine, &reference, &label);
+    }
+}
+
+#[test]
+fn streaming_engine_matches_reference_for_every_scenario() {
+    // The full chain: streaming preparation feeding the engine must land
+    // on the exact numbers the pre-refactor monolith produced over the
+    // fully-materialized table.
+    let c = cfg(3, 45);
+    let backend = NativeBackend::new(&c);
+    let wl = build_workload(&c);
+    let prep = prepare(&backend, &wl).unwrap();
+    let stream = StreamConfig {
+        chunk_tasks: 8,
+        window_chunks: 2,
+    };
+    for s in Scenario::ALL {
+        let mut source = StreamingSource::new(&backend, &wl, stream).unwrap();
+        let streamed = Simulation::new(&c, &backend, s)
+            .with_workload(&wl)
+            .run_with_source(&mut source)
+            .unwrap();
+        let reference = Simulation::new(&c, &backend, s)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .run_reference()
+            .unwrap();
+        let label = format!("streaming scenario {s}");
+        assert_aggregates_identical(&streamed, &reference, &label);
+        assert_satellites_identical(&streamed, &reference, &label);
+        assert_logs_identical(&streamed, &reference, &label);
+        if s.uses_reuse() {
+            assert!(
+                source.peak_resident() <= stream.window_tasks(),
+                "{label}: residency {} over window {}",
+                source.peak_resident(),
+                stream.window_tasks()
+            );
+        }
+    }
+}

@@ -12,7 +12,10 @@ use ccrsat::coordinator::srs::srs;
 use ccrsat::coordinator::Scenario;
 use ccrsat::network::{CommModel, GridTopology};
 use ccrsat::config::SimConfig;
-use ccrsat::simulator::{prepare, prepare_sequential, Simulation};
+use ccrsat::simulator::{
+    prepare, prepare_sequential, PreparedSource, Simulation, StreamConfig,
+    StreamingSource,
+};
 use ccrsat::util::rng::Rng;
 use ccrsat::workload::build_workload;
 
@@ -198,6 +201,82 @@ fn prop_fixed_seed_reuse_metrics_invariant_across_prepare_paths() {
         assert_eq!(a.reused_tasks, b.reused_tasks, "{scenario}");
         assert_eq!(a.completion_time, b.completion_time, "{scenario}");
         assert_eq!(a.data_transfer_mb, b.data_transfer_mb, "{scenario}");
+    }
+}
+
+/// Streaming preparation ≡ fully-materialized preparation: across random
+/// seeds and window shapes (including degenerate single-chunk windows that
+/// force recomputation), a streaming run's `RunReport` is bit-identical to
+/// the materialized run's, while prepared-task residency stays bounded by
+/// the window instead of the task count.
+#[test]
+fn prop_streaming_runs_bit_identical_to_materialized() {
+    let mut case_rng = Rng::new(0xCC25A7);
+    for case in 0..6u64 {
+        let mut cfg = SimConfig::paper_default(3);
+        cfg.workload.total_tasks = 36 + case_rng.below(25);
+        cfg.workload.seed = 2025 + case;
+        // Smaller tiles keep the debug-mode render cost sane; identity is
+        // independent of tile size.
+        cfg.workload.raw_h = 32;
+        cfg.workload.raw_w = 32;
+        let backend = NativeBackend::new(&cfg);
+        let wl = build_workload(&cfg);
+        let full = prepare(&backend, &wl).unwrap();
+        let stream = StreamConfig {
+            chunk_tasks: 1 + case_rng.below(12),
+            window_chunks: 1 + case_rng.below(3),
+        };
+        for scenario in [Scenario::Slcr, Scenario::Sccr] {
+            let materialized = Simulation::new(&cfg, &backend, scenario)
+                .with_workload(&wl)
+                .with_prepared(&full)
+                .run()
+                .unwrap();
+            let mut source =
+                StreamingSource::new(&backend, &wl, stream).unwrap();
+            let streamed = Simulation::new(&cfg, &backend, scenario)
+                .with_workload(&wl)
+                .run_with_source(&mut source)
+                .unwrap();
+            let label = format!(
+                "case {case} {scenario} chunk={} window={}",
+                stream.chunk_tasks, stream.window_chunks
+            );
+            assert_eq!(
+                streamed.completion_time, materialized.completion_time,
+                "{label}"
+            );
+            assert_eq!(
+                streamed.compute_seconds, materialized.compute_seconds,
+                "{label}"
+            );
+            assert_eq!(streamed.makespan, materialized.makespan, "{label}");
+            assert_eq!(streamed.reuse_rate, materialized.reuse_rate, "{label}");
+            assert_eq!(
+                streamed.reuse_accuracy, materialized.reuse_accuracy,
+                "{label}"
+            );
+            assert_eq!(
+                streamed.data_transfer_mb, materialized.data_transfer_mb,
+                "{label}"
+            );
+            assert_eq!(
+                streamed.collab_events, materialized.collab_events,
+                "{label}"
+            );
+            assert_eq!(
+                streamed.reused_tasks, materialized.reused_tasks,
+                "{label}"
+            );
+            assert_eq!(streamed.tasks.len(), materialized.tasks.len(), "{label}");
+            assert!(
+                source.peak_resident() <= stream.window_tasks(),
+                "{label}: residency {} over window {}",
+                source.peak_resident(),
+                stream.window_tasks()
+            );
+        }
     }
 }
 
