@@ -42,6 +42,15 @@ pub trait CollabPolicy: Sync {
     /// whether its cooldown window has elapsed, and `quiet_until` the
     /// virtual time until which the inter-satellite links are saturated
     /// with a previous broadcast's payloads.
+    ///
+    /// **Contract for the sharded engine:** the answer must be monotone
+    /// *non-increasing* in `quiet_until` (a later quiet horizon may only
+    /// suppress, never admit, a request). Shard workers evaluate the gate
+    /// against a possibly-stale — i.e. never-later — horizon and pause on
+    /// a pass; the coordinator then re-checks against the authoritative
+    /// horizon at resolution, which is exact precisely because staleness
+    /// can only over-trigger. The default implementation satisfies this
+    /// (`quiet_until` appears solely as `now >= quiet_until`).
     fn should_request(
         &self,
         armed: bool,

@@ -31,6 +31,18 @@
 //!
 //! The expensive SSIM gate (eq. 12) then runs on the single best
 //! candidate, via the compute backend — exactly Alg. 1 lines 2 & 8.
+//!
+//! ## Op journal (sharded engine support)
+//!
+//! With [`Scrt::enable_journal`] the table records every mutation as a
+//! [`ScrtOp`] — including the full payload of eviction victims — so
+//! [`Scrt::top_tau_at`] can answer "what would `top_tau` have returned at
+//! an earlier virtual time `t`?" without cloning or rolling back the live
+//! table. The sharded engine needs exactly that: a conservative window may
+//! process a satellite past the instant another shard's Alg. 2 request
+//! reads its SCRT, and the journal makes that read exact. Journaling is
+//! off by default and costs the single-threaded hot path nothing beyond
+//! one `Option` check per mutation.
 
 use std::collections::{BTreeSet, HashMap};
 
@@ -107,6 +119,29 @@ struct Bucket {
     slots: Vec<Slot>,
 }
 
+/// One journaled table mutation (see [`Scrt::enable_journal`]). `time` is
+/// the virtual time of the mutation: `mark_reused` stamps its `now`,
+/// `insert` stamps the record's own `last_used` — the engines always
+/// insert with `last_used == now`, so the two stamps share one clock.
+#[derive(Clone, Debug)]
+pub enum ScrtOp {
+    /// `mark_reused` bumped a record's value key.
+    Reused {
+        id: RecordId,
+        prev_count: u32,
+        prev_last_used: f64,
+        time: f64,
+    },
+    /// `insert` added a record, evicting at most one victim. The victim is
+    /// retained in full (exchange form + its bucket) so a reconstruction
+    /// at an earlier time can still broadcast it.
+    Inserted {
+        id: RecordId,
+        time: f64,
+        evicted: Option<(u32, Record)>,
+    },
+}
+
 /// Ascending eviction/broadcast value key: `(N_t, recency, id)`.
 type ValueKey = (u32, u64, RecordId);
 
@@ -139,9 +174,15 @@ pub struct Scrt {
     /// Value index, ascending `(N_t, recency, id)`: the minimum end is
     /// the eviction victim, the maximum end feeds `top_tau`.
     order: BTreeSet<ValueKey>,
-    /// Feature stride (pd length), fixed by the first insert.
-    dim: Option<usize>,
+    /// Feature stride (pd length), fixed by the first insert. `0` means
+    /// "no insert yet" — a record's `pd` is never empty (asserted on
+    /// insert), so the sentinel is unambiguous and the hot-path accessors
+    /// stay branch-free in release builds.
+    dim: usize,
     capacity: usize,
+    /// Mutation journal for retroactive reads ([`Scrt::top_tau_at`]);
+    /// `None` (the default) records nothing.
+    journal: Option<Vec<ScrtOp>>,
     /// Total evictions (observability).
     pub evictions: u64,
 }
@@ -155,9 +196,27 @@ impl Scrt {
             buckets: vec![Bucket::default(); num_buckets],
             index: HashMap::new(),
             order: BTreeSet::new(),
-            dim: None,
+            dim: 0,
             capacity,
+            journal: None,
             evictions: 0,
+        }
+    }
+
+    /// Start journaling mutations (idempotent). Required by
+    /// [`Scrt::top_tau_at`]; the sharded engine enables it per shard and
+    /// clears the journal at every conservative-window boundary.
+    pub fn enable_journal(&mut self) {
+        if self.journal.is_none() {
+            self.journal = Some(Vec::new());
+        }
+    }
+
+    /// Drop the journaled ops (journaling stays enabled). Reads via
+    /// [`Scrt::top_tau_at`] only reach back to the last clear.
+    pub fn clear_journal(&mut self) {
+        if let Some(journal) = &mut self.journal {
+            journal.clear();
         }
     }
 
@@ -196,7 +255,10 @@ impl Scrt {
         task_type: u16,
         pre: &Preprocessed,
     ) -> Option<(usize, f32)> {
-        let dim = self.dim?;
+        if self.dim == 0 {
+            return None; // nothing inserted yet
+        }
+        let dim = self.dim;
         debug_assert_eq!(pre.pd.len(), dim, "probe stride mismatch");
         let b = &self.buckets[bucket as usize];
         let mut best: Option<(usize, f32)> = None;
@@ -215,8 +277,16 @@ impl Scrt {
     }
 
     /// Borrow a record view by (bucket, slot).
+    ///
+    /// **Invariant:** `(bucket, slot)` coordinates only exist in callers'
+    /// hands after an insert put a record there ([`Scrt::nearest`],
+    /// [`Scrt::location`], [`Scrt::iter`] are the only sources), so the
+    /// feature stride is always set by the time a view is taken. Debug
+    /// builds assert it; the release hot path stays branch-free (the old
+    /// `expect` compiled to a check + panic call on every view).
     pub fn view(&self, bucket: u32, slot: usize) -> RecordView<'_> {
-        let dim = self.dim.expect("viewing a slot implies a prior insert");
+        debug_assert!(self.dim != 0, "viewing a slot implies a prior insert");
+        let dim = self.dim;
         let b = &self.buckets[bucket as usize];
         let s = &b.slots[slot];
         RecordView {
@@ -247,6 +317,14 @@ impl Scrt {
     pub fn mark_reused(&mut self, bucket: u32, slot: usize, now: f64) {
         let s = &mut self.buckets[bucket as usize].slots[slot];
         let old = value_key(s.reuse_count, s.last_used, s.id);
+        if let Some(journal) = &mut self.journal {
+            journal.push(ScrtOp::Reused {
+                id: s.id,
+                prev_count: s.reuse_count,
+                prev_last_used: s.last_used,
+                time: now,
+            });
+        }
         s.reuse_count += 1;
         s.last_used = now;
         let new = value_key(s.reuse_count, s.last_used, s.id);
@@ -264,11 +342,19 @@ impl Scrt {
     /// broadcasts; the O(1) probe is negligible next to the insert).
     pub fn insert(&mut self, bucket: u32, record: Record) -> Option<RecordId> {
         assert!(!self.contains(record.id), "duplicate record id");
-        let dim = *self.dim.get_or_insert(record.pre.pd.len());
-        assert_eq!(record.pre.pd.len(), dim, "pd stride mismatch");
+        if self.dim == 0 {
+            assert!(!record.pre.pd.is_empty(), "pd must be non-empty");
+            self.dim = record.pre.pd.len();
+        }
+        assert_eq!(record.pre.pd.len(), self.dim, "pd stride mismatch");
+        let journaling = self.journal.is_some();
         let mut evicted = None;
+        let mut evicted_full = None;
         if self.len() >= self.capacity {
-            evicted = self.evict_lowest_value();
+            if let Some((victim, full)) = self.evict_lowest_value(journaling) {
+                evicted = Some(victim);
+                evicted_full = full;
+            }
         }
         let Record {
             id,
@@ -295,19 +381,34 @@ impl Scrt {
         });
         self.index.insert(id, (bucket, slot));
         self.order.insert(value_key(reuse_count, last_used, id));
+        if let Some(journal) = &mut self.journal {
+            journal.push(ScrtOp::Inserted {
+                id,
+                time: last_used,
+                evicted: evicted_full,
+            });
+        }
         evicted
     }
 
     /// Merge a broadcast record (Sec. IV-A step 4): skip when already
-    /// cached (O(1) identity probe); otherwise insert with `N_t` reset to
-    /// zero. Returns true if the record was actually inserted.
-    pub fn merge_broadcast(&mut self, bucket: u32, mut record: Record, now: f64) -> bool {
+    /// cached (O(1) identity probe); otherwise insert a copy with `N_t`
+    /// reset to zero. Returns true if the record was actually inserted.
+    ///
+    /// Takes the record by reference so the engines can pass the
+    /// `Arc`-shared broadcast payload straight through: a duplicate
+    /// delivery costs only the identity probe — the pd + gray planes are
+    /// cloned *only* past the dedup, on actual insert. (Before this, every
+    /// duplicate delivery in a flood paid a full payload allocation just
+    /// to discard it.)
+    pub fn merge_broadcast(&mut self, bucket: u32, record: &Record, now: f64) -> bool {
         if self.contains(record.id) {
             return false;
         }
-        record.reuse_count = 0;
-        record.last_used = now;
-        self.insert(bucket, record);
+        let mut owned = record.clone();
+        owned.reuse_count = 0;
+        owned.last_used = now;
+        self.insert(bucket, owned);
         true
     }
 
@@ -323,6 +424,86 @@ impl Scrt {
             .map(|&(_, _, id)| {
                 let (bucket, slot) = self.index[&id];
                 (bucket, self.rebuild_record(bucket, slot))
+            })
+            .collect()
+    }
+
+    /// [`Scrt::top_tau`] as it would have answered at an earlier virtual
+    /// time `t`, reconstructed from the op journal.
+    ///
+    /// Ops stamped after `t` are undone against a scratch key map — never
+    /// against the live table: reuse bumps restore their previous
+    /// `(N_t, recency)`, post-`t` inserts disappear, and their eviction
+    /// victims (retained in full by the journal) come back. Payloads of
+    /// still-live records are reassembled straight from the SoA storage.
+    /// With no journaled op past `t` this degrades to exactly
+    /// [`Scrt::top_tau`] (as it does when journaling is disabled).
+    ///
+    /// This is what lets the sharded engine's conservative windows serve
+    /// an Alg. 2 source read at barrier time even when the source shard
+    /// has already processed events past the requesting instant.
+    pub fn top_tau_at(&self, tau: usize, t: f64) -> Vec<(u32, Record)> {
+        let Some(journal) = &self.journal else {
+            return self.top_tau(tau);
+        };
+        // (bucket, reuse_count, last_used) by id, as of "now"...
+        let mut keys: HashMap<RecordId, (u32, u32, f64)> = HashMap::with_capacity(self.len());
+        for (bucket, v) in self.iter() {
+            keys.insert(v.id, (bucket, v.reuse_count, v.last_used));
+        }
+        // ... then undo everything newer than `t`, newest first.
+        let mut stash: HashMap<RecordId, Record> = HashMap::new();
+        for op in journal.iter().rev() {
+            match op {
+                ScrtOp::Reused {
+                    id,
+                    prev_count,
+                    prev_last_used,
+                    time,
+                } if *time > t => {
+                    if let Some(entry) = keys.get_mut(id) {
+                        entry.1 = *prev_count;
+                        entry.2 = *prev_last_used;
+                    }
+                }
+                ScrtOp::Inserted { id, time, evicted } if *time > t => {
+                    keys.remove(id);
+                    // A post-`t` insert that was itself evicted later got
+                    // stashed by the (already undone) newer eviction —
+                    // drop it: the record did not exist at `t`.
+                    stash.remove(id);
+                    if let Some((victim_bucket, victim)) = evicted {
+                        keys.insert(
+                            victim.id,
+                            (*victim_bucket, victim.reuse_count, victim.last_used),
+                        );
+                        stash.insert(victim.id, victim.clone());
+                    }
+                }
+                _ => {}
+            }
+        }
+        let mut entries: Vec<(RecordId, u32, u32, f64)> = keys
+            .into_iter()
+            .map(|(id, (bucket, count, last_used))| (id, bucket, count, last_used))
+            .collect();
+        // Same descending order as the live value index.
+        entries
+            .sort_by(|a, b| (b.2, time_key(b.3), b.0).cmp(&(a.2, time_key(a.3), a.0)));
+        entries.truncate(tau);
+        entries
+            .into_iter()
+            .map(|(id, bucket, count, last_used)| {
+                let mut rec = match self.location(id) {
+                    Some((b, slot)) => self.rebuild_record(b, slot),
+                    None => stash
+                        .get(&id)
+                        .cloned()
+                        .expect("evicted record retained in the journal"),
+                };
+                rec.reuse_count = count;
+                rec.last_used = last_used;
+                (bucket, rec)
             })
             .collect()
     }
@@ -355,22 +536,34 @@ impl Scrt {
         }
     }
 
-    /// Pop the minimum of the value index and remove that record.
-    fn evict_lowest_value(&mut self) -> Option<RecordId> {
+    /// Pop the minimum of the value index and remove that record. With
+    /// `take_record` the victim is reassembled in exchange form before
+    /// removal (journaling needs its full payload); otherwise only the id
+    /// survives and nothing is copied.
+    fn evict_lowest_value(
+        &mut self,
+        take_record: bool,
+    ) -> Option<(RecordId, Option<(u32, Record)>)> {
         let (_, _, id) = self.order.pop_first()?;
         let (bucket, slot) = self
             .index
             .remove(&id)
             .expect("value index entry is always indexed");
+        let taken = if take_record {
+            Some((bucket, self.rebuild_record(bucket, slot)))
+        } else {
+            None
+        };
         self.remove_slot(bucket, slot);
         self.evictions += 1;
-        Some(id)
+        Some((id, taken))
     }
 
     /// `swap_remove` a slot and mirror the swap in the SoA feature array,
     /// fixing up the identity index of the record that moved.
     fn remove_slot(&mut self, bucket: u32, slot: usize) {
-        let dim = self.dim.expect("removing a slot implies a prior insert");
+        debug_assert!(self.dim != 0, "removing a slot implies a prior insert");
+        let dim = self.dim;
         let b = &mut self.buckets[bucket as usize];
         let last = b.slots.len() - 1;
         b.slots.swap_remove(slot);
@@ -518,10 +711,24 @@ mod tests {
     fn merge_broadcast_skips_duplicates_and_resets_count() {
         let mut s = Scrt::new(2, 10);
         s.insert(0, rec(7, 0.5, 3, 0.0));
-        assert!(!s.merge_broadcast(0, rec(7, 0.5, 9, 1.0), 1.0));
-        assert!(s.merge_broadcast(1, rec(8, 0.6, 9, 1.0), 1.0));
+        assert!(!s.merge_broadcast(0, &rec(7, 0.5, 9, 1.0), 1.0));
+        assert!(s.merge_broadcast(1, &rec(8, 0.6, 9, 1.0), 1.0));
         let (_, r) = s.iter().find(|(_, r)| r.id == 8).unwrap();
         assert_eq!(r.reuse_count, 0, "broadcast count must reset (step 4)");
+    }
+
+    #[test]
+    fn merge_broadcast_dedup_leaves_table_untouched() {
+        let mut s = Scrt::new(2, 10);
+        s.insert(0, rec(7, 0.5, 3, 0.0));
+        // A dedup hit only borrows the broadcast payload: the cached copy
+        // keeps its count and recency, and nothing is inserted.
+        let dup = rec(7, 0.5, 9, 5.0);
+        assert!(!s.merge_broadcast(0, &dup, 5.0));
+        assert_eq!(s.len(), 1);
+        let (_, r) = s.iter().find(|(_, r)| r.id == 7).unwrap();
+        assert_eq!(r.reuse_count, 3);
+        assert_eq!(r.last_used, 0.0);
     }
 
     #[test]
@@ -588,5 +795,91 @@ mod tests {
         let mut bad = rec(1, 0.2, 0, 1.0);
         bad.pre.pd = vec![0.2; 9];
         s.insert(1, bad);
+    }
+
+    /// Ids of `top_tau_at` output, in order.
+    fn top_ids(s: &Scrt, tau: usize, t: f64) -> Vec<RecordId> {
+        s.top_tau_at(tau, t).iter().map(|(_, r)| r.id).collect()
+    }
+
+    #[test]
+    fn top_tau_at_without_newer_ops_equals_top_tau() {
+        let mut s = Scrt::new(4, 10);
+        s.enable_journal();
+        s.insert(0, rec(0, 0.0, 2, 0.0));
+        s.insert(1, rec(1, 0.1, 7, 1.0));
+        s.insert(2, rec(2, 0.2, 4, 2.0));
+        let live: Vec<RecordId> = s.top_tau(3).iter().map(|(_, r)| r.id).collect();
+        assert_eq!(top_ids(&s, 3, 10.0), live, "no op past t=10");
+        // ... and so does a disabled-journal table at any t.
+        let mut plain = Scrt::new(4, 10);
+        plain.insert(0, rec(0, 0.0, 2, 0.0));
+        plain.insert(1, rec(1, 0.1, 7, 1.0));
+        assert_eq!(top_ids(&plain, 2, -1.0), vec![1, 0]);
+    }
+
+    #[test]
+    fn top_tau_at_undoes_reuse_bumps() {
+        let mut s = Scrt::new(2, 10);
+        s.enable_journal();
+        s.insert(0, rec(0, 0.1, 1, 0.0));
+        s.insert(0, rec(1, 0.2, 2, 0.0));
+        // at t=5 record 1 leads; the reuse bumps at t=6/7 flip the order
+        s.mark_reused(0, 0, 6.0);
+        s.mark_reused(0, 0, 7.0);
+        assert_eq!(top_ids(&s, 2, 10.0), vec![0, 1], "after the bumps");
+        assert_eq!(top_ids(&s, 2, 5.0), vec![1, 0], "as of t=5");
+        let at5 = s.top_tau_at(2, 5.0);
+        assert_eq!(at5[0].1.reuse_count, 2);
+        assert_eq!(at5[1].1.reuse_count, 1, "pre-bump count restored");
+        assert_eq!(at5[1].1.last_used, 0.0, "pre-bump recency restored");
+    }
+
+    #[test]
+    fn top_tau_at_resurrects_evicted_victims() {
+        let mut s = Scrt::new(1, 2);
+        s.enable_journal();
+        s.insert(0, rec(0, 0.25, 5, 0.0));
+        s.insert(0, rec(1, 0.1, 1, 1.0));
+        // t=2: table holds {0, 1}. The insert at t=3 evicts record 1.
+        let evicted = s.insert(0, rec(2, 0.2, 3, 3.0));
+        assert_eq!(evicted, Some(1));
+        assert_eq!(top_ids(&s, 2, 10.0), vec![0, 2]);
+        let at2 = s.top_tau_at(2, 2.0);
+        assert_eq!(
+            at2.iter().map(|(_, r)| r.id).collect::<Vec<_>>(),
+            vec![0, 1],
+            "the victim must come back as of t=2"
+        );
+        // the resurrected victim carries its full payload
+        assert_eq!(at2[1].1.pre.pd, vec![0.1f32; 12]);
+        assert_eq!(at2[1].1.pre.gray, vec![0.1f32; 4]);
+        assert_eq!(at2[1].0, 0, "bucket travels with the victim");
+    }
+
+    #[test]
+    fn top_tau_at_drops_post_t_inserts_even_when_later_evicted() {
+        let mut s = Scrt::new(1, 2);
+        s.enable_journal();
+        s.insert(0, rec(0, 0.3, 9, 0.0));
+        // both of these happen after t=1: record 1 arrives, then record 2
+        // evicts it — neither may surface in the t=1 reconstruction.
+        s.insert(0, rec(1, 0.1, 0, 2.0));
+        let evicted = s.insert(0, rec(2, 0.2, 4, 3.0));
+        assert_eq!(evicted, Some(1));
+        assert_eq!(top_ids(&s, 3, 1.0), vec![0]);
+    }
+
+    #[test]
+    fn clear_journal_forgets_older_ops() {
+        let mut s = Scrt::new(1, 4);
+        s.enable_journal();
+        s.insert(0, rec(0, 0.1, 1, 0.0));
+        s.mark_reused(0, 0, 5.0);
+        s.clear_journal();
+        // Reads now only reach back to the clear: the t=1 view no longer
+        // undoes the (forgotten) bump.
+        let at1 = s.top_tau_at(1, 1.0);
+        assert_eq!(at1[0].1.reuse_count, 2);
     }
 }

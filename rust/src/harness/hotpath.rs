@@ -263,6 +263,20 @@ pub fn run_suite(opts: &HotpathOpts) -> Result<Bencher> {
             .unwrap();
         black_box(r.total_tasks);
     });
+    // Sharded conservative engine over the same fixture (4 worker
+    // shards, bit-identical report): at this small scale it mostly
+    // tracks window/barrier overhead — the CI-visible canary for the
+    // sharded path; the real speedup lives in the `--scale` cases.
+    b.bench("event_loop_5x5_125_t4", || {
+        let r = Simulation::new(&mid, &backend5, Scenario::Sccr)
+            .aggregate_only()
+            .threads(4)
+            .with_workload(&wl5)
+            .with_prepared(&prep5)
+            .run()
+            .unwrap();
+        black_box(r.total_tasks);
+    });
 
     // ---- extended grids (11×11, 15×15), one timed pass each -------------
     if opts.scale {
@@ -277,7 +291,10 @@ pub fn run_suite(opts: &HotpathOpts) -> Result<Bencher> {
             });
         }
         // Engine event loop at the extended grids: prepare once outside
-        // the timed region, measure one aggregate-only SCCR pass.
+        // the timed region, measure one aggregate-only SCCR pass — then
+        // the same pass on the sharded engine with 4 worker shards. The
+        // headline number of the sharded rework is
+        // `event_loop_15x15_625_t4` vs `event_loop_15x15_625`.
         for &n in &EXTENDED_SCALES {
             let mut big = SimConfig::paper_default(n);
             big.workload.total_tasks = 625;
@@ -293,7 +310,34 @@ pub fn run_suite(opts: &HotpathOpts) -> Result<Bencher> {
                     .unwrap();
                 black_box(r.total_tasks);
             });
+            b.bench_once(&format!("event_loop_{n}x{n}_625_t4"), || {
+                let r = Simulation::new(&big, &backend_n, Scenario::Sccr)
+                    .aggregate_only()
+                    .threads(4)
+                    .with_workload(&wl_n)
+                    .with_prepared(&prep_n)
+                    .run()
+                    .unwrap();
+                black_box(r.total_tasks);
+            });
         }
+        // Constellation-scale sharded case: the 21×21 grid (441
+        // satellites) with the CI smoke workload, 4 worker shards.
+        let mut huge = SimConfig::paper_default(21);
+        huge.workload.total_tasks = 882;
+        let backend21 = NativeBackend::new(&huge);
+        let wl21 = build_workload(&huge);
+        let prep21 = prepare(&backend21, &wl21)?;
+        b.bench_once("event_loop_21x21_882_t4", || {
+            let r = Simulation::new(&huge, &backend21, Scenario::Sccr)
+                .aggregate_only()
+                .threads(4)
+                .with_workload(&wl21)
+                .with_prepared(&prep21)
+                .run()
+                .unwrap();
+            black_box(r.total_tasks);
+        });
     }
 
     Ok(b)
@@ -440,6 +484,7 @@ mod tests {
             "simulate_sccr_3x3_45",
             "event_loop_3x3_45",
             "event_loop_5x5_125",
+            "event_loop_5x5_125_t4",
         ] {
             assert!(names.contains(&expect), "missing bench '{expect}'");
         }

@@ -60,6 +60,9 @@ RUN SCALE OPTIONS:
                          bounded residency window (constellation-scale runs)
     --stream-window <T>  streaming window budget in tasks (default 256)
     --aggregate-only     keep only aggregate metrics (no per-task logs)
+    --threads <K>        run the sharded conservative event engine with K
+                         worker shards (bit-identical report; default:
+                         single-threaded engine)
 
 COMMON OPTIONS:
     --config <FILE>      TOML config (defaults: paper Table I values)
@@ -238,10 +241,40 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     if flags.has("aggregate-only") {
         sim = sim.aggregate_only();
     }
+    let threads = flags.parse_usize("threads")?;
+    if let Some(threads) = threads {
+        if threads == 0 {
+            return Err(Error::config("--threads wants at least 1".to_string()));
+        }
+        sim = sim.threads(threads);
+    }
     let report = if flags.has("streaming") {
         let stream = StreamConfig::with_window_tasks(
             flags.parse_usize("stream-window")?.unwrap_or(256),
         );
+        // A streaming window narrower than the shard count thrashes: the
+        // shards' interleaved fetches evict each other's chunks and every
+        // recompute runs under the shared source lock, stalling all
+        // shards. Warn rather than silently widening the user's
+        // residency budget. The suggested budget accounts for
+        // `with_window_tasks`'s shape (chunks of up to 256 tasks): below
+        // the 256-task chunk cap the window always holds ~4 chunks, so
+        // more than 4 shards need `256 × threads` tasks of window.
+        if let Some(threads) = threads {
+            if threads > 1 && stream.window_chunks < threads {
+                let needed = if threads <= 4 {
+                    4 * threads
+                } else {
+                    256 * threads
+                };
+                eprintln!(
+                    "warning: streaming window holds {} chunks for {threads} shards; \
+                     concurrent shards may thrash the window and recompute chunks — \
+                     consider --stream-window {needed} or more, or fewer shards",
+                    stream.window_chunks,
+                );
+            }
+        }
         let wl = build_workload(&cfg);
         let mut source = StreamingSource::new(backend.as_ref(), &wl, stream)?;
         let report = sim.with_workload(&wl).run_with_source(&mut source)?;

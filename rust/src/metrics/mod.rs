@@ -310,6 +310,58 @@ impl MetricsAccum {
     }
 }
 
+/// Global completion order for merging per-shard log streams: completion
+/// time (IEEE-754 total order), then service start, then task id. Two
+/// *distinct* tasks share an exact f64 completion time only on a
+/// measure-zero coincidence of independent arrival/service sums, so the
+/// trailing keys are deterministic tie-breakers that in practice never
+/// fire — the golden-pin and property suites hold the merged order
+/// bit-identical to the single-threaded engine's.
+fn completion_order(a: &TaskLog, b: &TaskLog) -> std::cmp::Ordering {
+    a.completion
+        .total_cmp(&b.completion)
+        .then(a.start.total_cmp(&b.start))
+        .then(a.task_id.cmp(&b.task_id))
+}
+
+/// Fold per-shard completion-log streams (each already in its shard's
+/// completion order) into one accumulator in **global** completion order.
+/// The sharded engine finishes through this so its floating-point
+/// aggregates sum in exactly the order the single-threaded engine's
+/// incremental accumulation would. Ties across shards break via the
+/// completion-order key above and then lowest shard index (a stable
+/// k-way merge); within one shard the stream order is preserved.
+pub fn fold_sharded(keep_logs: bool, shard_logs: Vec<Vec<TaskLog>>) -> MetricsAccum {
+    let mut acc = MetricsAccum::new(keep_logs);
+    let mut fronts = vec![0usize; shard_logs.len()];
+    let total: usize = shard_logs.iter().map(Vec::len).sum();
+    for _ in 0..total {
+        let mut best: Option<usize> = None;
+        for (i, logs) in shard_logs.iter().enumerate() {
+            let Some(candidate) = logs.get(fronts[i]) else {
+                continue;
+            };
+            best = match best {
+                None => Some(i),
+                Some(b) => {
+                    let current = &shard_logs[b][fronts[b]];
+                    if completion_order(candidate, current)
+                        == std::cmp::Ordering::Less
+                    {
+                        Some(i)
+                    } else {
+                        Some(b)
+                    }
+                }
+            };
+        }
+        let b = best.expect("merge pops exactly `total` logs");
+        acc.record(shard_logs[b][fronts[b]].clone());
+        fronts[b] += 1;
+    }
+    acc
+}
+
 /// Build the aggregate numbers from raw logs; shared by the simulator's
 /// reference path. One [`MetricsAccum`] fold in log order — by definition
 /// identical to the engine's incremental accumulation.
@@ -554,6 +606,44 @@ mod tests {
         assert_eq!(slim.reused_tasks, batch.reused_tasks);
         assert_eq!(batch.tasks.len(), 4, "batch fold keeps the logs");
         assert!(slim.tasks.is_empty(), "aggregate-only drops the logs");
+    }
+
+    #[test]
+    fn fold_sharded_merges_in_global_completion_order() {
+        // Shard streams are each completion-ordered; the merge must
+        // interleave them globally and reproduce the single-stream fold.
+        let a = vec![mk_task(0, false, true, 1.0), mk_task(2, true, true, 4.0)];
+        let b = vec![mk_task(1, true, false, 2.0), mk_task(3, false, true, 9.0)];
+        let merged = fold_sharded(true, vec![a.clone(), b.clone()]);
+        let order: Vec<usize> = merged.logs.iter().map(|t| t.task_id).collect();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+
+        let mut single = MetricsAccum::new(true);
+        for t in [&a[0], &b[0], &a[1], &b[1]] {
+            single.record(t.clone());
+        }
+        assert_eq!(merged.compute_seconds, single.compute_seconds);
+        assert_eq!(merged.makespan, single.makespan);
+        assert_eq!(merged.total, single.total);
+        assert_eq!(merged.reused, single.reused);
+        assert_eq!(merged.reused_correct, single.reused_correct);
+        assert_eq!(merged.latencies, single.latencies);
+
+        // aggregate-only drops the logs but keeps the fold.
+        let slim = fold_sharded(false, vec![a, b]);
+        assert!(slim.logs.is_empty());
+        assert_eq!(slim.total, 4);
+    }
+
+    #[test]
+    fn fold_sharded_ties_break_deterministically() {
+        // Equal completion and start: the task id decides; a full tie is
+        // impossible for distinct tasks (ids are unique).
+        let a = vec![mk_task(5, false, true, 3.0)];
+        let b = vec![mk_task(2, false, true, 3.0)];
+        let merged = fold_sharded(true, vec![a, b]);
+        let order: Vec<usize> = merged.logs.iter().map(|t| t.task_id).collect();
+        assert_eq!(order, vec![2, 5]);
     }
 
     #[test]

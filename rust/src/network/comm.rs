@@ -115,6 +115,21 @@ impl CommModel {
         bytes * 8.0 / self.intra_rate_bps
     }
 
+    /// Conservative broadcast lookahead: the time one shared record needs
+    /// to cross the *fastest* ISL hop. Every [`BroadcastPlan`] delivery
+    /// lands at `(k + depth) · bottleneck` past its collaboration instant
+    /// with `depth ≥ 1` and `bottleneck` the slowest of the plan's edge
+    /// times — both edge kinds are bounded below by this value — so no
+    /// broadcast scheduled at virtual time `t` can reach any satellite
+    /// before `t + min_hop_seconds()`. That bound is exactly the window a
+    /// sharded conservative event engine may process without cross-shard
+    /// exchange. Degenerate configs (zero-byte records, non-finite link
+    /// rates) make this zero/NaN; the sharded engine rejects those.
+    pub fn min_hop_seconds(&self) -> f64 {
+        let bits = self.record_bytes() * 8.0;
+        (bits / self.intra_rate_bps).min(bits / self.inter_rate_bps)
+    }
+
     /// Seconds to deliver `records` records from `src` to `dst` hop-by-hop
     /// along a grid shortest path (links traversed sequentially, eq. 5).
     pub fn delivery_seconds(
@@ -326,6 +341,38 @@ mod tests {
         let (bl, tl) = m.broadcast_cost(&topo, src, &large, 5);
         assert!(bl > bs);
         assert!(tl >= ts);
+    }
+
+    #[test]
+    fn min_hop_lookahead_bounds_every_broadcast_arrival() {
+        let (topo, m) = model();
+        let lookahead = m.min_hop_seconds();
+        assert!(lookahead.is_finite() && lookahead > 0.0, "{lookahead}");
+        // No arrival of any plan may land before `t + lookahead`.
+        for src in [topo.sat_at(0, 0), topo.sat_at(2, 2)] {
+            for r in [1usize, 2] {
+                let area = topo.area(src, r);
+                let plan = m.plan_broadcast(&topo, src, &area, 5);
+                for &(_, depth) in &plan.arrivals {
+                    for k in 0..5 {
+                        assert!(
+                            plan.arrival_offset(k, depth) >= lookahead,
+                            "offset {} < lookahead {lookahead}",
+                            plan.arrival_offset(k, depth)
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_byte_records_collapse_the_lookahead() {
+        let mut cfg = SimConfig::paper_default(5);
+        cfg.comm.record_input_bytes = 0.0;
+        cfg.comm.record_output_bytes = 0.0;
+        let m = CommModel::new(&cfg.network, &cfg.comm);
+        assert_eq!(m.min_hop_seconds(), 0.0);
     }
 
     #[test]

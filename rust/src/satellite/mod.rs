@@ -144,23 +144,39 @@ impl SatelliteState {
         self.busy_time
     }
 
-    /// Reuse rate `rr_S`: reused / processed (0 before the first task).
-    pub fn reuse_rate(&self) -> f64 {
-        if self.tasks_processed == 0 {
+    /// `rr_S` as a pure function of the raw counters (0 before the first
+    /// task). The canonical formula behind [`SatelliteState::reuse_rate`]
+    /// — the sharded engine's checkpoint reconstruction calls this with
+    /// journaled counters, so the two paths cannot drift.
+    pub fn reuse_rate_of(tasks_reused: usize, tasks_processed: usize) -> f64 {
+        if tasks_processed == 0 {
             0.0
         } else {
-            self.tasks_reused as f64 / self.tasks_processed as f64
+            tasks_reused as f64 / tasks_processed as f64
         }
+    }
+
+    /// `C_S` as a pure function of accumulated busy seconds and the
+    /// clock, clamped to [0, 1]. The canonical formula behind
+    /// [`SatelliteState::cpu_occupancy`] — shared with the sharded
+    /// engine's checkpoint reconstruction.
+    pub fn occupancy_of(busy_s: f64, now: f64) -> f64 {
+        if now <= 0.0 {
+            0.0
+        } else {
+            (busy_s / now).clamp(0.0, 1.0)
+        }
+    }
+
+    /// Reuse rate `rr_S`: reused / processed (0 before the first task).
+    pub fn reuse_rate(&self) -> f64 {
+        Self::reuse_rate_of(self.tasks_reused, self.tasks_processed)
     }
 
     /// CPU occupancy `C_S`: busy time over elapsed time (task receipt to
     /// now), clamped to [0, 1].
     pub fn cpu_occupancy(&self, now: f64) -> f64 {
-        if now <= 0.0 {
-            0.0
-        } else {
-            (self.busy_time / now).clamp(0.0, 1.0)
-        }
+        Self::occupancy_of(self.busy_time, now)
     }
 
     /// Accuracy over the reused tasks (1.0 when nothing was reused — the

@@ -25,9 +25,10 @@
 
 use std::sync::Arc;
 
-use crate::compute::ComputeBackend;
+use crate::compute::{ComputeBackend, Preprocessed};
 use crate::config::SimConfig;
 use crate::coordinator::policy::CollabPolicy;
+use crate::coordinator::scrt::{Record, Scrt};
 use crate::coordinator::slcr::process_task;
 use crate::coordinator::srs::srs;
 use crate::coordinator::Scenario;
@@ -41,14 +42,111 @@ use crate::simulator::source::PreparedSource;
 use crate::workload::{SatId, Workload};
 
 /// Collaboration-side run counters (folded into the final report).
+/// Shared with the sharded engine, whose coordinator owns one.
 #[derive(Clone, Copy, Debug, Default)]
-struct CollabCounters {
-    transfer_bytes: f64,
-    comm_seconds: f64,
-    collab_events: usize,
-    expanded_events: usize,
-    aborted_collabs: usize,
-    broadcast_records: usize,
+pub(crate) struct CollabCounters {
+    pub(crate) transfer_bytes: f64,
+    pub(crate) comm_seconds: f64,
+    pub(crate) collab_events: usize,
+    pub(crate) expanded_events: usize,
+    pub(crate) aborted_collabs: usize,
+    pub(crate) broadcast_records: usize,
+}
+
+/// The priced outcome of serving one task — what an [`InFlight`] records.
+pub(crate) struct ServiceSpec {
+    pub(crate) service_s: f64,
+    pub(crate) reused: bool,
+    pub(crate) correct: bool,
+    pub(crate) ssim: Option<f32>,
+    pub(crate) reused_from_scene: Option<u32>,
+    pub(crate) reused_from_sat: Option<usize>,
+}
+
+/// The no-reuse (`w/o CR`) service: straight to the pre-trained model,
+/// no lookup at all (eq. 6 without the `W` term).
+pub(crate) fn scratch_service(scratch_s: f64) -> ServiceSpec {
+    ServiceSpec {
+        service_s: scratch_s,
+        reused: false,
+        correct: true,
+        ssim: None,
+        reused_from_scene: None,
+        reused_from_sat: None,
+    }
+}
+
+/// Alg. 1 against one satellite's SCRT plus the eq. 6/7 pricing — the
+/// per-task core shared verbatim by the single-threaded engine and the
+/// sharded engine's shard workers, so the two cannot drift.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn reuse_service(
+    scrt: &mut Scrt,
+    backend: &dyn ComputeBackend,
+    wl: &Workload,
+    sat: SatId,
+    idx: usize,
+    pre: &Preprocessed,
+    oracle: u32,
+    th_sim: f64,
+    scratch_s: f64,
+    lookup_s: f64,
+    now: f64,
+) -> Result<ServiceSpec> {
+    let task = &wl.tasks[idx];
+    let outcome =
+        process_task(scrt, backend, sat, task.id, task.task_type, pre, th_sim, now)?;
+    let correct = outcome.result == oracle;
+    let service_s = if outcome.reused {
+        lookup_s // eq. 7: χ_reuse = x_t · W
+    } else {
+        lookup_s + scratch_s // eq. 6: χ_compute = W + F_t / C^comp
+    };
+    // record ids are the creating task's global id, so the serving
+    // record's scene is recoverable from the workload.
+    let reused_from_scene = outcome.reused_from.map(|rec_id| wl.tasks[rec_id].scene);
+    let reused_from_sat = outcome.reused_from.map(|rec_id| wl.tasks[rec_id].satellite);
+    Ok(ServiceSpec {
+        service_s,
+        reused: outcome.reused,
+        correct,
+        ssim: outcome.ssim,
+        reused_from_scene,
+        reused_from_sat,
+    })
+}
+
+/// Completion bookkeeping shared by both engines: take the in-flight
+/// task, fold the reuse counters, build the [`TaskLog`].
+pub(crate) fn take_completed(
+    node: &mut SatNode,
+    wl: &Workload,
+    now: f64,
+) -> Result<TaskLog> {
+    let fl: InFlight = node
+        .in_flight
+        .take()
+        .ok_or_else(|| Error::simulation("completion w/o task"))?;
+    let task = &wl.tasks[fl.task_idx];
+    if fl.reused {
+        node.state.tasks_reused += 1;
+        if fl.correct {
+            node.state.reused_correct += 1;
+        }
+    }
+    Ok(TaskLog {
+        task_id: task.id,
+        sat: node.state.id,
+        arrival: task.arrival,
+        start: fl.start,
+        completion: now,
+        reused: fl.reused,
+        correct: fl.correct,
+        ssim: fl.ssim,
+        scene: task.scene,
+        reused_from_scene: fl.reused_from_scene,
+        reused_from_sat: fl.reused_from_sat,
+    })
 }
 
 /// One configured run of the event loop. Construct with [`Engine::new`],
@@ -74,6 +172,12 @@ pub struct Engine<'a> {
     network_quiet_until: f64,
     collab: CollabCounters,
     metrics: MetricsAccum,
+    /// Reusable all-satellite SRS buffer: one allocation for the whole
+    /// run instead of one per collaboration request.
+    srs_scratch: Vec<f64>,
+    /// Reusable `(bucket, Arc<Record>)` share buffer for the broadcast
+    /// fan-out (the queued events hold their own `Arc` clones).
+    share_scratch: Vec<(u32, Arc<Record>)>,
 }
 
 impl<'a> Engine<'a> {
@@ -110,6 +214,8 @@ impl<'a> Engine<'a> {
             network_quiet_until: f64::NEG_INFINITY,
             collab: CollabCounters::default(),
             metrics: MetricsAccum::new(keep_logs),
+            srs_scratch: Vec::new(),
+            share_scratch: Vec::new(),
         }
     }
 
@@ -220,31 +326,7 @@ impl<'a> Engine<'a> {
         source: &mut dyn PreparedSource,
         obs: &mut dyn Observer,
     ) -> Result<()> {
-        let fl: InFlight = self.nodes[sat]
-            .in_flight
-            .take()
-            .ok_or_else(|| Error::simulation("completion w/o task"))?;
-        let task = &self.wl.tasks[fl.task_idx];
-        if fl.reused {
-            let state = &mut self.nodes[sat].state;
-            state.tasks_reused += 1;
-            if fl.correct {
-                state.reused_correct += 1;
-            }
-        }
-        let log = TaskLog {
-            task_id: task.id,
-            sat,
-            arrival: task.arrival,
-            start: fl.start,
-            completion: now,
-            reused: fl.reused,
-            correct: fl.correct,
-            ssim: fl.ssim,
-            scene: task.scene,
-            reused_from_scene: fl.reused_from_scene,
-            reused_from_sat: fl.reused_from_sat,
-        };
+        let log = take_completed(&mut self.nodes[sat], self.wl, now)?;
         obs.on_task_complete(&log);
         self.metrics.record(log);
 
@@ -282,12 +364,14 @@ impl<'a> Engine<'a> {
         }
         self.nodes[sat].state.last_collab_request = now;
         self.nodes[sat].state.collab_requests += 1;
-        let all_srs: Vec<f64> = (0..self.nodes.len())
-            .map(|s| self.srs_of(s, now))
-            .collect();
+        // All-satellite SRS snapshot into the reusable scratch buffer.
+        let mut all_srs = std::mem::take(&mut self.srs_scratch);
+        all_srs.clear();
+        all_srs.extend((0..self.nodes.len()).map(|s| self.srs_of(s, now)));
         obs.on_collab_request(now, sat, my_srs, &all_srs);
-        let Some(decision) = policy.select_source(&self.topo, sat, &all_srs, th_co)
-        else {
+        let decision = policy.select_source(&self.topo, sat, &all_srs, th_co);
+        self.srs_scratch = all_srs;
+        let Some(decision) = decision else {
             self.collab.aborted_collabs += 1;
             return;
         };
@@ -314,10 +398,11 @@ impl<'a> Engine<'a> {
         self.collab.transfer_bytes += plan.bytes;
         self.collab.comm_seconds += plan.airtime_s;
         self.network_quiet_until = now + plan.completion_offset(records.len());
-        let shared: Vec<(u32, Arc<_>)> = records
-            .into_iter()
-            .map(|(b, r)| (b, Arc::new(r)))
-            .collect();
+        // Arc each record once into the reusable share buffer; the
+        // fan-out below clones only the Arc, never the payload.
+        let mut shared = std::mem::take(&mut self.share_scratch);
+        shared.clear();
+        shared.extend(records.into_iter().map(|(b, r)| (b, Arc::new(r))));
         for &(dst, depth) in &plan.arrivals {
             for (k, (bucket, rec)) in shared.iter().enumerate() {
                 self.q.push(
@@ -330,19 +415,24 @@ impl<'a> Engine<'a> {
                 );
             }
         }
+        shared.clear(); // the queued events hold their own Arcs
+        self.share_scratch = shared;
     }
 
     /// One broadcast record lands: merge it and apply receiver damping.
+    /// The `Arc`-shared payload is threaded through by reference — a
+    /// dedup hit costs only the O(1) identity probe, the pd + gray planes
+    /// are cloned inside `merge_broadcast` only on actual insert.
     fn on_broadcast_deliver(
         &mut self,
         dst: SatId,
         bucket: u32,
-        record: &crate::coordinator::scrt::Record,
+        record: &Record,
         now: f64,
         obs: &mut dyn Observer,
     ) {
         let node = &mut self.nodes[dst];
-        node.scrt.merge_broadcast(bucket, record.clone(), now);
+        node.scrt.merge_broadcast(bucket, record, now);
         // A satellite that just received shared records has had its need
         // addressed: suppress its own collaboration request until its SRS
         // recovers above th_co again.
@@ -363,55 +453,34 @@ impl<'a> Engine<'a> {
                 "start_service on satellite {sat} with an empty queue"
             ))
         })?;
-        let wl = self.wl;
-        let task = &wl.tasks[idx];
+        let spec = if self.scenario.uses_reuse() {
+            let (pre, oracle) = source.fetch(idx)?;
+            reuse_service(
+                &mut self.nodes[sat].scrt,
+                self.backend,
+                self.wl,
+                sat,
+                idx,
+                pre,
+                oracle,
+                self.cfg.reuse.th_sim,
+                self.scratch_s,
+                self.lookup_s,
+                now,
+            )?
+        } else {
+            scratch_service(self.scratch_s)
+        };
 
-        let (service_s, reused, correct, ssim, reused_from_scene, reused_from_sat) =
-            if self.scenario.uses_reuse() {
-                let (pre, oracle) = source.fetch(idx)?;
-                let outcome = process_task(
-                    &mut self.nodes[sat].scrt,
-                    self.backend,
-                    sat,
-                    task.id,
-                    task.task_type,
-                    pre,
-                    self.cfg.reuse.th_sim,
-                    now,
-                )?;
-                let correct = outcome.result == oracle;
-                let service = if outcome.reused {
-                    self.lookup_s // eq. 7: χ_reuse = x_t · W
-                } else {
-                    self.lookup_s + self.scratch_s // eq. 6: χ_compute = W + F_t / C^comp
-                };
-                // record ids are the creating task's global id, so the
-                // serving record's scene is recoverable from the workload.
-                let from_scene = outcome.reused_from.map(|rec_id| wl.tasks[rec_id].scene);
-                let from_sat =
-                    outcome.reused_from.map(|rec_id| wl.tasks[rec_id].satellite);
-                (
-                    service,
-                    outcome.reused,
-                    correct,
-                    outcome.ssim,
-                    from_scene,
-                    from_sat,
-                )
-            } else {
-                // w/o CR: straight to the pre-trained model, no lookup at all.
-                (self.scratch_s, false, true, None, None, None)
-            };
-
-        let (start, completion) = self.nodes[sat].state.serve(now, service_s);
+        let (start, completion) = self.nodes[sat].state.serve(now, spec.service_s);
         self.nodes[sat].in_flight = Some(InFlight {
             task_idx: idx,
             start,
-            reused,
-            correct,
-            ssim,
-            reused_from_scene,
-            reused_from_sat,
+            reused: spec.reused,
+            correct: spec.correct,
+            ssim: spec.ssim,
+            reused_from_scene: spec.reused_from_scene,
+            reused_from_sat: spec.reused_from_sat,
         });
         self.q.push(completion, EventKind::Completion(sat));
         Ok(())

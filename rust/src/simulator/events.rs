@@ -86,6 +86,13 @@ impl EventQueue {
         self.heap.pop()
     }
 
+    /// The earliest queued event without popping it — the sharded engine
+    /// peeks to decide whether the head still falls inside the current
+    /// conservative window.
+    pub fn peek(&self) -> Option<&Event> {
+        self.heap.peek()
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -105,8 +112,10 @@ mod tests {
         q.push(3.0, EventKind::Completion(0));
         q.push(1.0, EventKind::Completion(1));
         q.push(2.0, EventKind::Completion(2));
+        assert_eq!(q.peek().map(|e| e.time), Some(1.0));
         let order: Vec<f64> = std::iter::from_fn(|| q.pop().map(|e| e.time)).collect();
         assert_eq!(order, vec![1.0, 2.0, 3.0]);
+        assert!(q.peek().is_none());
     }
 
     #[test]

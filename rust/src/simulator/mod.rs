@@ -17,7 +17,12 @@
 //!   replacing inline `eprintln!`s;
 //! * [`source`] — prepared-input delivery: fully-materialized
 //!   ([`Prepared`] / [`SharedPrepared`]) or streaming with bounded
-//!   residency ([`StreamingSource`]).
+//!   residency ([`StreamingSource`]);
+//! * `sharded` — the conservative parallel engine behind
+//!   [`Simulation::threads`]: satellites partition across worker shards,
+//!   cross-shard broadcasts synchronize at windows sized by the minimum
+//!   ISL record-hop latency, and the report stays bit-identical to the
+//!   single-threaded engine's.
 //!
 //! Event flow per task: `Arrival` → (FIFO queue per satellite) → service
 //! (Alg. 1 decides reuse vs scratch, the cost model prices it) →
@@ -32,6 +37,7 @@
 pub mod engine;
 pub mod events;
 pub mod observer;
+mod sharded;
 pub mod source;
 
 use std::sync::Arc;
@@ -66,12 +72,30 @@ pub struct Simulation<'a> {
     prepared: Option<&'a Prepared>,
     /// Drop per-task logs, keep only running aggregates (O(1) per task).
     aggregate_only: bool,
+    /// `Some(k)` routes the run through the sharded conservative engine
+    /// with `k` worker shards; `None` keeps the single-threaded engine.
+    threads: Option<usize>,
 }
 
 /// Pre-computed per-task data, shareable across scenario runs.
 pub struct Prepared {
     pub pres: Vec<Preprocessed>,
     pub oracle: Vec<u32>,
+}
+
+impl Prepared {
+    /// The preprocessed input and oracle label of task `idx` — the one
+    /// bounds-checked accessor behind both [`SharedPrepared`]'s `fetch`
+    /// and the sharded engine's lock-free shared-table reads.
+    pub fn entry(&self, idx: usize) -> Result<(&Preprocessed, u32)> {
+        match (self.pres.get(idx), self.oracle.get(idx)) {
+            (Some(pre), Some(&label)) => Ok((pre, label)),
+            _ => Err(Error::simulation(format!(
+                "task index {idx} outside the prepared table ({} tasks)",
+                self.pres.len()
+            ))),
+        }
+    }
 }
 
 /// Floor on tasks per preprocessing thread: below this the spawn overhead
@@ -160,7 +184,24 @@ impl<'a> Simulation<'a> {
             workload: None,
             prepared: None,
             aggregate_only: false,
+            threads: None,
         }
+    }
+
+    /// Run the event loop on the **sharded conservative engine** with
+    /// `threads` worker shards (clamped to ≥ 1). Satellites partition
+    /// round-robin across shards; cross-shard broadcasts synchronize at
+    /// conservative windows sized by the minimum ISL record-hop latency,
+    /// and the resulting [`RunReport`] is bit-identical to the
+    /// single-threaded engine's for every scenario and source (pinned by
+    /// the golden and property suites). `threads = 1` still exercises the
+    /// sharded machinery with one shard — useful for tests; builders that
+    /// never call this keep the classic engine. With `CCRSAT_TRACE` set
+    /// the run falls back to the single-threaded engine, which traces
+    /// exactly (the sharded loop has no observer seam).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads.max(1));
+        self
     }
 
     /// Share a pre-built workload (same task stream across scenarios).
@@ -263,6 +304,20 @@ impl<'a> Simulation<'a> {
         wl: &Workload,
         source: &mut dyn PreparedSource,
     ) -> Result<RunReport> {
+        if let Some(threads) = self.threads {
+            if std::env::var("CCRSAT_TRACE").is_err() {
+                return sharded::run_sharded(
+                    self.cfg,
+                    self.backend,
+                    self.scenario,
+                    wl,
+                    !self.aggregate_only,
+                    threads,
+                    source,
+                    wall_start,
+                );
+            }
+        }
         let engine = Engine::new(
             self.cfg,
             self.backend,
@@ -529,7 +584,7 @@ impl<'a> Simulation<'a> {
                     bucket,
                     record,
                 } => {
-                    scrts[dst].merge_broadcast(bucket, (*record).clone(), now);
+                    scrts[dst].merge_broadcast(bucket, record.as_ref(), now);
                     // A satellite that just received shared records has had
                     // its need addressed: suppress its own collaboration
                     // request until its SRS recovers above th_co again.
@@ -938,6 +993,66 @@ mod tests {
             .with_prepared(&prep)
             .run_with_source(&mut source);
         assert!(err.is_err(), "with_prepared + run_with_source must error");
+    }
+
+    #[test]
+    fn sharded_run_matches_single_threaded() {
+        let cfg = tiny_cfg(3, 45);
+        let backend = NativeBackend::new(&cfg);
+        let wl = build_workload(&cfg);
+        let prep = prepare(&backend, &wl).unwrap();
+        let single = Simulation::new(&cfg, &backend, Scenario::Sccr)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .run()
+            .unwrap();
+        for threads in [1usize, 2, 4] {
+            let sharded = Simulation::new(&cfg, &backend, Scenario::Sccr)
+                .with_workload(&wl)
+                .with_prepared(&prep)
+                .threads(threads)
+                .run()
+                .unwrap();
+            assert_eq!(sharded.completion_time, single.completion_time, "{threads}");
+            assert_eq!(sharded.compute_seconds, single.compute_seconds, "{threads}");
+            assert_eq!(sharded.makespan, single.makespan, "{threads}");
+            assert_eq!(sharded.reused_tasks, single.reused_tasks, "{threads}");
+            assert_eq!(sharded.reuse_accuracy, single.reuse_accuracy, "{threads}");
+            assert_eq!(
+                sharded.data_transfer_mb, single.data_transfer_mb,
+                "{threads}"
+            );
+            assert_eq!(sharded.collab_events, single.collab_events, "{threads}");
+            assert_eq!(sharded.mean_latency, single.mean_latency, "{threads}");
+            assert_eq!(sharded.p95_latency, single.p95_latency, "{threads}");
+            assert_eq!(sharded.tasks.len(), single.tasks.len(), "{threads}");
+        }
+    }
+
+    #[test]
+    fn sharded_aggregate_only_matches_full_aggregates() {
+        let cfg = tiny_cfg(3, 30);
+        let backend = NativeBackend::new(&cfg);
+        let wl = build_workload(&cfg);
+        let prep = prepare(&backend, &wl).unwrap();
+        let full = Simulation::new(&cfg, &backend, Scenario::Sccr)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .threads(2)
+            .run()
+            .unwrap();
+        let slim = Simulation::new(&cfg, &backend, Scenario::Sccr)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .threads(2)
+            .aggregate_only()
+            .run()
+            .unwrap();
+        assert!(slim.tasks.is_empty());
+        assert_eq!(full.tasks.len(), 30);
+        assert_eq!(slim.completion_time, full.completion_time);
+        assert_eq!(slim.p95_latency, full.p95_latency);
+        assert_eq!(slim.cpu_occupancy, full.cpu_occupancy);
     }
 
     #[test]

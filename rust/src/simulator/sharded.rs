@@ -1,0 +1,740 @@
+//! Sharded conservative parallel event engine.
+//!
+//! Satellites are partitioned round-robin across K worker shards
+//! (`sat % K`), each owning a private [`EventQueue`] for its satellites'
+//! `Arrival` / `Completion` events. The only *event* that crosses
+//! satellites is `BroadcastDeliver`, and every broadcast record needs at
+//! least [`CommModel::min_hop_seconds`] of virtual time to reach its
+//! first receiver — which is exactly the lookahead a conservative
+//! parallel discrete-event engine needs: inside a window
+//! `[T, T + lookahead)` no shard's local events can depend on another
+//! shard's future. The coordinator therefore repeats:
+//!
+//! 1. **Advance** (parallel): every shard processes its local events up to
+//!    the window end on its own thread — the expensive per-task reuse
+//!    path (`lsh_bucket` + NN scan + SSIM gate + classify) runs K-wide.
+//! 2. **Resolve** (sequential): an Alg. 2 trigger is *not* shard-local —
+//!    it snapshots every satellite's SRS and reads the source's SCRT at
+//!    one instant. A shard that hits a passing trigger pauses mid-handler
+//!    and the coordinator resolves the pending requests in global time
+//!    order, exactly as the single-threaded engine interleaves them.
+//!    Shards that already ran past the trigger instant answer those reads
+//!    retroactively: per-window SRS checkpoints reconstruct any
+//!    satellite's SRS at the trigger time, and the SCRT op journal
+//!    ([`crate::coordinator::scrt::Scrt::top_tau_at`]) reconstructs the
+//!    source's top-τ records. A resolved broadcast's deliveries land at
+//!    least one lookahead in the future, so they are exchanged at the
+//!    next window boundary, never inside the current one.
+//! 3. **Exchange**: queued deliveries are routed into the owning shards
+//!    and the next window opens at the globally earliest pending event.
+//!
+//! Determinism: merge order everywhere is keyed by
+//! `(f64::total_cmp(time), seq)` exactly as the single-threaded
+//! [`EventQueue`] orders events — shard queues preserve the relative push
+//! order of their events, pending requests resolve in ascending time
+//! (requester id on the measure-zero tie), and the per-shard completion
+//! logs fold into one [`crate::metrics::MetricsAccum`] in global
+//! completion order ([`crate::metrics::fold_sharded`]). The result is a
+//! bit-identical
+//! [`RunReport`] for every scenario and both prepared sources, pinned by
+//! `tests/engine_identity.rs` and swept in `tests/properties.rs`.
+//!
+//! Scenarios without a collaboration policy (`w/o CR`, `SLCR`) never
+//! broadcast at all: the window stretches to infinity and the run is one
+//! embarrassingly parallel pass. Note one trade-off: shards always retain
+//! their completion logs until the final merge, so an `aggregate_only`
+//! sharded run holds O(tasks) log memory transiently where the
+//! single-threaded engine streams them into the accumulator.
+
+use std::sync::{Arc, Mutex};
+
+use crate::compute::ComputeBackend;
+use crate::config::SimConfig;
+use crate::coordinator::policy::CollabPolicy;
+use crate::coordinator::scrt::Record;
+use crate::coordinator::srs::srs;
+use crate::coordinator::Scenario;
+use crate::error::{Error, Result};
+use crate::metrics::{fold_sharded, RunReport, SatSummary, TaskLog};
+use crate::network::{CommModel, GridTopology};
+use crate::satellite::{InFlight, SatNode, SatelliteState};
+use crate::simulator::engine::{
+    reuse_service, scratch_service, take_completed, CollabCounters,
+};
+use crate::simulator::events::{EventKind, EventQueue};
+use crate::simulator::source::PreparedSource;
+use crate::workload::{SatId, Workload};
+
+/// One SRS-relevant state checkpoint of a satellite inside the current
+/// window, taken after every mutation (service start, completion
+/// bookkeeping). `time = NEG_INFINITY` marks the lazily-recorded
+/// window-entry baseline.
+#[derive(Clone, Copy, Debug)]
+struct SrsCheckpoint {
+    time: f64,
+    tasks_processed: usize,
+    tasks_reused: usize,
+    busy_s: f64,
+}
+
+/// A completion whose Alg. 2 gate passed: the shard stopped mid-handler
+/// (bookkeeping committed, request side effects not) and waits for the
+/// coordinator to resolve the request in global order.
+#[derive(Clone, Copy, Debug)]
+struct PendingGate {
+    local: usize,
+    now: f64,
+    my_srs: f64,
+}
+
+/// A broadcast delivery scheduled by a resolved collaboration, waiting
+/// for the next window boundary to enter its destination shard's queue.
+struct PendingDelivery {
+    time: f64,
+    dst: SatId,
+    bucket: u32,
+    record: Arc<Record>,
+}
+
+/// How shard workers reach the prepared inputs.
+enum SourceAccess<'a, S: PreparedSource + ?Sized> {
+    /// An immutable fully-materialized table
+    /// ([`PreparedSource::as_shared_table`]): entries are read lock-free
+    /// and borrowed straight into the reuse path — the same zero-copy
+    /// access the single-threaded engine has.
+    Shared(&'a crate::simulator::Prepared),
+    /// A stateful source (streaming windows): `fetch` is serialized
+    /// behind a mutex and the fetched input is cloned out, so the
+    /// expensive reuse path runs outside the lock.
+    Locked(&'a Mutex<&'a mut S>),
+}
+
+/// Read-only run context shared by every shard worker.
+struct ShardCtx<'a, S: PreparedSource + ?Sized> {
+    wl: &'a Workload,
+    backend: &'a dyn ComputeBackend,
+    /// One prepared source serves all shards.
+    source: SourceAccess<'a, S>,
+    uses_reuse: bool,
+    policy: Option<&'static dyn CollabPolicy>,
+    /// Record SRS checkpoints + SCRT ops (only collaborating scenarios
+    /// ever read them back; non-collaborating runs use one infinite
+    /// window, where an unbounded journal would be a leak).
+    journal: bool,
+    th_sim: f64,
+    th_co: f64,
+    beta: f64,
+    cooldown_s: f64,
+    scratch_s: f64,
+    lookup_s: f64,
+}
+
+/// One worker shard: the satellites it owns, their private event queue,
+/// its completion-log stream and the per-window journals.
+struct Shard {
+    /// Shard index within the round-robin partition.
+    id: usize,
+    /// Total shard count K (global sat `s` lives at shard `s % K`,
+    /// local slot `s / K`).
+    stride: usize,
+    nodes: Vec<SatNode>,
+    q: EventQueue,
+    /// Completed-task logs in this shard's completion order.
+    logs: Vec<TaskLog>,
+    /// Per-local-satellite SRS checkpoints for the current window.
+    srs_journal: Vec<Vec<SrsCheckpoint>>,
+    /// The unresolved Alg. 2 gate this shard paused at, if any.
+    pause: Option<PendingGate>,
+}
+
+impl Shard {
+    fn sat_of(&self, local: usize) -> SatId {
+        local * self.stride + self.id
+    }
+
+    /// Reset the per-window journals (SRS checkpoints + SCRT ops).
+    fn begin_window(&mut self) {
+        for journal in &mut self.srs_journal {
+            journal.clear();
+        }
+        for node in &mut self.nodes {
+            node.scrt.clear_journal();
+        }
+    }
+
+    /// Record the pre-mutation baseline on a satellite's first mutation
+    /// inside the window.
+    fn checkpoint_baseline(&mut self, local: usize) {
+        if self.srs_journal[local].is_empty() {
+            let state = &self.nodes[local].state;
+            self.srs_journal[local].push(SrsCheckpoint {
+                time: f64::NEG_INFINITY,
+                tasks_processed: state.tasks_processed,
+                tasks_reused: state.tasks_reused,
+                busy_s: state.busy_time(),
+            });
+        }
+    }
+
+    /// Record a post-mutation checkpoint at virtual time `time`.
+    fn checkpoint(&mut self, local: usize, time: f64) {
+        let state = &self.nodes[local].state;
+        self.srs_journal[local].push(SrsCheckpoint {
+            time,
+            tasks_processed: state.tasks_processed,
+            tasks_reused: state.tasks_reused,
+            busy_s: state.busy_time(),
+        });
+    }
+
+    /// A local satellite's SRS at virtual time `t` — even when this shard
+    /// has already processed the satellite past `t` within the current
+    /// window (the checkpoints reach back to the window entry; events at
+    /// exactly `t` are included, matching the single-threaded engine,
+    /// which applies a completion's own bookkeeping before its trigger).
+    fn srs_at(&self, local: usize, t: f64, beta: f64) -> f64 {
+        let journal = &self.srs_journal[local];
+        let (processed, reused, busy_s) =
+            match journal.iter().rev().find(|c| c.time <= t) {
+                Some(c) => (c.tasks_processed, c.tasks_reused, c.busy_s),
+                None => {
+                    // No mutation this window: the live state is the state
+                    // at any instant inside it.
+                    let state = &self.nodes[local].state;
+                    (state.tasks_processed, state.tasks_reused, state.busy_time())
+                }
+            };
+        srs(
+            beta,
+            SatelliteState::reuse_rate_of(reused, processed),
+            SatelliteState::occupancy_of(busy_s, t),
+        )
+    }
+
+    /// Earliest queued event time, if any.
+    fn next_time(&self) -> Option<f64> {
+        self.q.peek().map(|e| e.time)
+    }
+
+    /// Process local events with `time < window_end` in `(time, seq)`
+    /// order, stopping early (with `self.pause` set) at the first
+    /// completion whose Alg. 2 gate passes. `quiet_until` is the link
+    /// quiet horizon as of this shard's last synchronization point; it
+    /// can only be *behind* the authoritative value, and a staler (i.e.
+    /// smaller) horizon admits a superset of requests — so a gate that
+    /// passes here is re-checked by the coordinator, and one that fails
+    /// would fail against the authoritative horizon too.
+    fn advance<S: PreparedSource + ?Sized>(
+        &mut self,
+        ctx: &ShardCtx<'_, S>,
+        window_end: f64,
+        quiet_until: f64,
+    ) -> Result<()> {
+        debug_assert!(self.pause.is_none(), "advance while paused");
+        while self.q.peek().is_some_and(|e| e.time < window_end) {
+            let ev = self.q.pop().expect("peeked event");
+            let now = ev.time;
+            match ev.kind {
+                EventKind::Arrival(idx) => {
+                    let sat = ctx.wl.tasks[idx].satellite;
+                    debug_assert_eq!(sat % self.stride, self.id, "foreign arrival");
+                    let local = sat / self.stride;
+                    self.nodes[local].queue.push_back(idx);
+                    if self.nodes[local].in_flight.is_none() {
+                        self.start_service(ctx, local, now)?;
+                    }
+                }
+                EventKind::Completion(sat) => {
+                    let local = sat / self.stride;
+                    if self.on_completion(ctx, local, now, quiet_until)? {
+                        return Ok(()); // paused at an unresolved gate
+                    }
+                }
+                EventKind::BroadcastDeliver {
+                    dst,
+                    bucket,
+                    record,
+                } => {
+                    debug_assert_eq!(dst % self.stride, self.id, "foreign delivery");
+                    let node = &mut self.nodes[dst / self.stride];
+                    node.scrt.merge_broadcast(bucket, record.as_ref(), now);
+                    // Receiver damping, as in the single-threaded engine.
+                    node.collab_armed = false;
+                    node.state.last_collab_request =
+                        node.state.last_collab_request.max(now);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Completion bookkeeping + the *local* half of the Alg. 2 trigger.
+    /// Returns true when the gate passed and the shard must pause for the
+    /// coordinator (request side effects are deferred to resolution).
+    fn on_completion<S: PreparedSource + ?Sized>(
+        &mut self,
+        ctx: &ShardCtx<'_, S>,
+        local: usize,
+        now: f64,
+        quiet_until: f64,
+    ) -> Result<bool> {
+        if ctx.journal {
+            self.checkpoint_baseline(local);
+        }
+        let log = take_completed(&mut self.nodes[local], ctx.wl, now)?;
+        if ctx.journal {
+            self.checkpoint(local, now);
+        }
+        self.logs.push(log);
+
+        if let Some(policy) = ctx.policy {
+            let node = &self.nodes[local];
+            let my_srs = srs(
+                ctx.beta,
+                node.state.reuse_rate(),
+                node.state.cpu_occupancy(now),
+            );
+            let cooled = now - node.state.last_collab_request >= ctx.cooldown_s;
+            if my_srs >= ctx.th_co {
+                self.nodes[local].collab_armed = true; // recovered: re-arm
+            }
+            if policy.should_request(
+                self.nodes[local].collab_armed,
+                my_srs,
+                ctx.th_co,
+                cooled,
+                now,
+                quiet_until,
+            ) {
+                self.pause = Some(PendingGate { local, now, my_srs });
+                return Ok(true);
+            }
+        }
+        self.finish_completion(ctx, local, now)?;
+        Ok(false)
+    }
+
+    /// The post-trigger tail of a completion: dequeue the next task.
+    fn finish_completion<S: PreparedSource + ?Sized>(
+        &mut self,
+        ctx: &ShardCtx<'_, S>,
+        local: usize,
+        now: f64,
+    ) -> Result<()> {
+        if !self.nodes[local].queue.is_empty() {
+            self.start_service(ctx, local, now)?;
+        }
+        Ok(())
+    }
+
+    /// Resume after the coordinator resolved (or suppressed) this shard's
+    /// pending gate, then keep advancing through the window.
+    fn resume_after_gate<S: PreparedSource + ?Sized>(
+        &mut self,
+        ctx: &ShardCtx<'_, S>,
+        window_end: f64,
+        quiet_until: f64,
+        clear_armed: bool,
+    ) -> Result<()> {
+        let gate = self.pause.take().expect("resume without a pending gate");
+        if clear_armed {
+            self.nodes[gate.local].collab_armed = false;
+        }
+        self.finish_completion(ctx, gate.local, gate.now)?;
+        self.advance(ctx, window_end, quiet_until)
+    }
+
+    /// Dequeue and start the next task on an idle satellite.
+    fn start_service<S: PreparedSource + ?Sized>(
+        &mut self,
+        ctx: &ShardCtx<'_, S>,
+        local: usize,
+        now: f64,
+    ) -> Result<()> {
+        let sat = self.sat_of(local);
+        let idx = self.nodes[local].queue.pop_front().ok_or_else(|| {
+            Error::simulation(format!(
+                "start_service on satellite {sat} with an empty queue"
+            ))
+        })?;
+        let spec = if ctx.uses_reuse {
+            match &ctx.source {
+                SourceAccess::Shared(prep) => {
+                    let (pre, oracle) = prep.entry(idx)?;
+                    reuse_service(
+                        &mut self.nodes[local].scrt,
+                        ctx.backend,
+                        ctx.wl,
+                        sat,
+                        idx,
+                        pre,
+                        oracle,
+                        ctx.th_sim,
+                        ctx.scratch_s,
+                        ctx.lookup_s,
+                        now,
+                    )?
+                }
+                SourceAccess::Locked(mutex) => {
+                    let (pre, oracle) = {
+                        let mut source = mutex.lock().map_err(|_| {
+                            Error::simulation("prepared source lock poisoned")
+                        })?;
+                        let (pre, oracle) = source.fetch(idx)?;
+                        (pre.clone(), oracle)
+                    };
+                    reuse_service(
+                        &mut self.nodes[local].scrt,
+                        ctx.backend,
+                        ctx.wl,
+                        sat,
+                        idx,
+                        &pre,
+                        oracle,
+                        ctx.th_sim,
+                        ctx.scratch_s,
+                        ctx.lookup_s,
+                        now,
+                    )?
+                }
+            }
+        } else {
+            scratch_service(ctx.scratch_s)
+        };
+        if ctx.journal {
+            self.checkpoint_baseline(local);
+        }
+        let (start, completion) = self.nodes[local].state.serve(now, spec.service_s);
+        if ctx.journal {
+            self.checkpoint(local, now);
+        }
+        self.nodes[local].in_flight = Some(InFlight {
+            task_idx: idx,
+            start,
+            reused: spec.reused,
+            correct: spec.correct,
+            ssim: spec.ssim,
+            reused_from_scene: spec.reused_from_scene,
+            reused_from_sat: spec.reused_from_sat,
+        });
+        self.q.push(completion, EventKind::Completion(sat));
+        Ok(())
+    }
+}
+
+/// Drive a full sharded run. Callers have already validated the config;
+/// this validates the *sharding* preconditions (a strictly positive,
+/// finite lookahead whenever the scenario can broadcast).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
+    cfg: &SimConfig,
+    backend: &dyn ComputeBackend,
+    scenario: Scenario,
+    wl: &Workload,
+    keep_logs: bool,
+    threads: usize,
+    source: &mut S,
+    wall_start: std::time::Instant,
+) -> Result<RunReport> {
+    let shard_count = threads.max(1);
+    let topo = GridTopology::new(cfg.network.n);
+    let comm = CommModel::new(&cfg.network, &cfg.comm);
+    let sats = topo.len();
+    let policy = scenario.collab_policy();
+    let lookahead = comm.min_hop_seconds();
+    if policy.is_some() && !(lookahead.is_finite() && lookahead > 0.0) {
+        return Err(Error::simulation(format!(
+            "sharded engine needs a strictly positive broadcast lookahead, \
+             but this comm config yields {lookahead} s per record-hop — \
+             the conservative window could never advance past a broadcast"
+        )));
+    }
+
+    let cap = cfg.cache_capacity_records();
+    let num_buckets = backend.num_buckets();
+    let c_comp = cfg.compute.capability_flops;
+    // Materialized tables are read lock-free; anything stateful is
+    // serialized behind a mutex. (Probe first, borrow per branch — the
+    // classic NLL workaround for branching on a borrowed Option while
+    // the other arm needs the value mutably.)
+    let locked_storage;
+    let source_access = if source.as_shared_table().is_some() {
+        SourceAccess::Shared(source.as_shared_table().expect("probed above"))
+    } else {
+        locked_storage = Mutex::new(&mut *source);
+        SourceAccess::Locked(&locked_storage)
+    };
+    let ctx = ShardCtx {
+        wl,
+        backend,
+        source: source_access,
+        uses_reuse: scenario.uses_reuse(),
+        policy,
+        journal: policy.is_some(),
+        th_sim: cfg.reuse.th_sim,
+        th_co: cfg.reuse.th_co,
+        beta: cfg.reuse.beta,
+        cooldown_s: cfg.reuse.collab_cooldown_s,
+        scratch_s: cfg.compute.task_flops / c_comp,
+        lookup_s: cfg.compute.lookup_fixed_s + cfg.compute.lookup_flops / c_comp,
+    };
+
+    let mut shards: Vec<Shard> = (0..shard_count)
+        .map(|id| {
+            let nodes: Vec<SatNode> = (id..sats)
+                .step_by(shard_count)
+                .map(|s| {
+                    let mut node = SatNode::new(s, num_buckets, cap);
+                    if ctx.journal {
+                        node.scrt.enable_journal();
+                    }
+                    node
+                })
+                .collect();
+            let locals = nodes.len();
+            Shard {
+                id,
+                stride: shard_count,
+                nodes,
+                q: EventQueue::new(),
+                logs: Vec::new(),
+                srs_journal: vec![Vec::new(); locals],
+                pause: None,
+            }
+        })
+        .collect();
+
+    // Seed the arrivals, in task order per shard (same relative order as
+    // the single-threaded engine's global arrival pushes).
+    for (idx, task) in wl.tasks.iter().enumerate() {
+        shards[task.satellite % shard_count]
+            .q
+            .push(task.arrival, EventKind::Arrival(idx));
+    }
+
+    let tau = cfg.reuse.tau;
+    let mut quiet_until = f64::NEG_INFINITY;
+    let mut collab = CollabCounters::default();
+    let mut pending: Vec<Vec<PendingDelivery>> =
+        (0..shard_count).map(|_| Vec::new()).collect();
+
+    loop {
+        // Next conservative window: the globally earliest pending event
+        // plus one lookahead (infinite when nothing can ever broadcast).
+        let window_start = shards
+            .iter()
+            .filter_map(Shard::next_time)
+            .fold(f64::INFINITY, f64::min);
+        if window_start == f64::INFINITY {
+            break; // every queue drained: the run is complete
+        }
+        if !window_start.is_finite() {
+            return Err(Error::simulation(
+                "non-finite event time in the sharded event queue",
+            ));
+        }
+        let window_end = if policy.is_some() {
+            window_start + lookahead
+        } else {
+            f64::INFINITY
+        };
+
+        // Phase 1 — parallel advance.
+        for shard in &mut shards {
+            shard.begin_window();
+        }
+        let worker_results: Vec<Result<()>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = shards
+                .iter_mut()
+                .map(|shard| {
+                    let ctx = &ctx;
+                    scope.spawn(move || shard.advance(ctx, window_end, quiet_until))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(Error::simulation("shard panicked")))
+                })
+                .collect()
+        });
+        for result in worker_results {
+            result?;
+        }
+
+        // Phase 2 — resolve pending Alg. 2 gates in global time order.
+        loop {
+            let mut earliest: Option<(f64, SatId, usize)> = None;
+            for (i, shard) in shards.iter().enumerate() {
+                if let Some(gate) = &shard.pause {
+                    let sat = shard.sat_of(gate.local);
+                    let replace = match &earliest {
+                        None => true,
+                        Some((best_t, best_sat, _)) => {
+                            match gate.now.total_cmp(best_t) {
+                                std::cmp::Ordering::Less => true,
+                                std::cmp::Ordering::Equal => sat < *best_sat,
+                                std::cmp::Ordering::Greater => false,
+                            }
+                        }
+                    };
+                    if replace {
+                        earliest = Some((gate.now, sat, i));
+                    }
+                }
+            }
+            let Some((t, req_sat, i)) = earliest else {
+                break;
+            };
+            let local = req_sat / shard_count;
+            let gate_policy = policy.expect("gates only fire with a collab policy");
+
+            // Re-check against the authoritative quiet horizon (a collab
+            // resolved since this shard paused may suppress it).
+            let passes = {
+                let gate = shards[i].pause.as_ref().expect("selected shard paused");
+                let node = &shards[i].nodes[local];
+                let cooled = t - node.state.last_collab_request >= ctx.cooldown_s;
+                gate_policy.should_request(
+                    node.collab_armed,
+                    gate.my_srs,
+                    ctx.th_co,
+                    cooled,
+                    t,
+                    quiet_until,
+                )
+            };
+
+            let mut clear_armed = false;
+            if passes {
+                {
+                    let state = &mut shards[i].nodes[local].state;
+                    state.last_collab_request = t;
+                    state.collab_requests += 1;
+                }
+                // All-satellite SRS snapshot at `t`, reconstructed where
+                // a shard has already processed past it.
+                let mut all_srs = vec![0.0f64; sats];
+                for (si, shard) in shards.iter().enumerate() {
+                    for local_idx in 0..shard.nodes.len() {
+                        all_srs[local_idx * shard_count + si] =
+                            shard.srs_at(local_idx, t, ctx.beta);
+                    }
+                }
+                match gate_policy.select_source(&topo, req_sat, &all_srs, ctx.th_co) {
+                    None => collab.aborted_collabs += 1,
+                    Some(decision) => {
+                        let records = shards[decision.source % shard_count].nodes
+                            [decision.source / shard_count]
+                            .scrt
+                            .top_tau_at(tau, t);
+                        if records.is_empty() {
+                            collab.aborted_collabs += 1;
+                        } else {
+                            collab.collab_events += 1;
+                            if decision.expanded {
+                                collab.expanded_events += 1;
+                            }
+                            shards[decision.source % shard_count].nodes
+                                [decision.source / shard_count]
+                                .state
+                                .times_source += 1;
+                            collab.broadcast_records += records.len();
+                            let plan = comm.plan_broadcast(
+                                &topo,
+                                decision.source,
+                                &decision.area,
+                                records.len(),
+                            );
+                            collab.transfer_bytes += plan.bytes;
+                            collab.comm_seconds += plan.airtime_s;
+                            quiet_until = t + plan.completion_offset(records.len());
+                            let shared: Vec<(u32, Arc<Record>)> = records
+                                .into_iter()
+                                .map(|(b, r)| (b, Arc::new(r)))
+                                .collect();
+                            // Same nested order as the single-threaded
+                            // fan-out: per-shard buffers preserve the
+                            // relative seq order of equal-time deliveries.
+                            for &(dst, depth) in &plan.arrivals {
+                                for (k, (bucket, rec)) in shared.iter().enumerate() {
+                                    pending[dst % shard_count].push(PendingDelivery {
+                                        time: t + plan.arrival_offset(k, depth),
+                                        dst,
+                                        bucket: *bucket,
+                                        record: rec.clone(),
+                                    });
+                                }
+                            }
+                            clear_armed = true;
+                        }
+                    }
+                }
+            }
+            // The resumed shard finishes its window alone — every other
+            // shard is already past its own pause or at the window end,
+            // so nothing is left to overlap with.
+            shards[i].resume_after_gate(&ctx, window_end, quiet_until, clear_armed)?;
+        }
+
+        // Phase 3 — exchange: deliveries land at `t + (k + depth) ×
+        // bottleneck ≥ window_start + lookahead = window_end`, so routing
+        // them here can never starve the window just processed.
+        for (si, buffer) in pending.iter_mut().enumerate() {
+            for delivery in buffer.drain(..) {
+                // Exact even in floats: `t ⊕ (k+depth)·bottleneck` is
+                // monotone and bottleneck ≥ lookahead bit-for-bit.
+                debug_assert!(delivery.time >= window_end);
+                shards[si].q.push(
+                    delivery.time,
+                    EventKind::BroadcastDeliver {
+                        dst: delivery.dst,
+                        bucket: delivery.bucket,
+                        record: delivery.record,
+                    },
+                );
+            }
+        }
+    }
+
+    // Fold the per-shard completion logs into one accumulator in global
+    // completion order, then assemble the per-satellite summaries exactly
+    // as the single-threaded engine does.
+    let shard_logs: Vec<Vec<TaskLog>> = shards
+        .iter_mut()
+        .map(|shard| std::mem::take(&mut shard.logs))
+        .collect();
+    let metrics = fold_sharded(keep_logs, shard_logs);
+    let makespan = metrics.makespan();
+    let per_satellite: Vec<SatSummary> = (0..sats)
+        .map(|s| {
+            let node = &shards[s % shard_count].nodes[s / shard_count];
+            SatSummary {
+                sat: s,
+                tasks: node.state.tasks_processed,
+                reused: node.state.tasks_reused,
+                busy_s: node.state.busy_time(),
+                cpu_occupancy: node.state.cpu_occupancy(makespan),
+                collab_requests: node.state.collab_requests,
+                times_source: node.state.times_source,
+                scrt_len: node.scrt.len(),
+                evictions: node.scrt.evictions,
+            }
+        })
+        .collect();
+
+    Ok(metrics.finish(
+        scenario,
+        cfg.network.n,
+        per_satellite,
+        cfg.alpha,
+        collab.comm_seconds,
+        collab.transfer_bytes,
+        collab.collab_events,
+        collab.expanded_events,
+        collab.aborted_collabs,
+        collab.broadcast_records,
+        wall_start.elapsed().as_secs_f64(),
+    ))
+}

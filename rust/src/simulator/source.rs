@@ -32,7 +32,16 @@ use crate::simulator::{prepare_tasks, Prepared};
 use crate::workload::Workload;
 
 /// Serves per-task prepared inputs to the engine, by task index.
-pub trait PreparedSource {
+///
+/// `Send` is a supertrait: the sharded engine hands one source to all of
+/// its worker shards — lock-free when [`PreparedSource::as_shared_table`]
+/// exposes an immutable table, behind a mutex otherwise (fetches are then
+/// serialized; the data a source returns is deterministic per index, so
+/// concurrent shard access changes fetch *order* — and thereby streaming
+/// residency statistics — but never the returned bytes). Both built-in
+/// sources are plain data over `Send + Sync` borrows, so the bound costs
+/// implementors nothing.
+pub trait PreparedSource: Send {
     /// Total number of tasks this source covers.
     fn len(&self) -> usize;
 
@@ -43,6 +52,16 @@ pub trait PreparedSource {
 
     /// The preprocessed input and oracle label of task `idx`.
     fn fetch(&mut self, idx: usize) -> Result<(&Preprocessed, u32)>;
+
+    /// For sources that are a borrow of an immutable, fully-materialized
+    /// [`Prepared`] table: expose it, so concurrent consumers (the
+    /// sharded engine's shard workers) can read entries lock-free
+    /// instead of serializing `fetch` calls behind a mutex and cloning
+    /// each payload out of the critical section. Stateful sources
+    /// (streaming windows) return `None` — the default.
+    fn as_shared_table(&self) -> Option<&Prepared> {
+        None
+    }
 
     /// Peak number of [`Preprocessed`] entries simultaneously resident so
     /// far (for a materialized source this is simply the task count).
@@ -64,14 +83,12 @@ impl PreparedSource for SharedPrepared<'_> {
         self.0.pres.len()
     }
 
+    fn as_shared_table(&self) -> Option<&Prepared> {
+        Some(self.0)
+    }
+
     fn fetch(&mut self, idx: usize) -> Result<(&Preprocessed, u32)> {
-        match (self.0.pres.get(idx), self.0.oracle.get(idx)) {
-            (Some(pre), Some(&label)) => Ok((pre, label)),
-            _ => Err(Error::simulation(format!(
-                "task index {idx} outside the prepared table ({} tasks)",
-                self.0.pres.len()
-            ))),
-        }
+        self.0.entry(idx)
     }
 
     fn peak_resident(&self) -> usize {

@@ -148,6 +148,115 @@ fn engine_matches_reference_on_a_larger_collaborating_grid() {
 }
 
 #[test]
+fn sharded_engine_matches_reference_for_every_scenario() {
+    // The sharded conservative engine must land on the exact numbers the
+    // pre-refactor monolith produced — aggregates, per-satellite
+    // summaries and per-task logs — for every scenario and shard count.
+    let c = cfg(3, 60);
+    let backend = NativeBackend::new(&c);
+    let wl = build_workload(&c);
+    let prep = prepare(&backend, &wl).unwrap();
+    for s in Scenario::ALL {
+        let reference = Simulation::new(&c, &backend, s)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .run_reference()
+            .unwrap();
+        for threads in [2usize, 3] {
+            let sharded = Simulation::new(&c, &backend, s)
+                .with_workload(&wl)
+                .with_prepared(&prep)
+                .threads(threads)
+                .run()
+                .unwrap();
+            let label = format!("sharded scenario {s} K={threads}");
+            assert_aggregates_identical(&sharded, &reference, &label);
+            assert_satellites_identical(&sharded, &reference, &label);
+            assert_logs_identical(&sharded, &reference, &label);
+        }
+    }
+}
+
+#[test]
+fn sharded_engine_matches_reference_on_a_larger_collaborating_grid() {
+    // 4×4 with queue buildup, area expansion and (for SRS Priority)
+    // frequent flooding requests — the pause/resolve path under load.
+    let c = cfg(4, 96);
+    let backend = NativeBackend::new(&c);
+    let wl = build_workload(&c);
+    let prep = prepare(&backend, &wl).unwrap();
+    for s in [Scenario::Sccr, Scenario::SrsPriority] {
+        let reference = Simulation::new(&c, &backend, s)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .run_reference()
+            .unwrap();
+        let sharded = Simulation::new(&c, &backend, s)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .threads(4)
+            .run()
+            .unwrap();
+        let label = format!("sharded scenario {s} 4x4 K=4");
+        assert_aggregates_identical(&sharded, &reference, &label);
+        assert_satellites_identical(&sharded, &reference, &label);
+        assert_logs_identical(&sharded, &reference, &label);
+    }
+}
+
+#[test]
+fn sharded_streaming_matches_reference() {
+    // Sharded engine over the streaming source: both axes of the engine
+    // rework at once, still bit-identical to the monolith.
+    let c = cfg(3, 45);
+    let backend = NativeBackend::new(&c);
+    let wl = build_workload(&c);
+    let prep = prepare(&backend, &wl).unwrap();
+    let stream = StreamConfig {
+        chunk_tasks: 8,
+        window_chunks: 2,
+    };
+    for s in [Scenario::Sccr, Scenario::SrsPriority] {
+        let reference = Simulation::new(&c, &backend, s)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .run_reference()
+            .unwrap();
+        let mut source = StreamingSource::new(&backend, &wl, stream).unwrap();
+        let sharded = Simulation::new(&c, &backend, s)
+            .with_workload(&wl)
+            .threads(4)
+            .run_with_source(&mut source)
+            .unwrap();
+        let label = format!("sharded streaming scenario {s}");
+        assert_aggregates_identical(&sharded, &reference, &label);
+        assert_satellites_identical(&sharded, &reference, &label);
+        assert_logs_identical(&sharded, &reference, &label);
+    }
+}
+
+#[test]
+fn sharded_engine_rejects_a_degenerate_lookahead() {
+    // Zero-byte records collapse the per-hop latency to zero: the
+    // conservative window could never advance past a broadcast, so the
+    // sharded engine must reject the topology instead of deadlocking.
+    let mut c = cfg(3, 12);
+    c.comm.record_input_bytes = 0.0;
+    c.comm.record_output_bytes = 0.0;
+    let backend = NativeBackend::new(&c);
+    let err = Simulation::new(&c, &backend, Scenario::Sccr).threads(2).run();
+    match err {
+        Err(ccrsat::Error::Simulation(msg)) => {
+            assert!(msg.contains("lookahead"), "unexpected message: {msg}");
+        }
+        other => panic!("expected Error::Simulation, got {other:?}"),
+    }
+    // Non-collaborating scenarios never broadcast: no lookahead needed.
+    let ok = Simulation::new(&c, &backend, Scenario::Slcr).threads(2).run();
+    assert!(ok.is_ok(), "SLCR must not need a broadcast lookahead");
+}
+
+#[test]
 fn streaming_engine_matches_reference_for_every_scenario() {
     // The full chain: streaming preparation feeding the engine must land
     // on the exact numbers the pre-refactor monolith produced over the

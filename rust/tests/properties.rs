@@ -280,6 +280,115 @@ fn prop_streaming_runs_bit_identical_to_materialized() {
     }
 }
 
+/// Sharded conservative engine ≡ single-threaded engine, bit for bit:
+/// across random workload seeds, shard counts K ∈ {1, 2, 3, 8}, every
+/// scenario, and both prepared sources (materialized + streaming). The
+/// comparison covers the aggregates, the per-satellite summaries and the
+/// per-task logs in completion order — the full deterministic surface of
+/// a `RunReport`.
+#[test]
+fn prop_sharded_runs_bit_identical_across_shard_counts() {
+    let mut case_rng = Rng::new(0x5A4D);
+    for case in 0..4u64 {
+        let mut cfg = SimConfig::paper_default(3);
+        cfg.workload.total_tasks = 36 + case_rng.below(25);
+        cfg.workload.seed = 7_000 + case;
+        // Smaller tiles keep the debug-mode render cost sane; identity is
+        // independent of tile size.
+        cfg.workload.raw_h = 32;
+        cfg.workload.raw_w = 32;
+        let backend = NativeBackend::new(&cfg);
+        let wl = build_workload(&cfg);
+        let prep = prepare(&backend, &wl).unwrap();
+        let threads = [1usize, 2, 3, 8][case as usize % 4];
+        let stream = StreamConfig {
+            chunk_tasks: 1 + case_rng.below(10),
+            window_chunks: 1 + case_rng.below(3),
+        };
+        for scenario in Scenario::ALL {
+            let single = Simulation::new(&cfg, &backend, scenario)
+                .with_workload(&wl)
+                .with_prepared(&prep)
+                .run()
+                .unwrap();
+            let sharded = Simulation::new(&cfg, &backend, scenario)
+                .with_workload(&wl)
+                .with_prepared(&prep)
+                .threads(threads)
+                .run()
+                .unwrap();
+            let label = format!("case {case} {scenario} K={threads}");
+            assert_reports_bit_identical(&single, &sharded, &label);
+
+            let mut source = StreamingSource::new(&backend, &wl, stream).unwrap();
+            let sharded_streamed = Simulation::new(&cfg, &backend, scenario)
+                .with_workload(&wl)
+                .threads(threads)
+                .run_with_source(&mut source)
+                .unwrap();
+            assert_reports_bit_identical(
+                &single,
+                &sharded_streamed,
+                &format!("{label} streaming"),
+            );
+        }
+    }
+}
+
+/// Every deterministic field of two `RunReport`s (wallclock excluded),
+/// including per-satellite summaries and per-task logs.
+fn assert_reports_bit_identical(
+    a: &ccrsat::metrics::RunReport,
+    b: &ccrsat::metrics::RunReport,
+    label: &str,
+) {
+    assert_eq!(a.completion_time, b.completion_time, "{label}");
+    assert_eq!(a.compute_seconds, b.compute_seconds, "{label}");
+    assert_eq!(a.comm_seconds, b.comm_seconds, "{label}");
+    assert_eq!(a.makespan, b.makespan, "{label}");
+    assert_eq!(a.reuse_rate, b.reuse_rate, "{label}");
+    assert_eq!(a.cpu_occupancy, b.cpu_occupancy, "{label}");
+    assert_eq!(a.reuse_accuracy, b.reuse_accuracy, "{label}");
+    assert_eq!(a.data_transfer_mb, b.data_transfer_mb, "{label}");
+    assert_eq!(a.total_tasks, b.total_tasks, "{label}");
+    assert_eq!(a.reused_tasks, b.reused_tasks, "{label}");
+    assert_eq!(a.cross_scene_reuses, b.cross_scene_reuses, "{label}");
+    assert_eq!(a.foreign_reuses, b.foreign_reuses, "{label}");
+    assert_eq!(a.collab_events, b.collab_events, "{label}");
+    assert_eq!(a.expanded_events, b.expanded_events, "{label}");
+    assert_eq!(a.aborted_collabs, b.aborted_collabs, "{label}");
+    assert_eq!(a.broadcast_records, b.broadcast_records, "{label}");
+    assert_eq!(a.mean_latency, b.mean_latency, "{label}");
+    assert_eq!(a.p95_latency, b.p95_latency, "{label}");
+    assert_eq!(a.per_satellite.len(), b.per_satellite.len(), "{label}");
+    for (x, y) in a.per_satellite.iter().zip(&b.per_satellite) {
+        assert_eq!(x.sat, y.sat, "{label}");
+        assert_eq!(x.tasks, y.tasks, "{label} sat {}", x.sat);
+        assert_eq!(x.reused, y.reused, "{label} sat {}", x.sat);
+        assert_eq!(x.busy_s, y.busy_s, "{label} sat {}", x.sat);
+        assert_eq!(x.cpu_occupancy, y.cpu_occupancy, "{label} sat {}", x.sat);
+        assert_eq!(x.collab_requests, y.collab_requests, "{label} sat {}", x.sat);
+        assert_eq!(x.times_source, y.times_source, "{label} sat {}", x.sat);
+        assert_eq!(x.scrt_len, y.scrt_len, "{label} sat {}", x.sat);
+        assert_eq!(x.evictions, y.evictions, "{label} sat {}", x.sat);
+    }
+    assert_eq!(a.tasks.len(), b.tasks.len(), "{label}");
+    for (x, y) in a.tasks.iter().zip(&b.tasks) {
+        assert_eq!(x.task_id, y.task_id, "{label}");
+        assert_eq!(x.sat, y.sat, "{label} task {}", x.task_id);
+        assert_eq!(x.start, y.start, "{label} task {}", x.task_id);
+        assert_eq!(x.completion, y.completion, "{label} task {}", x.task_id);
+        assert_eq!(x.reused, y.reused, "{label} task {}", x.task_id);
+        assert_eq!(x.correct, y.correct, "{label} task {}", x.task_id);
+        assert_eq!(x.ssim, y.ssim, "{label} task {}", x.task_id);
+        assert_eq!(
+            x.reused_from_sat, y.reused_from_sat,
+            "{label} task {}",
+            x.task_id
+        );
+    }
+}
+
 // ---------------------------------------------------------------------------
 // SCRT invariants
 // ---------------------------------------------------------------------------
@@ -584,7 +693,7 @@ fn prop_indexed_scrt_matches_naive_reference() {
                     let b = rng.below(num_buckets) as u32;
                     let now = rng.f64() * 1e3;
                     assert_eq!(
-                        real.merge_broadcast(b, r.clone(), now),
+                        real.merge_broadcast(b, &r, now),
                         model.merge_broadcast(b, r, now),
                         "seed {seed} step {step}: merge"
                     );
