@@ -40,6 +40,104 @@ pub struct CommConfig {
     pub record_input_bytes: f64,
     /// Record output payload `R_t`, bytes (a label + metadata).
     pub record_output_bytes: f64,
+    /// Per-chunk-attempt loss probability on the last ISL hop (0 = ideal
+    /// links, the paper's assumption and the default).
+    pub loss_prob: f64,
+    /// Per-chunk-attempt corruption probability. A corrupted chunk is
+    /// detected at the receiver and retransmitted exactly like a lost one;
+    /// it differs only in still occupying the link.
+    pub corrupt_prob: f64,
+    /// Hard cap on any single ISL's throughput, bits/s. `INFINITY` (the
+    /// default) leaves the link-budget rate (eq. 1) uncapped.
+    pub link_bandwidth_bps: f64,
+    /// Transfer chunk size, bytes. Records larger than this are split into
+    /// ceil(record/chunk) content-addressed chunks. `INFINITY` (the
+    /// default) sends each record as a single chunk — the legacy model.
+    pub chunk_bytes: f64,
+    /// Retransmission attempts after the first try before a chunk is
+    /// dropped for good.
+    pub max_retries: usize,
+    /// Multiplicative backoff applied to the retransmission delay per
+    /// failed attempt (>= 1).
+    pub retry_backoff: f64,
+}
+
+impl CommConfig {
+    /// `true` when any fault-model knob departs from the ideal-link
+    /// defaults. The engines take the legacy (byte-for-byte identical)
+    /// broadcast path when this is `false`, so loss = 0 runs reproduce
+    /// pre-fault-model reports exactly.
+    pub fn faults_active(&self) -> bool {
+        self.loss_prob != 0.0
+            || self.corrupt_prob != 0.0
+            || self.link_bandwidth_bps.is_finite()
+            || self.chunk_bytes.is_finite()
+    }
+
+    /// Validate the fault-model knobs, returning a message naming the
+    /// offending value. Called by the engines (wrapped as
+    /// `Error::Simulation`, beside the degenerate-lookahead rejection)
+    /// rather than by `SimConfig::validate` — a nonsensical fault model is
+    /// a property of the *simulation* the engines refuse to run, exactly
+    /// like a lookahead the conservative window could never cross.
+    pub fn fault_check(&self) -> std::result::Result<(), String> {
+        let p = self.loss_prob;
+        if !(p.is_finite() && (0.0..1.0).contains(&p)) {
+            return Err(format!(
+                "loss_prob={p} out of range: per-attempt loss probability \
+                 must lie in [0, 1) — at 1.0 no chunk could ever arrive"
+            ));
+        }
+        let c = self.corrupt_prob;
+        if !(c.is_finite() && (0.0..1.0).contains(&c)) {
+            return Err(format!(
+                "corrupt_prob={c} out of range: per-attempt corruption \
+                 probability must lie in [0, 1)"
+            ));
+        }
+        if p + c >= 1.0 {
+            return Err(format!(
+                "loss_prob={p} + corrupt_prob={c} >= 1: every attempt \
+                 would fail, so no chunk could ever arrive"
+            ));
+        }
+        let bw = self.link_bandwidth_bps;
+        if bw.is_nan() || bw <= 0.0 {
+            return Err(format!(
+                "link_bandwidth_bps={bw} out of range: the per-link \
+                 bandwidth cap must be positive (INFINITY = uncapped)"
+            ));
+        }
+        let ch = self.chunk_bytes;
+        if ch.is_nan() || ch <= 0.0 {
+            return Err(format!(
+                "chunk_bytes={ch} out of range: the transfer chunk size \
+                 must be positive (INFINITY = one chunk per record)"
+            ));
+        }
+        let record = self.record_input_bytes + self.record_output_bytes;
+        if ch.is_finite() && record / ch > 65_536.0 {
+            return Err(format!(
+                "chunk_bytes={ch} splits a {record}-byte record into more \
+                 than 65536 chunks — raise the chunk size"
+            ));
+        }
+        if self.max_retries > 64 {
+            return Err(format!(
+                "max_retries={} out of range: more than 64 retransmission \
+                 attempts per chunk is never useful",
+                self.max_retries
+            ));
+        }
+        let bo = self.retry_backoff;
+        if !(bo.is_finite() && bo >= 1.0) {
+            return Err(format!(
+                "retry_backoff={bo} out of range: the retransmission \
+                 backoff factor must be finite and >= 1"
+            ));
+        }
+        Ok(())
+    }
 }
 
 /// Analytic on-board computation cost model (eqs. 6–8).
@@ -140,6 +238,12 @@ impl SimConfig {
                 // 12 817 MB over 625 images ≈ 20.5 MB per record input.
                 record_input_bytes: 12_817.0e6 / 625.0,
                 record_output_bytes: 1024.0,
+                loss_prob: 0.0,
+                corrupt_prob: 0.0,
+                link_bandwidth_bps: f64::INFINITY,
+                chunk_bytes: f64::INFINITY,
+                max_retries: 3,
+                retry_backoff: 1.5,
             },
             compute: ComputeConfig {
                 capability_flops: 3e9, // Table I: 3 GHz
@@ -299,6 +403,14 @@ impl SimConfig {
             ("comm", "record_output_bytes") => {
                 self.comm.record_output_bytes = v.as_f64()?
             }
+            ("comm", "loss_prob") => self.comm.loss_prob = v.as_f64()?,
+            ("comm", "corrupt_prob") => self.comm.corrupt_prob = v.as_f64()?,
+            ("comm", "link_bandwidth_bps") => {
+                self.comm.link_bandwidth_bps = v.as_f64()?
+            }
+            ("comm", "chunk_bytes") => self.comm.chunk_bytes = v.as_f64()?,
+            ("comm", "max_retries") => self.comm.max_retries = v.as_usize()?,
+            ("comm", "retry_backoff") => self.comm.retry_backoff = v.as_f64()?,
             ("compute", "capability_flops") => {
                 self.compute.capability_flops = v.as_f64()?
             }
@@ -429,6 +541,108 @@ mod tests {
         let err = c.validate().unwrap_err().to_string();
         assert!(err.contains("th_co=-0.25"), "negative value reported: {err}");
         assert!(err.contains("[0, 1]"), "range reported: {err}");
+    }
+
+    #[test]
+    fn paper_default_has_ideal_links() {
+        // The fault model must be off by default: loss = 0 runs take the
+        // legacy broadcast path and reproduce existing goldens.
+        let c = SimConfig::paper_default(5);
+        assert!(!c.comm.faults_active());
+        c.comm.fault_check().unwrap();
+    }
+
+    #[test]
+    fn faults_active_detects_each_knob() {
+        let base = SimConfig::paper_default(5);
+        let mut c = base.clone();
+        c.comm.loss_prob = 0.1;
+        assert!(c.comm.faults_active());
+        let mut c = base.clone();
+        c.comm.corrupt_prob = 0.05;
+        assert!(c.comm.faults_active());
+        let mut c = base.clone();
+        c.comm.link_bandwidth_bps = 1e8;
+        assert!(c.comm.faults_active());
+        let mut c = base.clone();
+        c.comm.chunk_bytes = 1e6;
+        assert!(c.comm.faults_active());
+        // A negative loss must still route into the checker.
+        let mut c = base;
+        c.comm.loss_prob = -0.5;
+        assert!(c.comm.faults_active());
+        assert!(c.comm.fault_check().is_err());
+    }
+
+    #[test]
+    fn fault_check_names_each_bad_value() {
+        let base = SimConfig::paper_default(5);
+
+        let mut c = base.clone();
+        c.comm.loss_prob = 1.0;
+        let err = c.comm.fault_check().unwrap_err();
+        assert!(err.contains("loss_prob=1"), "value named: {err}");
+        assert!(err.contains("[0, 1)"), "range named: {err}");
+
+        let mut c = base.clone();
+        c.comm.corrupt_prob = 1.25;
+        let err = c.comm.fault_check().unwrap_err();
+        assert!(err.contains("corrupt_prob=1.25"), "value named: {err}");
+
+        let mut c = base.clone();
+        c.comm.loss_prob = 0.6;
+        c.comm.corrupt_prob = 0.5;
+        let err = c.comm.fault_check().unwrap_err();
+        assert!(err.contains("0.6") && err.contains("0.5"), "{err}");
+
+        let mut c = base.clone();
+        c.comm.link_bandwidth_bps = 0.0;
+        let err = c.comm.fault_check().unwrap_err();
+        assert!(err.contains("link_bandwidth_bps=0"), "value named: {err}");
+        c.comm.link_bandwidth_bps = -5.0;
+        let err = c.comm.fault_check().unwrap_err();
+        assert!(err.contains("link_bandwidth_bps=-5"), "value named: {err}");
+
+        let mut c = base.clone();
+        c.comm.chunk_bytes = 0.0;
+        let err = c.comm.fault_check().unwrap_err();
+        assert!(err.contains("chunk_bytes=0"), "value named: {err}");
+
+        let mut c = base.clone();
+        c.comm.chunk_bytes = 1.0; // ~20.5M chunks per record
+        let err = c.comm.fault_check().unwrap_err();
+        assert!(err.contains("65536"), "chunk-count guard named: {err}");
+
+        let mut c = base.clone();
+        c.comm.max_retries = 1000;
+        let err = c.comm.fault_check().unwrap_err();
+        assert!(err.contains("max_retries=1000"), "value named: {err}");
+
+        let mut c = base;
+        c.comm.retry_backoff = 0.5;
+        let err = c.comm.fault_check().unwrap_err();
+        assert!(err.contains("retry_backoff=0.5"), "value named: {err}");
+    }
+
+    #[test]
+    fn toml_accepts_fault_model_keys() {
+        let text = r#"
+[comm]
+loss_prob = 0.2
+corrupt_prob = 0.01
+link_bandwidth_bps = 5e7
+chunk_bytes = 4e6
+max_retries = 5
+retry_backoff = 2.0
+"#;
+        let c = SimConfig::from_toml_str(text).unwrap();
+        assert_eq!(c.comm.loss_prob, 0.2);
+        assert_eq!(c.comm.corrupt_prob, 0.01);
+        assert_eq!(c.comm.link_bandwidth_bps, 5e7);
+        assert_eq!(c.comm.chunk_bytes, 4e6);
+        assert_eq!(c.comm.max_retries, 5);
+        assert_eq!(c.comm.retry_backoff, 2.0);
+        assert!(c.comm.faults_active());
     }
 
     #[test]

@@ -277,6 +277,22 @@ pub fn run_suite(opts: &HotpathOpts) -> Result<Bencher> {
             .unwrap();
         black_box(r.total_tasks);
     });
+    // Same fixture over lossy, chunked ISLs (20% chunk loss, ~5 MB
+    // chunks): the cost of plan-time fault resolution — per-chunk fate
+    // draws, retransmission scheduling, possession-cache dedup — on top
+    // of the ideal-link event loop above.
+    let mut lossy = mid.clone();
+    lossy.comm.loss_prob = 0.2;
+    lossy.comm.chunk_bytes = 5e6;
+    b.bench("event_loop_5x5_125_lossy", || {
+        let r = Simulation::new(&lossy, &backend5, Scenario::Sccr)
+            .aggregate_only()
+            .with_workload(&wl5)
+            .with_prepared(&prep5)
+            .run()
+            .unwrap();
+        black_box(r.total_tasks);
+    });
 
     // ---- extended grids (11×11, 15×15), one timed pass each -------------
     if opts.scale {
@@ -485,6 +501,7 @@ mod tests {
             "event_loop_3x3_45",
             "event_loop_5x5_125",
             "event_loop_5x5_125_t4",
+            "event_loop_5x5_125_lossy",
         ] {
             assert!(names.contains(&expect), "missing bench '{expect}'");
         }

@@ -73,6 +73,11 @@ COMMON OPTIONS:
     --artifacts <DIR>    artifacts directory (default: artifacts)
     --seed <SEED>        workload seed override
     --tasks <T>          total task count override
+    --loss <P>           per-chunk ISL loss probability in [0,1) (default 0)
+    --corrupt <P>        per-chunk corruption probability in [0,1) (default 0)
+    --link-bandwidth <B> per-link bandwidth cap in bits/s (default uncapped)
+    --chunk-bytes <C>    transfer chunk size in bytes (default whole-record)
+    --max-retries <R>    retransmission attempts per chunk (default 3)
     --json               emit machine-readable JSON instead of text
     --csv                emit CSV (reproduce/sweep)
     --help               this help
@@ -201,6 +206,24 @@ fn load_config(flags: &Flags) -> Result<SimConfig> {
     }
     if let Some(tasks) = flags.parse_usize("tasks")? {
         cfg.workload.total_tasks = tasks;
+    }
+    // ISL fault-model overrides (see `CommConfig`): these switch the
+    // simulation onto the lossy chunked-transfer path when any of them
+    // makes `faults_active()` true.
+    if let Some(loss) = flags.parse_f64("loss")? {
+        cfg.comm.loss_prob = loss;
+    }
+    if let Some(corrupt) = flags.parse_f64("corrupt")? {
+        cfg.comm.corrupt_prob = corrupt;
+    }
+    if let Some(bw) = flags.parse_f64("link-bandwidth")? {
+        cfg.comm.link_bandwidth_bps = bw;
+    }
+    if let Some(chunk) = flags.parse_f64("chunk-bytes")? {
+        cfg.comm.chunk_bytes = chunk;
+    }
+    if let Some(retries) = flags.parse_usize("max-retries")? {
+        cfg.comm.max_retries = retries;
     }
     cfg.validate()?;
     Ok(cfg)

@@ -24,6 +24,29 @@ use crate::coordinator::Scenario;
 use crate::util::json::Json;
 use crate::util::stats;
 
+/// Run-wide communication / collaboration counters, accumulated by every
+/// engine flavour and folded into the [`RunReport`] at finish time.
+/// Previously six positional scalars threaded through
+/// `MetricsAccum::finish`; the struct keeps the three engines' call sites
+/// in lockstep now that the lossy link layer adds three more.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunCounters {
+    /// Bytes put on ISLs (criterion 5 numerator).
+    pub transfer_bytes: f64,
+    /// Link airtime Ψ, seconds (eq. 5).
+    pub comm_seconds: f64,
+    pub collab_events: usize,
+    pub expanded_events: usize,
+    pub aborted_collabs: usize,
+    pub broadcast_records: usize,
+    /// Chunk attempts retransmitted after loss/corruption.
+    pub retransmits: u64,
+    /// Chunks abandoned after retry exhaustion.
+    pub dropped_chunks: u64,
+    /// Bytes saved by content-id dedup (chunks the holder already had).
+    pub dedup_saved_bytes: f64,
+}
+
 /// Per-satellite summary at the end of a run.
 #[derive(Clone, Debug)]
 pub struct SatSummary {
@@ -102,6 +125,12 @@ pub struct RunReport {
     pub expanded_events: usize,
     pub aborted_collabs: usize,
     pub broadcast_records: usize,
+    /// Chunk attempts retransmitted after loss/corruption (0 on ideal links).
+    pub retransmits: u64,
+    /// Chunks abandoned after retry exhaustion (0 on ideal links).
+    pub dropped_chunks: u64,
+    /// MB *not* re-sent thanks to content-id chunk dedup.
+    pub dedup_saved_mb: f64,
     pub mean_latency: f64,
     pub p95_latency: f64,
     pub per_satellite: Vec<SatSummary>,
@@ -154,6 +183,9 @@ impl RunReport {
             ("expanded_events", Json::num(self.expanded_events as f64)),
             ("aborted_collabs", Json::num(self.aborted_collabs as f64)),
             ("broadcast_records", Json::num(self.broadcast_records as f64)),
+            ("retransmits", Json::num(self.retransmits as f64)),
+            ("dropped_chunks", Json::num(self.dropped_chunks as f64)),
+            ("dedup_saved_mb", Json::num(self.dedup_saved_mb)),
             ("mean_latency_s", Json::num(self.mean_latency)),
             ("p95_latency_s", Json::num(self.p95_latency)),
             ("wallclock_s", Json::num(self.wallclock_s)),
@@ -251,22 +283,17 @@ impl MetricsAccum {
     }
 
     /// Close the accumulator into a full [`RunReport`].
-    #[allow(clippy::too_many_arguments)]
     pub fn finish(
         self,
         scenario: Scenario,
         n: usize,
         per_satellite: Vec<SatSummary>,
         alpha: f64,
-        comm_seconds: f64,
-        data_transfer_bytes: f64,
-        collab_events: usize,
-        expanded_events: usize,
-        aborted_collabs: usize,
-        broadcast_records: usize,
+        counters: &RunCounters,
         wallclock_s: f64,
     ) -> RunReport {
-        let completion_time = alpha * comm_seconds + self.compute_seconds;
+        let completion_time =
+            alpha * counters.comm_seconds + self.compute_seconds;
         let occupancies: Vec<f64> = per_satellite
             .iter()
             .filter(|s| s.tasks > 0)
@@ -277,7 +304,7 @@ impl MetricsAccum {
             n,
             completion_time,
             compute_seconds: self.compute_seconds,
-            comm_seconds,
+            comm_seconds: counters.comm_seconds,
             makespan: self.makespan,
             reuse_rate: if self.total == 0 {
                 0.0
@@ -290,17 +317,20 @@ impl MetricsAccum {
             } else {
                 self.reused_correct as f64 / self.reused as f64
             },
-            data_transfer_mb: data_transfer_bytes / 1e6,
+            data_transfer_mb: counters.transfer_bytes / 1e6,
             total_tasks: self.total,
             reused_tasks: self.reused,
             cross_scene_reuses: self.cross_scene_reuses,
             foreign_reuses: self.foreign_reuses,
             errors_same_scene: self.errors_same_scene,
             errors_cross_scene: self.errors_cross_scene,
-            collab_events,
-            expanded_events,
-            aborted_collabs,
-            broadcast_records,
+            collab_events: counters.collab_events,
+            expanded_events: counters.expanded_events,
+            aborted_collabs: counters.aborted_collabs,
+            broadcast_records: counters.broadcast_records,
+            retransmits: counters.retransmits,
+            dropped_chunks: counters.dropped_chunks,
+            dedup_saved_mb: counters.dedup_saved_bytes / 1e6,
             mean_latency: stats::mean(&self.latencies),
             p95_latency: stats::percentile(&self.latencies, 95.0),
             per_satellite,
@@ -365,38 +395,20 @@ pub fn fold_sharded(keep_logs: bool, shard_logs: Vec<Vec<TaskLog>>) -> MetricsAc
 /// Build the aggregate numbers from raw logs; shared by the simulator's
 /// reference path. One [`MetricsAccum`] fold in log order — by definition
 /// identical to the engine's incremental accumulation.
-#[allow(clippy::too_many_arguments)]
 pub fn aggregate(
     scenario: Scenario,
     n: usize,
     tasks: Vec<TaskLog>,
     per_satellite: Vec<SatSummary>,
     alpha: f64,
-    comm_seconds: f64,
-    data_transfer_bytes: f64,
-    collab_events: usize,
-    expanded_events: usize,
-    aborted_collabs: usize,
-    broadcast_records: usize,
+    counters: &RunCounters,
     wallclock_s: f64,
 ) -> RunReport {
     let mut acc = MetricsAccum::new(true);
     for t in tasks {
         acc.record(t);
     }
-    acc.finish(
-        scenario,
-        n,
-        per_satellite,
-        alpha,
-        comm_seconds,
-        data_transfer_bytes,
-        collab_events,
-        expanded_events,
-        aborted_collabs,
-        broadcast_records,
-        wallclock_s,
-    )
+    acc.finish(scenario, n, per_satellite, alpha, counters, wallclock_s)
 }
 
 /// Render a paper-style markdown table: rows = network scale, columns =
@@ -517,6 +529,25 @@ mod tests {
         }
     }
 
+    fn mk_counters(
+        comm_seconds: f64,
+        transfer_bytes: f64,
+        collab_events: usize,
+        expanded_events: usize,
+        aborted_collabs: usize,
+        broadcast_records: usize,
+    ) -> RunCounters {
+        RunCounters {
+            transfer_bytes,
+            comm_seconds,
+            collab_events,
+            expanded_events,
+            aborted_collabs,
+            broadcast_records,
+            ..RunCounters::default()
+        }
+    }
+
     #[test]
     fn aggregate_computes_criteria() {
         let tasks = vec![
@@ -526,20 +557,8 @@ mod tests {
             mk_task(3, false, true, 4.0),
         ];
         let sats = vec![mk_sat(4, 0.5), mk_sat(0, 0.0)];
-        let r = aggregate(
-            Scenario::Sccr,
-            5,
-            tasks,
-            sats,
-            1.0,
-            2.5,
-            20.5e6,
-            3,
-            1,
-            0,
-            33,
-            0.1,
-        );
+        let counters = mk_counters(2.5, 20.5e6, 3, 1, 0, 33);
+        let r = aggregate(Scenario::Sccr, 5, tasks, sats, 1.0, &counters, 0.1);
         assert_eq!(r.makespan, 5.0);
         // sigma = alpha*comm + total service; service = completion - start
         assert!((r.completion_time - (2.5 + 12.0)).abs() < 1e-9);
@@ -548,6 +567,37 @@ mod tests {
         assert_eq!(r.cpu_occupancy, 0.5, "idle satellites excluded");
         assert!((r.data_transfer_mb - 20.5).abs() < 1e-9);
         assert_eq!(r.collab_events, 3);
+        assert_eq!(r.retransmits, 0);
+        assert_eq!(r.dropped_chunks, 0);
+        assert_eq!(r.dedup_saved_mb, 0.0);
+    }
+
+    #[test]
+    fn fault_counters_flow_into_the_report_and_json() {
+        let counters = RunCounters {
+            transfer_bytes: 2e6,
+            comm_seconds: 1.0,
+            retransmits: 7,
+            dropped_chunks: 2,
+            dedup_saved_bytes: 3.5e6,
+            ..RunCounters::default()
+        };
+        let r = aggregate(
+            Scenario::Sccr,
+            5,
+            vec![mk_task(0, false, true, 1.0)],
+            vec![mk_sat(1, 0.5)],
+            1.0,
+            &counters,
+            0.0,
+        );
+        assert_eq!(r.retransmits, 7);
+        assert_eq!(r.dropped_chunks, 2);
+        assert!((r.dedup_saved_mb - 3.5).abs() < 1e-12);
+        let json = r.to_json().to_string_pretty();
+        assert!(json.contains("\"retransmits\""));
+        assert!(json.contains("\"dropped_chunks\""));
+        assert!(json.contains("\"dedup_saved_mb\""));
     }
 
     #[test]
@@ -559,37 +609,21 @@ mod tests {
             mk_task(3, false, true, 4.0),
         ];
         let sats = vec![mk_sat(4, 0.5), mk_sat(0, 0.0)];
+        let counters = mk_counters(2.5, 20.5e6, 3, 1, 0, 33);
         let batch = aggregate(
             Scenario::Sccr,
             5,
             tasks.clone(),
             sats.clone(),
             1.0,
-            2.5,
-            20.5e6,
-            3,
-            1,
-            0,
-            33,
+            &counters,
             0.1,
         );
         let mut acc = MetricsAccum::new(false);
         for t in tasks {
             acc.record(t);
         }
-        let slim = acc.finish(
-            Scenario::Sccr,
-            5,
-            sats,
-            1.0,
-            2.5,
-            20.5e6,
-            3,
-            1,
-            0,
-            33,
-            0.1,
-        );
+        let slim = acc.finish(Scenario::Sccr, 5, sats, 1.0, &counters, 0.1);
         assert_eq!(slim.completion_time, batch.completion_time);
         assert_eq!(slim.compute_seconds, batch.compute_seconds);
         assert_eq!(slim.makespan, batch.makespan);
@@ -655,12 +689,7 @@ mod tests {
             tasks,
             vec![mk_sat(1, 0.9)],
             1.0,
-            0.0,
-            0.0,
-            0,
-            0,
-            0,
-            0,
+            &RunCounters::default(),
             0.0,
         );
         assert_eq!(r.reuse_accuracy, 1.0);
@@ -676,12 +705,7 @@ mod tests {
             tasks,
             vec![mk_sat(1, 0.4)],
             1.0,
-            0.0,
-            0.0,
-            0,
-            0,
-            0,
-            0,
+            &RunCounters::default(),
             0.0,
         );
         let table = scale_scenario_table("Reuse accuracy", &[r], |r| {
@@ -696,18 +720,14 @@ mod tests {
     #[test]
     fn csv_has_header_and_rows() {
         let tasks = vec![mk_task(0, true, true, 2.0)];
+        let counters = mk_counters(0.1, 1e6, 1, 0, 0, 5);
         let r = aggregate(
             Scenario::Sccr,
             7,
             tasks,
             vec![mk_sat(1, 0.2)],
             1.0,
-            0.1,
-            1e6,
-            1,
-            0,
-            0,
-            5,
+            &counters,
             0.0,
         );
         let csv = reports_to_csv(&[r]);

@@ -10,8 +10,11 @@
 //! broadcasts propagate hop-by-hop; the data-transfer volume criterion
 //! counts every byte crossing every link.
 
+use std::collections::HashMap;
+
 use crate::config::{CommConfig, NetworkConfig};
 use crate::network::topology::GridTopology;
+use crate::util::rng::hash_unit;
 use crate::workload::SatId;
 
 /// Boltzmann constant, J/K.
@@ -42,6 +45,96 @@ impl BroadcastPlan {
     pub fn completion_offset(&self, records: usize) -> f64 {
         let max_depth = self.arrivals.iter().map(|&(_, d)| d).max().unwrap_or(0);
         self.arrival_offset(records.saturating_sub(1), max_depth)
+    }
+}
+
+/// One scheduled chunk arrival of a lossy broadcast.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkDelivery {
+    pub time: f64,
+    pub dst: SatId,
+    /// Index into the broadcast's record list (plan order).
+    pub rec_slot: usize,
+    pub chunk_seq: usize,
+    pub total_chunks: usize,
+}
+
+/// One scheduled retransmission timeout (a lost or corrupted attempt
+/// detected at the sender). `dropped` marks the final attempt: the chunk
+/// is abandoned and its record stays incomplete at that destination.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkTimeout {
+    pub time: f64,
+    pub src: SatId,
+    pub dropped: bool,
+}
+
+/// A fully resolved lossy broadcast (see
+/// [`CommModel::plan_lossy_broadcast`]): every chunk fate, retransmission
+/// and queueing delay is decided at plan time, so replaying the schedule
+/// is engine-independent by construction.
+#[derive(Clone, Debug)]
+pub struct LossyPlan {
+    /// Bytes actually put on ingest links (every attempt pays).
+    pub bytes: f64,
+    /// Link airtime Ψ contribution, seconds (every attempt pays).
+    pub airtime_s: f64,
+    pub deliveries: Vec<ChunkDelivery>,
+    pub timeouts: Vec<ChunkTimeout>,
+    pub retransmits: u64,
+    pub dropped_chunks: u64,
+    /// Bytes *not* re-sent because the destination already held the chunk
+    /// from an earlier broadcast (content-id dedup).
+    pub dedup_saved_bytes: f64,
+    /// When the network falls quiet: the latest scheduled delivery or
+    /// timeout (`now` if every chunk deduped away).
+    pub quiet_until: f64,
+}
+
+/// Shared transfer-cache + link-contention state threaded through every
+/// lossy broadcast of a run.
+///
+/// * `possession` is a content-addressed cache keyed by `(holder,
+///   record id)`: the earliest scheduled arrival of each chunk at each
+///   satellite. It never forgets — SCRT eviction is a *compute*-side
+///   policy, while possession models the transfer layer's knowledge of
+///   which bytes already crossed which link. A record evicted and
+///   re-broadcast therefore re-pays only chunks the holder never
+///   received, which is also what makes resume-after-drop work: the
+///   delivered prefix of a partially dropped record is skipped by the
+///   next broadcast and only the missing chunks are re-sent.
+/// * `busy_until` is each satellite's ingest-link FIFO horizon —
+///   concurrent broadcasts contend for it in resolution order.
+///
+/// Chunk fates are *not* drawn from this state: they come from the pure
+/// counter-hash [`hash_unit`] keyed by `(seed, transfer, dst, chunk,
+/// attempt)`, so no draw depends on event interleaving. Maps are only
+/// ever indexed by key (never iterated), keeping the plan deterministic.
+#[derive(Clone, Debug)]
+pub struct LinkState {
+    seed: u64,
+    next_transfer: u64,
+    possession: HashMap<(SatId, usize), Vec<f64>>,
+    busy_until: HashMap<SatId, f64>,
+}
+
+impl LinkState {
+    pub fn new(seed: u64) -> Self {
+        LinkState {
+            seed,
+            next_transfer: 0,
+            possession: HashMap::new(),
+            busy_until: HashMap::new(),
+        }
+    }
+
+    /// Does `sat` hold chunk `chunk` of `record_id` at virtual time `t`
+    /// (i.e. its scheduled arrival is no later than `t`)?
+    pub fn holds(&self, sat: SatId, record_id: usize, chunk: usize, t: f64) -> bool {
+        self.possession
+            .get(&(sat, record_id))
+            .and_then(|v| v.get(chunk))
+            .is_some_and(|&arr| arr <= t)
     }
 }
 
@@ -115,19 +208,58 @@ impl CommModel {
         bytes * 8.0 / self.intra_rate_bps
     }
 
-    /// Conservative broadcast lookahead: the time one shared record needs
-    /// to cross the *fastest* ISL hop. Every [`BroadcastPlan`] delivery
-    /// lands at `(k + depth) · bottleneck` past its collaboration instant
-    /// with `depth ≥ 1` and `bottleneck` the slowest of the plan's edge
-    /// times — both edge kinds are bounded below by this value — so no
-    /// broadcast scheduled at virtual time `t` can reach any satellite
-    /// before `t + min_hop_seconds()`. That bound is exactly the window a
-    /// sharded conservative event engine may process without cross-shard
-    /// exchange. Degenerate configs (zero-byte records, non-finite link
-    /// rates) make this zero/NaN; the sharded engine rejects those.
+    /// Intra-plane rate with the per-link bandwidth cap applied.
+    /// `x.min(INFINITY)` is exactly `x`, so an uncapped config reproduces
+    /// the raw link-budget rate bit-for-bit.
+    #[inline]
+    fn eff_intra_rate_bps(&self) -> f64 {
+        self.intra_rate_bps.min(self.cfg.link_bandwidth_bps)
+    }
+
+    /// Inter-plane rate with the per-link bandwidth cap applied.
+    #[inline]
+    fn eff_inter_rate_bps(&self) -> f64 {
+        self.inter_rate_bps.min(self.cfg.link_bandwidth_bps)
+    }
+
+    /// Wire size of one transfer chunk: the configured chunk size clamped
+    /// to the record payload (`INFINITY` chunking = whole-record chunks,
+    /// the legacy model — the clamp makes that exact, not approximate).
+    /// Every chunk, including a partial tail, occupies a full chunk slot
+    /// on the wire; the padding is what keeps the per-chunk hop time a
+    /// uniform lower-boundable quantity (see [`Self::min_hop_seconds`]).
+    pub fn chunk_bytes_effective(&self) -> f64 {
+        self.cfg.chunk_bytes.min(self.record_bytes())
+    }
+
+    /// Chunks per shared record.
+    pub fn chunks_per_record(&self) -> usize {
+        let eff = self.chunk_bytes_effective();
+        if eff > 0.0 {
+            (self.record_bytes() / eff).ceil().max(1.0) as usize
+        } else {
+            1 // zero-byte records: degenerate, rejected by the sharded engine
+        }
+    }
+
+    /// Conservative broadcast lookahead: the time one transfer chunk needs
+    /// to cross the *fastest* (bandwidth-capped) ISL hop. Every delivery
+    /// and retransmission timeout of either plan flavour is scheduled at
+    /// least one last-hop chunk transmission past its collaboration
+    /// instant, and that transmission time is one of the two operands of
+    /// this `min` — so no scheduled event of a broadcast resolved at
+    /// virtual time `t` can land before `t + min_hop_seconds()`, and the
+    /// bound survives retransmission (later attempts only push times
+    /// further out). That is exactly the window a sharded conservative
+    /// event engine may process without cross-shard exchange. With the
+    /// fault model off this reduces bit-for-bit to the pre-fault value
+    /// (`record_bytes` over the raw rates): `chunk.min(INFINITY)` and
+    /// `rate.min(INFINITY)` are exact identities. Degenerate configs
+    /// (zero-byte records, non-finite link rates) make this zero/NaN; the
+    /// sharded engine rejects those.
     pub fn min_hop_seconds(&self) -> f64 {
-        let bits = self.record_bytes() * 8.0;
-        (bits / self.intra_rate_bps).min(bits / self.inter_rate_bps)
+        let bits = self.chunk_bytes_effective() * 8.0;
+        (bits / self.eff_intra_rate_bps()).min(bits / self.eff_inter_rate_bps())
     }
 
     /// Seconds to deliver `records` records from `src` to `dst` hop-by-hop
@@ -199,6 +331,150 @@ impl CommModel {
             bottleneck_s: bottleneck,
             arrivals,
         }
+    }
+
+    /// Plan a broadcast over lossy, bandwidth-contended links: the
+    /// chunked, loss/corruption/retransmission-aware sibling of
+    /// [`Self::plan_broadcast`].
+    ///
+    /// The entire transfer is resolved *now*, at the collaboration
+    /// instant: per-destination ingest-queue contention, every chunk's
+    /// loss/corruption fate (pure counter-hash draws keyed by the draw's
+    /// identity, not by generator state), bounded retries with
+    /// multiplicative backoff, and content-id dedup against the
+    /// possession cache. The output is a fixed schedule of chunk
+    /// deliveries and retransmission timeouts. Because collaboration
+    /// instants resolve in an identical global order in the
+    /// single-threaded and sharded engines (the Phase-2 gate ordering),
+    /// and nothing here reads other mutable simulation state, the
+    /// schedule — and hence the whole run — is engine-independent by
+    /// construction.
+    ///
+    /// Upstream relay hops are folded into each chunk's ready time via
+    /// the pipelined bottleneck (the legacy `(k + depth) · bottleneck`
+    /// shape, at chunk granularity); loss and contention are modelled on
+    /// the last hop into each member, whose ingest link is the resource
+    /// concurrent broadcasts fight over.
+    pub fn plan_lossy_broadcast(
+        &self,
+        topo: &GridTopology,
+        link: &mut LinkState,
+        src: SatId,
+        area: &[SatId],
+        record_ids: &[usize],
+        now: f64,
+    ) -> LossyPlan {
+        let chunk = self.chunk_bytes_effective();
+        let chunk_bits = chunk * 8.0;
+        let t_intra = chunk_bits / self.eff_intra_rate_bps();
+        let t_inter = chunk_bits / self.eff_inter_rate_bps();
+        let total_chunks = self.chunks_per_record();
+        let loss = self.cfg.loss_prob;
+        let fail_p = loss + (1.0 - loss) * self.cfg.corrupt_prob;
+        let LinkState {
+            seed,
+            next_transfer,
+            possession,
+            busy_until,
+        } = link;
+        let transfer = *next_transfer;
+        *next_transfer += 1;
+
+        // Member edges + pipelining bottleneck, as in `plan_broadcast`.
+        let (so, ss) = topo.coords(src);
+        let mut members = Vec::with_capacity(area.len());
+        let mut bottleneck: f64 = 0.0;
+        for &m in area {
+            if m == src {
+                continue;
+            }
+            let depth = topo.hops(src, m);
+            let (mo, ms) = topo.coords(m);
+            let last_hop_inter = if ms != ss { false } else { mo != so };
+            let t_edge = if last_hop_inter { t_inter } else { t_intra };
+            bottleneck = bottleneck.max(t_edge);
+            members.push((m, depth, t_edge));
+        }
+
+        let mut plan = LossyPlan {
+            bytes: 0.0,
+            airtime_s: 0.0,
+            deliveries: Vec::new(),
+            timeouts: Vec::new(),
+            retransmits: 0,
+            dropped_chunks: 0,
+            dedup_saved_bytes: 0.0,
+            quiet_until: now,
+        };
+        for &(dst, depth, t_edge) in &members {
+            let busy = busy_until.entry(dst).or_insert(0.0);
+            for (slot, &rid) in record_ids.iter().enumerate() {
+                let held = possession
+                    .entry((dst, rid))
+                    .or_insert_with(|| vec![f64::INFINITY; total_chunks]);
+                if held.len() < total_chunks {
+                    held.resize(total_chunks, f64::INFINITY);
+                }
+                for c in 0..total_chunks {
+                    let j = slot * total_chunks + c;
+                    if held[c] <= now {
+                        // Content-id dedup: the destination already holds
+                        // this chunk from an earlier broadcast.
+                        plan.dedup_saved_bytes += chunk;
+                        continue;
+                    }
+                    // Pipelined availability at the last-hop relay: global
+                    // chunk j clears depth-1 upstream hops after
+                    // (depth-1+j) bottleneck slots.
+                    let mut ready = now + (depth - 1 + j) as f64 * bottleneck;
+                    for attempt in 0..=self.cfg.max_retries {
+                        let start = ready.max(*busy);
+                        let arr = start + t_edge;
+                        *busy = arr;
+                        plan.bytes += chunk;
+                        plan.airtime_s += t_edge;
+                        plan.quiet_until = plan.quiet_until.max(arr);
+                        let u = hash_unit(
+                            *seed,
+                            transfer,
+                            dst as u64,
+                            j as u64,
+                            attempt as u64,
+                        );
+                        if u < fail_p {
+                            let dropped = attempt == self.cfg.max_retries;
+                            plan.timeouts.push(ChunkTimeout {
+                                time: arr,
+                                src,
+                                dropped,
+                            });
+                            if dropped {
+                                plan.dropped_chunks += 1;
+                            } else {
+                                plan.retransmits += 1;
+                                ready = arr
+                                    + t_edge
+                                        * self
+                                            .cfg
+                                            .retry_backoff
+                                            .powi(attempt as i32);
+                            }
+                        } else {
+                            plan.deliveries.push(ChunkDelivery {
+                                time: arr,
+                                dst,
+                                rec_slot: slot,
+                                chunk_seq: c,
+                                total_chunks,
+                            });
+                            held[c] = held[c].min(arr);
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        plan
     }
 
     /// Arrival time offset of the `k`-th record of a streamed broadcast at
@@ -382,5 +658,188 @@ mod tests {
         let (bytes, secs) = m.broadcast_cost(&topo, src, &[src], 7);
         assert_eq!(bytes, 0.0);
         assert_eq!(secs, 0.0);
+    }
+
+    /// A 5×5 model with the fault knobs set: ~20.5 MB records in 6 MB
+    /// chunks (4 chunks/record).
+    fn lossy_model(loss: f64, max_retries: usize) -> (GridTopology, CommModel) {
+        let mut cfg = SimConfig::paper_default(5);
+        cfg.comm.loss_prob = loss;
+        cfg.comm.chunk_bytes = 6e6;
+        cfg.comm.max_retries = max_retries;
+        (
+            GridTopology::new(5),
+            CommModel::new(&cfg.network, &cfg.comm),
+        )
+    }
+
+    #[test]
+    fn lossless_chunked_plan_covers_every_chunk() {
+        let (topo, m) = lossy_model(0.0, 3);
+        let mut link = LinkState::new(42);
+        let src = topo.sat_at(2, 2);
+        let area = topo.area(src, 1);
+        let ids = [10usize, 11];
+        let plan = m.plan_lossy_broadcast(&topo, &mut link, src, &area, &ids, 5.0);
+        let per_rec = m.chunks_per_record();
+        let receivers = area.len() - 1;
+        assert!(per_rec > 1, "6 MB chunks must split a ~20.5 MB record");
+        assert_eq!(plan.deliveries.len(), receivers * ids.len() * per_rec);
+        assert!(plan.timeouts.is_empty());
+        assert_eq!(plan.retransmits, 0);
+        assert_eq!(plan.dropped_chunks, 0);
+        assert_eq!(plan.dedup_saved_bytes, 0.0);
+        let expect_bytes =
+            (receivers * ids.len() * per_rec) as f64 * m.chunk_bytes_effective();
+        assert!((plan.bytes - expect_bytes).abs() < 1.0);
+        let lookahead = m.min_hop_seconds();
+        for d in &plan.deliveries {
+            assert!(d.time >= 5.0 + lookahead, "{} too early", d.time);
+            assert!(d.time <= plan.quiet_until);
+            assert_eq!(d.total_chunks, per_rec);
+        }
+    }
+
+    #[test]
+    fn every_lossy_event_lands_past_the_lookahead() {
+        let (topo, m) = lossy_model(0.3, 3);
+        let mut link = LinkState::new(7);
+        let src = topo.sat_at(0, 0);
+        let area = topo.area(src, 2);
+        let now = 123.25;
+        let plan =
+            m.plan_lossy_broadcast(&topo, &mut link, src, &area, &[0, 1, 2], now);
+        assert!(plan.retransmits > 0, "loss 0.3 over this many draws must fail some");
+        let lookahead = m.min_hop_seconds();
+        for d in &plan.deliveries {
+            assert!(d.time >= now + lookahead, "delivery {} < lookahead", d.time);
+        }
+        for t in &plan.timeouts {
+            assert!(t.time >= now + lookahead, "timeout {} < lookahead", t.time);
+            assert_eq!(t.src, src);
+        }
+        assert_eq!(
+            plan.timeouts.len() as u64,
+            plan.retransmits + plan.dropped_chunks
+        );
+    }
+
+    #[test]
+    fn dedup_skips_chunks_already_held() {
+        let (topo, m) = lossy_model(0.0, 3);
+        let mut link = LinkState::new(9);
+        let src = topo.sat_at(2, 2);
+        let area = topo.area(src, 1);
+        let first = m.plan_lossy_broadcast(&topo, &mut link, src, &area, &[3, 4], 0.0);
+        assert_eq!(first.dedup_saved_bytes, 0.0);
+
+        // In-flight chunks don't dedup: a second overlapping broadcast at
+        // the same instant re-sends record 3 in full (possession records
+        // *scheduled arrivals*, none of which have happened yet).
+        let mut inflight = link.clone();
+        let mid = m.plan_lossy_broadcast(&topo, &mut inflight, src, &area, &[3], 0.0);
+        assert_eq!(mid.dedup_saved_bytes, 0.0);
+        assert!(!mid.deliveries.is_empty());
+
+        // After the first transfer settles, records 3 and 4 are held
+        // everywhere: a broadcast of {3, 4, 5} moves only record 5.
+        let later = first.quiet_until + 1.0;
+        let second =
+            m.plan_lossy_broadcast(&topo, &mut link, src, &area, &[3, 4, 5], later);
+        let per_rec = m.chunks_per_record();
+        let receivers = area.len() - 1;
+        assert_eq!(second.deliveries.len(), receivers * per_rec);
+        assert!(second.deliveries.iter().all(|d| d.rec_slot == 2));
+        let saved = (receivers * 2 * per_rec) as f64 * m.chunk_bytes_effective();
+        assert!((second.dedup_saved_bytes - saved).abs() < 1.0);
+        for &mbr in &area {
+            if mbr == src {
+                continue;
+            }
+            assert!(link.holds(mbr, 3, 0, later));
+        }
+    }
+
+    #[test]
+    fn resume_resends_only_the_dropped_chunks() {
+        // First pass over heavily lossy links with no retries drops chunks
+        // mid-record; the next broadcast of the same record over clean
+        // links (same shared LinkState) resumes, re-sending exactly the
+        // missing chunks while the delivered prefix dedups away.
+        let mut cfg = SimConfig::paper_default(5);
+        cfg.comm.loss_prob = 0.6;
+        cfg.comm.chunk_bytes = 6e6;
+        cfg.comm.max_retries = 0;
+        let lossy = CommModel::new(&cfg.network, &cfg.comm);
+        cfg.comm.loss_prob = 0.0;
+        let clean = CommModel::new(&cfg.network, &cfg.comm);
+        let topo = GridTopology::new(5);
+        let mut link = LinkState::new(1);
+        let src = topo.sat_at(2, 2);
+        let area = topo.area(src, 1);
+        let first = lossy.plan_lossy_broadcast(&topo, &mut link, src, &area, &[8], 0.0);
+        assert!(first.dropped_chunks > 0, "loss 0.6 with no retries must drop");
+        assert_eq!(first.retransmits, 0);
+        assert!(first.timeouts.iter().all(|t| t.dropped));
+        let per_rec = lossy.chunks_per_record();
+        let receivers = area.len() - 1;
+        let delivered = first.deliveries.len();
+        assert!(delivered < receivers * per_rec);
+
+        let later = first.quiet_until + 1.0;
+        let second =
+            clean.plan_lossy_broadcast(&topo, &mut link, src, &area, &[8], later);
+        assert_eq!(second.deliveries.len(), receivers * per_rec - delivered);
+        let saved = delivered as f64 * clean.chunk_bytes_effective();
+        assert!((second.dedup_saved_bytes - saved).abs() < 1.0);
+        assert!(second.timeouts.is_empty());
+        for &mbr in &area {
+            if mbr == src {
+                continue;
+            }
+            for c in 0..per_rec {
+                assert!(link.holds(mbr, 8, c, second.quiet_until));
+            }
+        }
+    }
+
+    #[test]
+    fn retries_exhaustion_splits_retransmits_from_drops() {
+        let (topo, m) = lossy_model(0.95, 2);
+        let mut link = LinkState::new(3);
+        let src = topo.sat_at(1, 1);
+        let area = topo.area(src, 1);
+        let plan = m.plan_lossy_broadcast(&topo, &mut link, src, &area, &[0], 0.0);
+        assert!(plan.retransmits > 0);
+        assert!(plan.dropped_chunks > 0, "0.95³ per-chunk drop odds must hit");
+        assert_eq!(
+            plan.timeouts.len() as u64,
+            plan.retransmits + plan.dropped_chunks
+        );
+        assert_eq!(
+            plan.timeouts.iter().filter(|t| t.dropped).count() as u64,
+            plan.dropped_chunks
+        );
+    }
+
+    #[test]
+    fn ingest_contention_serializes_per_destination_arrivals() {
+        let (topo, m) = lossy_model(0.0, 3);
+        let mut link = LinkState::new(5);
+        let src = topo.sat_at(1, 1);
+        let area = topo.area(src, 1);
+        let plan1 = m.plan_lossy_broadcast(&topo, &mut link, src, &area, &[0], 0.0);
+        // Distinct record at the same instant: the per-destination ingest
+        // FIFO queues the whole second transfer behind the first instead
+        // of overlapping them.
+        let plan2 = m.plan_lossy_broadcast(&topo, &mut link, src, &area, &[1], 0.0);
+        let mut last: HashMap<SatId, f64> = HashMap::new();
+        for d in plan1.deliveries.iter().chain(&plan2.deliveries) {
+            let prev = last.insert(d.dst, d.time);
+            if let Some(prev) = prev {
+                assert!(d.time > prev, "arrivals at {} overlap: {} then {}", d.dst, prev, d.time);
+            }
+        }
+        assert!(plan2.quiet_until > plan1.quiet_until);
     }
 }

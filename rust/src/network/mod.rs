@@ -12,5 +12,5 @@
 pub mod comm;
 pub mod topology;
 
-pub use comm::CommModel;
+pub use comm::{CommModel, LinkState, LossyPlan};
 pub use topology::GridTopology;

@@ -18,10 +18,34 @@
 //! previously five parallel per-satellite `Vec`s inside the simulator's
 //! event loop.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use crate::coordinator::scrt::Scrt;
 use crate::workload::SatId;
+
+/// Reassembly progress of one chunked record transfer.
+///
+/// Entries persist for the rest of the run once created: a completed
+/// assembly keeps absorbing late in-flight duplicates of its chunks
+/// (returning `false`, so the record is merged exactly once), and a
+/// partially received assembly keeps its delivered prefix so a later
+/// re-broadcast only has to supply the missing chunks.
+#[derive(Clone, Debug)]
+pub struct ChunkAssembly {
+    received: Vec<bool>,
+    complete: bool,
+}
+
+impl ChunkAssembly {
+    /// Chunks received so far.
+    pub fn received_count(&self) -> usize {
+        self.received.iter().filter(|&&r| r).count()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.complete
+    }
+}
 
 /// What one satellite is currently executing.
 #[derive(Clone, Debug)]
@@ -59,6 +83,10 @@ pub struct SatNode {
     /// satellite that keeps benefiting never re-requests, and one that did
     /// not benefit waits for the situation to change.
     pub collab_armed: bool,
+    /// Partial-record reassembly state of chunked lossy transfers, keyed
+    /// by record id. Only ever indexed by key (never iterated), so the
+    /// map's internal order cannot leak into results.
+    pub reassembly: HashMap<usize, ChunkAssembly>,
 }
 
 impl SatNode {
@@ -70,6 +98,41 @@ impl SatNode {
             queue: VecDeque::new(),
             in_flight: None,
             collab_armed: true,
+            reassembly: HashMap::new(),
+        }
+    }
+
+    /// Register one delivered chunk of `record_id`. Returns `true` exactly
+    /// once: on the delivery that completes the record, which is when the
+    /// engine merges it into the SCRT. Out-of-order arrivals, duplicates,
+    /// and late chunks of an already-completed assembly all return `false`.
+    pub fn accept_chunk(
+        &mut self,
+        record_id: usize,
+        chunk_seq: usize,
+        total_chunks: usize,
+    ) -> bool {
+        let asm = self
+            .reassembly
+            .entry(record_id)
+            .or_insert_with(|| ChunkAssembly {
+                received: vec![false; total_chunks],
+                complete: false,
+            });
+        if asm.complete {
+            return false;
+        }
+        if asm.received.len() < total_chunks {
+            asm.received.resize(total_chunks, false);
+        }
+        if chunk_seq < asm.received.len() {
+            asm.received[chunk_seq] = true;
+        }
+        if asm.received.iter().all(|&r| r) {
+            asm.complete = true;
+            true
+        } else {
+            false
         }
     }
 }
@@ -241,6 +304,38 @@ mod tests {
         assert!(n.collab_armed, "hysteresis starts armed");
         assert!(n.scrt.is_empty());
         assert_eq!(n.scrt.capacity(), 8);
+    }
+
+    #[test]
+    fn accept_chunk_completes_exactly_once() {
+        let mut n = SatNode::new(0, 4, 8);
+        assert!(!n.accept_chunk(7, 0, 3));
+        assert!(!n.accept_chunk(7, 1, 3));
+        assert!(n.accept_chunk(7, 2, 3), "last chunk completes");
+        // Late duplicates of a completed assembly are absorbed silently.
+        assert!(!n.accept_chunk(7, 0, 3));
+        assert!(!n.accept_chunk(7, 2, 3));
+        assert!(n.reassembly[&7].is_complete());
+    }
+
+    #[test]
+    fn accept_chunk_single_chunk_record() {
+        let mut n = SatNode::new(0, 4, 8);
+        assert!(n.accept_chunk(1, 0, 1));
+        assert!(!n.accept_chunk(1, 0, 1));
+    }
+
+    #[test]
+    fn accept_chunk_keeps_partial_progress() {
+        // A mid-transfer drop leaves the delivered prefix behind; a later
+        // transfer only needs to supply the missing chunks.
+        let mut n = SatNode::new(0, 4, 8);
+        assert!(!n.accept_chunk(9, 0, 4));
+        assert!(!n.accept_chunk(9, 2, 4));
+        assert_eq!(n.reassembly[&9].received_count(), 2);
+        assert!(!n.reassembly[&9].is_complete());
+        assert!(!n.accept_chunk(9, 1, 4));
+        assert!(n.accept_chunk(9, 3, 4));
     }
 
     #[test]

@@ -33,25 +33,13 @@ use crate::coordinator::slcr::process_task;
 use crate::coordinator::srs::srs;
 use crate::coordinator::Scenario;
 use crate::error::{Error, Result};
-use crate::metrics::{MetricsAccum, RunReport, SatSummary, TaskLog};
-use crate::network::{CommModel, GridTopology};
+use crate::metrics::{MetricsAccum, RunCounters, RunReport, SatSummary, TaskLog};
+use crate::network::{CommModel, GridTopology, LinkState};
 use crate::satellite::{InFlight, SatNode};
 use crate::simulator::events::{EventKind, EventQueue};
 use crate::simulator::observer::Observer;
 use crate::simulator::source::PreparedSource;
 use crate::workload::{SatId, Workload};
-
-/// Collaboration-side run counters (folded into the final report).
-/// Shared with the sharded engine, whose coordinator owns one.
-#[derive(Clone, Copy, Debug, Default)]
-pub(crate) struct CollabCounters {
-    pub(crate) transfer_bytes: f64,
-    pub(crate) comm_seconds: f64,
-    pub(crate) collab_events: usize,
-    pub(crate) expanded_events: usize,
-    pub(crate) aborted_collabs: usize,
-    pub(crate) broadcast_records: usize,
-}
 
 /// The priced outcome of serving one task — what an [`InFlight`] records.
 pub(crate) struct ServiceSpec {
@@ -170,8 +158,15 @@ pub struct Engine<'a> {
     /// what keeps collaboration *rare* (the paper's Table III volumes
     /// imply on the order of one broadcast per mission).
     network_quiet_until: f64,
-    collab: CollabCounters,
+    collab: RunCounters,
     metrics: MetricsAccum,
+    /// `Some` iff the fault model is on ([`CommConfig::faults_active`]):
+    /// the shared transfer-cache / link-contention state every lossy
+    /// broadcast plans against. `None` keeps the legacy ideal-link path
+    /// byte-for-byte, so loss = 0 runs reproduce existing goldens.
+    ///
+    /// [`CommConfig::faults_active`]: crate::config::CommConfig::faults_active
+    link: Option<LinkState>,
     /// Reusable all-satellite SRS buffer: one allocation for the whole
     /// run instead of one per collaboration request.
     srs_scratch: Vec<f64>,
@@ -212,8 +207,12 @@ impl<'a> Engine<'a> {
             scratch_s: cfg.compute.task_flops / c_comp,
             lookup_s: cfg.compute.lookup_fixed_s + cfg.compute.lookup_flops / c_comp,
             network_quiet_until: f64::NEG_INFINITY,
-            collab: CollabCounters::default(),
+            collab: RunCounters::default(),
             metrics: MetricsAccum::new(keep_logs),
+            link: cfg
+                .comm
+                .faults_active()
+                .then(|| LinkState::new(cfg.workload.seed)),
             srs_scratch: Vec::new(),
             share_scratch: Vec::new(),
         }
@@ -242,6 +241,12 @@ impl<'a> Engine<'a> {
         source: &mut dyn PreparedSource,
         obs: &mut dyn Observer,
     ) -> Result<RunReport> {
+        // A nonsensical fault model is a simulation the engine refuses to
+        // run — the same contract as the sharded engine's degenerate-
+        // lookahead rejection, and shared with it via `fault_check`.
+        if let Err(msg) = self.cfg.comm.fault_check() {
+            return Err(Error::simulation(msg));
+        }
         let wl = self.wl;
         for (idx, task) in wl.tasks.iter().enumerate() {
             self.q.push(task.arrival, EventKind::Arrival(idx));
@@ -258,6 +263,28 @@ impl<'a> Engine<'a> {
                     bucket,
                     record,
                 } => self.on_broadcast_deliver(dst, bucket, &record, now, obs),
+                EventKind::ChunkDeliver {
+                    dst,
+                    bucket,
+                    record,
+                    chunk_seq,
+                    total_chunks,
+                } => {
+                    if self.nodes[dst].accept_chunk(
+                        record.id,
+                        chunk_seq,
+                        total_chunks,
+                    ) {
+                        self.on_broadcast_deliver(dst, bucket, &record, now, obs);
+                    }
+                }
+                EventKind::LinkTimeout { src: _, dropped } => {
+                    if dropped {
+                        self.collab.dropped_chunks += 1;
+                    } else {
+                        self.collab.retransmits += 1;
+                    }
+                }
             }
         }
 
@@ -284,12 +311,7 @@ impl<'a> Engine<'a> {
             self.cfg.network.n,
             per_satellite,
             self.cfg.alpha,
-            self.collab.comm_seconds,
-            self.collab.transfer_bytes,
-            self.collab.collab_events,
-            self.collab.expanded_events,
-            self.collab.aborted_collabs,
-            self.collab.broadcast_records,
+            &self.collab,
             wall_start.elapsed().as_secs_f64(),
         ))
     }
@@ -388,6 +410,53 @@ impl<'a> Engine<'a> {
         }
         self.nodes[decision.source].state.times_source += 1;
         self.collab.broadcast_records += records.len();
+        if let Some(mut link) = self.link.take() {
+            // Lossy path: resolve the whole chunked transfer (contention,
+            // fates, retries, dedup) here and replay its fixed schedule.
+            let record_ids: Vec<usize> =
+                records.iter().map(|(_, r)| r.id).collect();
+            let plan = self.comm.plan_lossy_broadcast(
+                &self.topo,
+                &mut link,
+                decision.source,
+                &decision.area,
+                &record_ids,
+                now,
+            );
+            self.link = Some(link);
+            self.collab.transfer_bytes += plan.bytes;
+            self.collab.comm_seconds += plan.airtime_s;
+            self.collab.dedup_saved_bytes += plan.dedup_saved_bytes;
+            self.network_quiet_until = plan.quiet_until;
+            let mut shared = std::mem::take(&mut self.share_scratch);
+            shared.clear();
+            shared.extend(records.into_iter().map(|(b, r)| (b, Arc::new(r))));
+            for d in &plan.deliveries {
+                let (bucket, rec) = &shared[d.rec_slot];
+                self.q.push(
+                    d.time,
+                    EventKind::ChunkDeliver {
+                        dst: d.dst,
+                        bucket: *bucket,
+                        record: rec.clone(),
+                        chunk_seq: d.chunk_seq,
+                        total_chunks: d.total_chunks,
+                    },
+                );
+            }
+            for t in &plan.timeouts {
+                self.q.push(
+                    t.time,
+                    EventKind::LinkTimeout {
+                        src: t.src,
+                        dropped: t.dropped,
+                    },
+                );
+            }
+            shared.clear();
+            self.share_scratch = shared;
+            return;
+        }
         // Spanning-tree flood over the area.
         let plan = self.comm.plan_broadcast(
             &self.topo,

@@ -25,6 +25,21 @@ pub enum EventKind {
         bucket: u32,
         record: std::sync::Arc<Record>,
     },
+    /// One chunk of a lossy, chunked broadcast reaches a destination. The
+    /// record only becomes usable (merged into the destination SCRT) once
+    /// the satellite's reassembly state reports all `total_chunks` pieces
+    /// present; duplicates and out-of-order arrivals are absorbed there.
+    ChunkDeliver {
+        dst: SatId,
+        bucket: u32,
+        record: std::sync::Arc<Record>,
+        chunk_seq: usize,
+        total_chunks: usize,
+    },
+    /// A retransmission timeout fires at the broadcast source: one chunk
+    /// attempt was lost or corrupted. `dropped` marks retry exhaustion —
+    /// the chunk is abandoned for this transfer.
+    LinkTimeout { src: SatId, dropped: bool },
 }
 
 /// A scheduled event.

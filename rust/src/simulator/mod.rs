@@ -341,6 +341,14 @@ impl<'a> Simulation<'a> {
     pub fn run_reference(&self) -> Result<RunReport> {
         let wall_start = std::time::Instant::now();
         self.cfg.validate()?;
+        // The reference loop predates the fault model and must stay
+        // verbatim; lossy runs are cross-checked engine-vs-sharded instead.
+        if self.cfg.comm.faults_active() {
+            return Err(Error::simulation(
+                "run_reference does not model lossy links — \
+                 compare Simulation::run against the sharded engine instead",
+            ));
+        }
 
         let owned_wl;
         let wl = match self.workload {
@@ -611,18 +619,22 @@ impl<'a> Simulation<'a> {
             })
             .collect();
 
+        let counters = crate::metrics::RunCounters {
+            transfer_bytes,
+            comm_seconds,
+            collab_events,
+            expanded_events,
+            aborted_collabs,
+            broadcast_records,
+            ..Default::default()
+        };
         Ok(aggregate(
             self.scenario,
             self.cfg.network.n,
             logs,
             per_satellite,
             self.cfg.alpha,
-            comm_seconds,
-            transfer_bytes,
-            collab_events,
-            expanded_events,
-            aborted_collabs,
-            broadcast_records,
+            &counters,
             wall_start.elapsed().as_secs_f64(),
         ))
     }

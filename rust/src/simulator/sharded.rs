@@ -55,12 +55,10 @@ use crate::coordinator::scrt::Record;
 use crate::coordinator::srs::srs;
 use crate::coordinator::Scenario;
 use crate::error::{Error, Result};
-use crate::metrics::{fold_sharded, RunReport, SatSummary, TaskLog};
-use crate::network::{CommModel, GridTopology};
+use crate::metrics::{fold_sharded, RunCounters, RunReport, SatSummary, TaskLog};
+use crate::network::{CommModel, GridTopology, LinkState};
 use crate::satellite::{InFlight, SatNode, SatelliteState};
-use crate::simulator::engine::{
-    reuse_service, scratch_service, take_completed, CollabCounters,
-};
+use crate::simulator::engine::{reuse_service, scratch_service, take_completed};
 use crate::simulator::events::{EventKind, EventQueue};
 use crate::simulator::source::PreparedSource;
 use crate::workload::{SatId, Workload};
@@ -87,13 +85,12 @@ struct PendingGate {
     my_srs: f64,
 }
 
-/// A broadcast delivery scheduled by a resolved collaboration, waiting
-/// for the next window boundary to enter its destination shard's queue.
-struct PendingDelivery {
+/// An event scheduled by a resolved collaboration (a whole-record or
+/// chunk delivery, or a retransmission timeout), waiting for the next
+/// window boundary to enter its owning shard's queue.
+struct PendingEvent {
     time: f64,
-    dst: SatId,
-    bucket: u32,
-    record: Arc<Record>,
+    kind: EventKind,
 }
 
 /// How shard workers reach the prepared inputs.
@@ -145,6 +142,12 @@ struct Shard {
     srs_journal: Vec<Vec<SrsCheckpoint>>,
     /// The unresolved Alg. 2 gate this shard paused at, if any.
     pause: Option<PendingGate>,
+    /// Shard-local fault counters, bumped by `LinkTimeout` handlers and
+    /// summed into the run counters at the end — integer sums commute,
+    /// so the totals match the single-threaded engine's exactly no
+    /// matter how timeouts interleave across shards.
+    retransmits: u64,
+    dropped_chunks: u64,
 }
 
 impl Shard {
@@ -262,6 +265,29 @@ impl Shard {
                     node.collab_armed = false;
                     node.state.last_collab_request =
                         node.state.last_collab_request.max(now);
+                }
+                EventKind::ChunkDeliver {
+                    dst,
+                    bucket,
+                    record,
+                    chunk_seq,
+                    total_chunks,
+                } => {
+                    debug_assert_eq!(dst % self.stride, self.id, "foreign chunk");
+                    let node = &mut self.nodes[dst / self.stride];
+                    if node.accept_chunk(record.id, chunk_seq, total_chunks) {
+                        node.scrt.merge_broadcast(bucket, record.as_ref(), now);
+                        node.collab_armed = false;
+                        node.state.last_collab_request =
+                            node.state.last_collab_request.max(now);
+                    }
+                }
+                EventKind::LinkTimeout { src: _, dropped } => {
+                    if dropped {
+                        self.dropped_chunks += 1;
+                    } else {
+                        self.retransmits += 1;
+                    }
                 }
             }
         }
@@ -449,6 +475,11 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
              the conservative window could never advance past a broadcast"
         )));
     }
+    // A nonsensical fault model is rejected on the same contract (shared
+    // with the single-threaded engine via `fault_check`).
+    if let Err(msg) = cfg.comm.fault_check() {
+        return Err(Error::simulation(msg));
+    }
 
     let cap = cfg.cache_capacity_records();
     let num_buckets = backend.num_buckets();
@@ -500,6 +531,8 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
                 logs: Vec::new(),
                 srs_journal: vec![Vec::new(); locals],
                 pause: None,
+                retransmits: 0,
+                dropped_chunks: 0,
             }
         })
         .collect();
@@ -514,8 +547,11 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
 
     let tau = cfg.reuse.tau;
     let mut quiet_until = f64::NEG_INFINITY;
-    let mut collab = CollabCounters::default();
-    let mut pending: Vec<Vec<PendingDelivery>> =
+    let mut collab = RunCounters::default();
+    // Transfer-layer bookkeeping for the lossy path; `None` keeps the
+    // ideal-link planner (and its exact golden outputs) untouched.
+    let mut link = cfg.comm.faults_active().then(|| LinkState::new(cfg.workload.seed));
+    let mut pending: Vec<Vec<PendingEvent>> =
         (0..shard_count).map(|_| Vec::new()).collect();
 
     loop {
@@ -641,30 +677,79 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
                                 .state
                                 .times_source += 1;
                             collab.broadcast_records += records.len();
-                            let plan = comm.plan_broadcast(
-                                &topo,
-                                decision.source,
-                                &decision.area,
-                                records.len(),
-                            );
-                            collab.transfer_bytes += plan.bytes;
-                            collab.comm_seconds += plan.airtime_s;
-                            quiet_until = t + plan.completion_offset(records.len());
-                            let shared: Vec<(u32, Arc<Record>)> = records
-                                .into_iter()
-                                .map(|(b, r)| (b, Arc::new(r)))
-                                .collect();
-                            // Same nested order as the single-threaded
-                            // fan-out: per-shard buffers preserve the
-                            // relative seq order of equal-time deliveries.
-                            for &(dst, depth) in &plan.arrivals {
-                                for (k, (bucket, rec)) in shared.iter().enumerate() {
-                                    pending[dst % shard_count].push(PendingDelivery {
-                                        time: t + plan.arrival_offset(k, depth),
-                                        dst,
-                                        bucket: *bucket,
-                                        record: rec.clone(),
+                            if let Some(link) = link.as_mut() {
+                                // Lossy/chunked path: the whole transfer
+                                // (retries included) resolves here, at a
+                                // globally ordered instant, so the event
+                                // schedule is identical across K.
+                                let record_ids: Vec<usize> =
+                                    records.iter().map(|(_, r)| r.id).collect();
+                                let plan = comm.plan_lossy_broadcast(
+                                    &topo,
+                                    link,
+                                    decision.source,
+                                    &decision.area,
+                                    &record_ids,
+                                    t,
+                                );
+                                collab.transfer_bytes += plan.bytes;
+                                collab.comm_seconds += plan.airtime_s;
+                                collab.dedup_saved_bytes += plan.dedup_saved_bytes;
+                                quiet_until = plan.quiet_until;
+                                let shared: Vec<(u32, Arc<Record>)> = records
+                                    .into_iter()
+                                    .map(|(b, r)| (b, Arc::new(r)))
+                                    .collect();
+                                for d in &plan.deliveries {
+                                    let (bucket, rec) = &shared[d.rec_slot];
+                                    pending[d.dst % shard_count].push(PendingEvent {
+                                        time: d.time,
+                                        kind: EventKind::ChunkDeliver {
+                                            dst: d.dst,
+                                            bucket: *bucket,
+                                            record: rec.clone(),
+                                            chunk_seq: d.chunk_seq,
+                                            total_chunks: d.total_chunks,
+                                        },
                                     });
+                                }
+                                for to in &plan.timeouts {
+                                    pending[to.src % shard_count].push(PendingEvent {
+                                        time: to.time,
+                                        kind: EventKind::LinkTimeout {
+                                            src: to.src,
+                                            dropped: to.dropped,
+                                        },
+                                    });
+                                }
+                            } else {
+                                let plan = comm.plan_broadcast(
+                                    &topo,
+                                    decision.source,
+                                    &decision.area,
+                                    records.len(),
+                                );
+                                collab.transfer_bytes += plan.bytes;
+                                collab.comm_seconds += plan.airtime_s;
+                                quiet_until = t + plan.completion_offset(records.len());
+                                let shared: Vec<(u32, Arc<Record>)> = records
+                                    .into_iter()
+                                    .map(|(b, r)| (b, Arc::new(r)))
+                                    .collect();
+                                // Same nested order as the single-threaded
+                                // fan-out: per-shard buffers preserve the
+                                // relative seq order of equal-time deliveries.
+                                for &(dst, depth) in &plan.arrivals {
+                                    for (k, (bucket, rec)) in shared.iter().enumerate() {
+                                        pending[dst % shard_count].push(PendingEvent {
+                                            time: t + plan.arrival_offset(k, depth),
+                                            kind: EventKind::BroadcastDeliver {
+                                                dst,
+                                                bucket: *bucket,
+                                                record: rec.clone(),
+                                            },
+                                        });
+                                    }
                                 }
                             }
                             clear_armed = true;
@@ -682,18 +767,12 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
         // bottleneck ≥ window_start + lookahead = window_end`, so routing
         // them here can never starve the window just processed.
         for (si, buffer) in pending.iter_mut().enumerate() {
-            for delivery in buffer.drain(..) {
-                // Exact even in floats: `t ⊕ (k+depth)·bottleneck` is
-                // monotone and bottleneck ≥ lookahead bit-for-bit.
-                debug_assert!(delivery.time >= window_end);
-                shards[si].q.push(
-                    delivery.time,
-                    EventKind::BroadcastDeliver {
-                        dst: delivery.dst,
-                        bucket: delivery.bucket,
-                        record: delivery.record,
-                    },
-                );
+            for ev in buffer.drain(..) {
+                // Exact even in floats: every scheduled time is a chain of
+                // `start ⊕ t_edge` steps with start ≥ window_start and
+                // t_edge ≥ lookahead bit-for-bit, and ⊕ is monotone.
+                debug_assert!(ev.time >= window_end);
+                shards[si].q.push(ev.time, ev.kind);
             }
         }
     }
@@ -706,6 +785,10 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
         .map(|shard| std::mem::take(&mut shard.logs))
         .collect();
     let metrics = fold_sharded(keep_logs, shard_logs);
+    // Shard-local fault counters fold with plain sums — commutative, so
+    // the totals match the single-threaded handler's sequential bumps.
+    collab.retransmits = shards.iter().map(|s| s.retransmits).sum();
+    collab.dropped_chunks = shards.iter().map(|s| s.dropped_chunks).sum();
     let makespan = metrics.makespan();
     let per_satellite: Vec<SatSummary> = (0..sats)
         .map(|s| {
@@ -729,12 +812,7 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
         cfg.network.n,
         per_satellite,
         cfg.alpha,
-        collab.comm_seconds,
-        collab.transfer_bytes,
-        collab.collab_events,
-        collab.expanded_events,
-        collab.aborted_collabs,
-        collab.broadcast_records,
+        &collab,
         wall_start.elapsed().as_secs_f64(),
     ))
 }

@@ -4,6 +4,34 @@
 //! simulator component derives an independent, reproducible stream from a
 //! single experiment seed so runs are bit-identical across machines.
 
+/// Order-independent uniform draw in `[0, 1)` keyed by a counter tuple.
+///
+/// The lossy link layer needs a fate draw per `(transfer, destination,
+/// chunk, attempt)` that every engine — single-threaded, sharded at any
+/// K, resumed mid-run — computes identically *without sharing a mutable
+/// generator*. A stateful `Rng` would make the draw depend on global
+/// event order; hashing the coordinates instead makes it a pure function
+/// of the experiment seed and the draw's identity. The mix is the same
+/// SplitMix64 finalizer used for seeding, applied over the chained key
+/// words, and the mapping to `[0, 1)` matches [`Rng::f64`] (53 high
+/// bits), so the output quality and range semantics are shared.
+#[inline]
+pub fn hash_unit(seed: u64, a: u64, b: u64, c: u64, d: u64) -> f64 {
+    #[inline]
+    fn mix(x: u64) -> u64 {
+        let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+    let mut h = mix(seed);
+    h = mix(h ^ a);
+    h = mix(h ^ b);
+    h = mix(h ^ c);
+    h = mix(h ^ d);
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
 /// SplitMix64: seeds the main generator and provides stream splitting.
 #[derive(Clone, Debug)]
 pub struct SplitMix64 {
@@ -265,6 +293,44 @@ mod tests {
             counts[r.weighted(&w)] += 1;
         }
         assert!(counts[1] > counts[0] + counts[2]);
+    }
+
+    #[test]
+    fn hash_unit_is_pure_and_in_range() {
+        // Same coordinates -> same value, regardless of call order.
+        let x = hash_unit(2025, 3, 7, 11, 0);
+        let _ = hash_unit(999, 0, 0, 0, 0);
+        assert_eq!(x.to_bits(), hash_unit(2025, 3, 7, 11, 0).to_bits());
+        for t in 0..50u64 {
+            for a in 0..4u64 {
+                let u = hash_unit(42, t, 5, 2, a);
+                assert!((0.0..1.0).contains(&u), "{u}");
+            }
+        }
+    }
+
+    #[test]
+    fn hash_unit_separates_coordinates() {
+        // Changing any single coordinate must change the draw — the fate
+        // of chunk 3 attempt 1 cannot alias chunk 1 attempt 3.
+        let base = hash_unit(7, 1, 2, 3, 4);
+        assert_ne!(base.to_bits(), hash_unit(8, 1, 2, 3, 4).to_bits());
+        assert_ne!(base.to_bits(), hash_unit(7, 2, 2, 3, 4).to_bits());
+        assert_ne!(base.to_bits(), hash_unit(7, 1, 3, 3, 4).to_bits());
+        assert_ne!(base.to_bits(), hash_unit(7, 1, 2, 4, 4).to_bits());
+        assert_ne!(base.to_bits(), hash_unit(7, 1, 2, 3, 5).to_bits());
+        assert_ne!(
+            hash_unit(7, 1, 2, 3, 1).to_bits(),
+            hash_unit(7, 3, 2, 1, 1).to_bits()
+        );
+    }
+
+    #[test]
+    fn hash_unit_roughly_uniform() {
+        let n = 20_000u64;
+        let mean = (0..n).map(|i| hash_unit(1, i, 0, 0, 0)).sum::<f64>()
+            / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
     }
 
     #[test]

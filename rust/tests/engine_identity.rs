@@ -46,6 +46,9 @@ fn assert_aggregates_identical(a: &RunReport, b: &RunReport, label: &str) {
     assert_eq!(a.expanded_events, b.expanded_events, "{label}");
     assert_eq!(a.aborted_collabs, b.aborted_collabs, "{label}");
     assert_eq!(a.broadcast_records, b.broadcast_records, "{label}");
+    assert_eq!(a.retransmits, b.retransmits, "{label}");
+    assert_eq!(a.dropped_chunks, b.dropped_chunks, "{label}");
+    assert_eq!(a.dedup_saved_mb, b.dedup_saved_mb, "{label}");
     assert_eq!(a.mean_latency, b.mean_latency, "{label}");
     assert_eq!(a.p95_latency, b.p95_latency, "{label}");
 }
@@ -254,6 +257,102 @@ fn sharded_engine_rejects_a_degenerate_lookahead() {
     // Non-collaborating scenarios never broadcast: no lookahead needed.
     let ok = Simulation::new(&c, &backend, Scenario::Slcr).threads(2).run();
     assert!(ok.is_ok(), "SLCR must not need a broadcast lookahead");
+}
+
+#[test]
+fn engines_reject_degenerate_fault_configs_naming_the_value() {
+    // A nonsensical fault model must be rejected up front by BOTH engines
+    // with an `Error::Simulation` naming the offending value — never a
+    // hang in an unwinnable retransmission loop or a mid-run panic.
+    let mutations: Vec<(Box<dyn Fn(&mut SimConfig)>, &str)> = vec![
+        (Box::new(|c| c.comm.loss_prob = 1.0), "loss_prob=1"),
+        (Box::new(|c| c.comm.loss_prob = -0.25), "loss_prob=-0.25"),
+        (
+            Box::new(|c| c.comm.link_bandwidth_bps = 0.0),
+            "link_bandwidth_bps=0",
+        ),
+        (
+            Box::new(|c| c.comm.link_bandwidth_bps = -1000000.0),
+            "link_bandwidth_bps=-1000000",
+        ),
+        (Box::new(|c| c.comm.chunk_bytes = 0.0), "chunk_bytes=0"),
+        (
+            Box::new(|c| {
+                c.comm.chunk_bytes = 1e6;
+                c.comm.max_retries = 65;
+            }),
+            "max_retries=65",
+        ),
+    ];
+    for (mutate, needle) in &mutations {
+        let mut c = cfg(3, 12);
+        mutate(&mut c);
+        let backend = NativeBackend::new(&c);
+        for threads in [None, Some(2)] {
+            let mut sim = Simulation::new(&c, &backend, Scenario::Sccr);
+            if let Some(k) = threads {
+                sim = sim.threads(k);
+            }
+            match sim.run() {
+                Err(ccrsat::Error::Simulation(msg)) => {
+                    assert!(
+                        msg.contains(needle),
+                        "threads {threads:?}: expected '{needle}' in: {msg}"
+                    );
+                }
+                other => panic!(
+                    "threads {threads:?} ({needle}): expected Error::Simulation, got {other:?}"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn retry_exhaustion_terminates_and_counts_drops() {
+    // Heavy loss against a tiny retry budget: the bounded attempt loop
+    // must terminate (no livelock waiting for a chunk that never lands),
+    // the report must count both retransmissions and abandoned chunks,
+    // and the sharded engine must stay bit-identical through all of it.
+    let mut c = cfg(3, 60);
+    c.comm.loss_prob = 0.6;
+    c.comm.chunk_bytes = 6e6;
+    c.comm.max_retries = 1;
+    let backend = NativeBackend::new(&c);
+    let wl = build_workload(&c);
+    let prep = prepare(&backend, &wl).unwrap();
+    let single = Simulation::new(&c, &backend, Scenario::Sccr)
+        .with_workload(&wl)
+        .with_prepared(&prep)
+        .run()
+        .unwrap();
+    assert!(single.collab_events > 0, "no broadcasts — nothing exercised");
+    assert!(single.retransmits > 0, "loss 0.6 must force retransmissions");
+    assert!(
+        single.dropped_chunks > 0,
+        "0.36 per-chunk drop odds over this many chunks must exhaust retries"
+    );
+    let sharded = Simulation::new(&c, &backend, Scenario::Sccr)
+        .with_workload(&wl)
+        .with_prepared(&prep)
+        .threads(2)
+        .run()
+        .unwrap();
+    assert_aggregates_identical(&sharded, &single, "retry exhaustion");
+    assert_satellites_identical(&sharded, &single, "retry exhaustion");
+    assert_logs_identical(&sharded, &single, "retry exhaustion");
+    // The kept pre-fault monolith has no lossy path: it must refuse the
+    // config rather than silently report ideal-link numbers.
+    let refr = Simulation::new(&c, &backend, Scenario::Sccr)
+        .with_workload(&wl)
+        .with_prepared(&prep)
+        .run_reference();
+    match refr {
+        Err(ccrsat::Error::Simulation(msg)) => {
+            assert!(msg.contains("run_reference"), "unexpected message: {msg}");
+        }
+        other => panic!("expected Error::Simulation, got {other:?}"),
+    }
 }
 
 #[test]

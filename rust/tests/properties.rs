@@ -358,6 +358,9 @@ fn assert_reports_bit_identical(
     assert_eq!(a.expanded_events, b.expanded_events, "{label}");
     assert_eq!(a.aborted_collabs, b.aborted_collabs, "{label}");
     assert_eq!(a.broadcast_records, b.broadcast_records, "{label}");
+    assert_eq!(a.retransmits, b.retransmits, "{label}");
+    assert_eq!(a.dropped_chunks, b.dropped_chunks, "{label}");
+    assert_eq!(a.dedup_saved_mb, b.dedup_saved_mb, "{label}");
     assert_eq!(a.mean_latency, b.mean_latency, "{label}");
     assert_eq!(a.p95_latency, b.p95_latency, "{label}");
     assert_eq!(a.per_satellite.len(), b.per_satellite.len(), "{label}");
@@ -386,6 +389,72 @@ fn assert_reports_bit_identical(
             "{label} task {}",
             x.task_id
         );
+    }
+}
+
+/// Fault-injection sweep: across workload seeds, loss rates {0.0, 0.05,
+/// 0.3}, shard counts K ∈ {1, 2, 4} and every scenario, the sharded
+/// engine's full `RunReport` — aggregates, fault counters, per-satellite
+/// summaries, per-task logs — is bit-identical to the single-threaded
+/// engine's. At loss 0.0 the fault model is dormant (`faults_active()` is
+/// false) and the run must additionally land on the kept pre-fault
+/// monolith's exact numbers: the golden baseline is NOT re-seeded by this
+/// feature.
+#[test]
+fn prop_lossy_sweep_bit_identical_and_loss_zero_reproduces_goldens() {
+    let mut case_rng = Rng::new(0x1055);
+    for case in 0..2u64 {
+        let mut base = SimConfig::paper_default(3);
+        base.workload.total_tasks = 36 + case_rng.below(17);
+        base.workload.seed = 11_000 + case;
+        // Smaller tiles keep the debug-mode render cost sane; identity is
+        // independent of tile size.
+        base.workload.raw_h = 32;
+        base.workload.raw_w = 32;
+        let backend = NativeBackend::new(&base);
+        let wl = build_workload(&base);
+        let prep = prepare(&backend, &wl).unwrap();
+        for loss in [0.0f64, 0.05, 0.3] {
+            let mut cfg = base.clone();
+            cfg.comm.loss_prob = loss;
+            if loss > 0.0 {
+                // Chunk the ~20.5 MB records so loss, retransmission and
+                // reassembly all trigger mid-record.
+                cfg.comm.chunk_bytes = 6e6;
+            }
+            for scenario in Scenario::ALL {
+                let single = Simulation::new(&cfg, &backend, scenario)
+                    .with_workload(&wl)
+                    .with_prepared(&prep)
+                    .run()
+                    .unwrap();
+                if loss == 0.0 {
+                    let golden = Simulation::new(&cfg, &backend, scenario)
+                        .with_workload(&wl)
+                        .with_prepared(&prep)
+                        .run_reference()
+                        .unwrap();
+                    assert_reports_bit_identical(
+                        &golden,
+                        &single,
+                        &format!("case {case} {scenario} loss=0 vs reference"),
+                    );
+                }
+                for threads in [1usize, 2, 4] {
+                    let sharded = Simulation::new(&cfg, &backend, scenario)
+                        .with_workload(&wl)
+                        .with_prepared(&prep)
+                        .threads(threads)
+                        .run()
+                        .unwrap();
+                    assert_reports_bit_identical(
+                        &single,
+                        &sharded,
+                        &format!("case {case} {scenario} loss={loss} K={threads}"),
+                    );
+                }
+            }
+        }
     }
 }
 
