@@ -140,6 +140,246 @@ impl CommConfig {
     }
 }
 
+/// Which contact-plan generator drives the topology over time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyMode {
+    /// The paper's fixed grid: every ISL permanently up (the default).
+    Static,
+    /// Walker-shell geometry: inter-plane ISLs duty-cycle with orbital
+    /// motion while intra-plane ISLs stay up (neighbours in one plane
+    /// keep constant separation).
+    Walker,
+}
+
+/// Walker shell phasing flavour.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WalkerKind {
+    /// Walker-delta: planes spread their inter-plane contact windows over
+    /// the full orbital period.
+    Delta,
+    /// Walker-star: near-polar planes, contact windows spread over half
+    /// the period (seam-adjacent planes counter-rotate).
+    Star,
+}
+
+/// One scripted ISL outage: the link between satellites `a` and `b` is
+/// down on the absolute virtual-time interval `[start, end)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OutageSpec {
+    /// One endpoint of the grid link (satellite id).
+    pub a: usize,
+    /// The other endpoint (must be grid-adjacent to `a`).
+    pub b: usize,
+    /// Outage start, virtual seconds (inclusive).
+    pub start: f64,
+    /// Outage end, virtual seconds (exclusive).
+    pub end: f64,
+}
+
+impl OutageSpec {
+    /// Parse a scripted-outage list from its string encoding:
+    /// `"a-b@start..end"` entries separated by commas, e.g.
+    /// `"3-4@100..200,7-8@50..80"`. The string form is what keeps the
+    /// TOML-subset parser scalar-only. An empty string is an empty list.
+    pub fn parse_list(s: &str) -> std::result::Result<Vec<OutageSpec>, String> {
+        let mut out = Vec::new();
+        for entry in s.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let bad = || format!("outage '{entry}' is not 'a-b@start..end'");
+            let (link, span) = entry.split_once('@').ok_or_else(bad)?;
+            let (a, b) = link.split_once('-').ok_or_else(bad)?;
+            let (start, end) = span.split_once("..").ok_or_else(bad)?;
+            out.push(OutageSpec {
+                a: a.trim().parse().map_err(|_| bad())?,
+                b: b.trim().parse().map_err(|_| bad())?,
+                start: start.trim().parse().map_err(|_| bad())?,
+                end: end.trim().parse().map_err(|_| bad())?,
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// Time-varying topology model (contact plans). The defaults describe the
+/// paper's static always-on grid, which the engines treat as a degenerate
+/// contact plan — see [`TopologyConfig::is_dynamic`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopologyConfig {
+    /// Plan generator: static grid or Walker shell.
+    pub mode: TopologyMode,
+    /// Walker phasing flavour (delta or star).
+    pub kind: WalkerKind,
+    /// Orbital period driving the inter-plane duty cycle, seconds.
+    pub period_s: f64,
+    /// Fraction of each period an inter-plane ISL is up, in (0, 1].
+    /// `1.0` = always on (degenerate, reproduces the static grid).
+    pub duty: f64,
+    /// Walker phasing parameter F: how far consecutive planes' contact
+    /// windows are offset from each other.
+    pub phasing: usize,
+    /// Rate multiplier applied to inter-plane links while the plan is
+    /// dynamic, in (0, 1]. Slowing-only by construction: the conservative
+    /// lookahead stays sound because effective edge times only grow.
+    pub inter_rate_scale: f64,
+    /// Extra per-chunk latency on inter-plane links while the plan is
+    /// dynamic, seconds (>= 0; same slowing-only contract).
+    pub inter_extra_latency_s: f64,
+    /// Scripted absolute link outages.
+    pub outages: Vec<OutageSpec>,
+    /// Number of ground stations. During a ground-station pass the
+    /// satellite's single radio points down: all its ISLs are suppressed.
+    pub ground_stations: usize,
+    /// Ground-pass recurrence period per (station, satellite), seconds.
+    pub pass_period_s: f64,
+    /// Fraction of each pass period a satellite spends in a pass, in
+    /// [0, 1). `0` disables passes even with stations configured.
+    pub pass_duty: f64,
+    /// Declared Walker plane count; must equal the grid scale `n` when
+    /// given (the reproduction only models square `n × n` shells).
+    pub planes: Option<usize>,
+    /// Declared satellites per plane; must equal `n` when given.
+    pub sats_per_plane: Option<usize>,
+}
+
+impl Default for TopologyConfig {
+    fn default() -> Self {
+        TopologyConfig {
+            mode: TopologyMode::Static,
+            kind: WalkerKind::Delta,
+            period_s: 5400.0, // ~90 min LEO orbit
+            duty: 1.0,
+            phasing: 1,
+            inter_rate_scale: 1.0,
+            inter_extra_latency_s: 0.0,
+            outages: Vec::new(),
+            ground_stations: 0,
+            pass_period_s: 5400.0,
+            pass_duty: 0.05,
+            planes: None,
+            sats_per_plane: None,
+        }
+    }
+}
+
+impl TopologyConfig {
+    /// `true` when the contact plan actually varies over time. The
+    /// detection is *semantic*, not `mode == Walker`: a Walker config with
+    /// `duty = 1`, no rate modifiers, no outages and no ground passes is
+    /// an always-on plan, and the engines take the legacy static-grid
+    /// broadcast path for it — which is what lets such a config reproduce
+    /// pre-contact-plan goldens bit-for-bit (the degenerate-plan property
+    /// test in `tests/properties.rs` pins exactly this).
+    pub fn is_dynamic(&self) -> bool {
+        !self.outages.is_empty()
+            || (self.ground_stations > 0 && self.pass_duty > 0.0)
+            || (self.mode == TopologyMode::Walker
+                && (self.duty < 1.0
+                    || self.inter_rate_scale != 1.0
+                    || self.inter_extra_latency_s != 0.0))
+    }
+
+    /// Validate the topology knobs against grid scale `n`, returning a
+    /// message naming the offending value. Engine-side like
+    /// [`CommConfig::fault_check`] (wrapped as `Error::Simulation`): a
+    /// nonsensical contact plan is a property of the *simulation* the
+    /// engines refuse to run.
+    pub fn check(&self, n: usize) -> std::result::Result<(), String> {
+        let p = self.period_s;
+        if !(p.is_finite() && p > 0.0) {
+            return Err(format!(
+                "topology period_s={p} out of range: the orbital period \
+                 must be finite and positive"
+            ));
+        }
+        let d = self.duty;
+        if !(d.is_finite() && 0.0 < d && d <= 1.0) {
+            return Err(format!(
+                "topology duty={d} out of range: the inter-plane contact \
+                 duty cycle must lie in (0, 1] — at 0 no inter-plane chunk \
+                 could ever cross"
+            ));
+        }
+        let s = self.inter_rate_scale;
+        if !(s.is_finite() && 0.0 < s && s <= 1.0) {
+            return Err(format!(
+                "inter_rate_scale={s} out of range: the contact-window rate \
+                 modifier must lie in (0, 1] — scaling a link *faster* than \
+                 the link budget would break the conservative lookahead bound"
+            ));
+        }
+        let l = self.inter_extra_latency_s;
+        if !(l.is_finite() && l >= 0.0) {
+            return Err(format!(
+                "inter_extra_latency_s={l} out of range: extra contact \
+                 latency must be finite and >= 0 (negative latency would \
+                 break the conservative lookahead bound)"
+            ));
+        }
+        if self.mode == TopologyMode::Static
+            && (self.duty != 1.0
+                || self.inter_rate_scale != 1.0
+                || self.inter_extra_latency_s != 0.0)
+        {
+            return Err(format!(
+                "topology duty={}/inter_rate_scale={}/inter_extra_latency_s={} \
+                 have no effect in static mode — set mode = \"walker\"",
+                self.duty, self.inter_rate_scale, self.inter_extra_latency_s
+            ));
+        }
+        for spec in [self.planes, self.sats_per_plane].into_iter().flatten() {
+            if spec != n {
+                return Err(format!(
+                    "topology planes/sats_per_plane={spec} != n={n}: this \
+                     reproduction models square Walker shells only (planes \
+                     = sats_per_plane = the grid scale n)"
+                ));
+            }
+        }
+        let sats = n * n;
+        for o in &self.outages {
+            if o.a >= sats || o.b >= sats {
+                return Err(format!(
+                    "outage {}-{} names a satellite outside the {n}x{n} grid",
+                    o.a, o.b
+                ));
+            }
+            let (ao, as_) = (o.a / n, o.a % n);
+            let (bo, bs) = (o.b / n, o.b % n);
+            let adjacent = (ao == bo && as_.abs_diff(bs) == 1)
+                || (as_ == bs && ao.abs_diff(bo) == 1);
+            if !adjacent {
+                return Err(format!(
+                    "outage {}-{} is not a grid ISL: only adjacent \
+                     satellites share a link",
+                    o.a, o.b
+                ));
+            }
+            if !(o.start.is_finite() && o.end.is_finite() && o.start < o.end) {
+                return Err(format!(
+                    "outage {}-{}@{}..{} needs a finite interval with \
+                     start < end",
+                    o.a, o.b, o.start, o.end
+                ));
+            }
+        }
+        let pp = self.pass_period_s;
+        if !(pp.is_finite() && pp > 0.0) {
+            return Err(format!(
+                "pass_period_s={pp} out of range: the ground-pass period \
+                 must be finite and positive"
+            ));
+        }
+        let pd = self.pass_duty;
+        if !(pd.is_finite() && (0.0..1.0).contains(&pd)) {
+            return Err(format!(
+                "pass_duty={pd} out of range: the ground-pass duty cycle \
+                 must lie in [0, 1) — at 1.0 a satellite would never \
+                 rejoin the ISL mesh"
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Analytic on-board computation cost model (eqs. 6–8).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ComputeConfig {
@@ -214,6 +454,9 @@ pub struct SimConfig {
     pub compute: ComputeConfig,
     pub reuse: ReuseConfig,
     pub workload: WorkloadConfig,
+    /// Time-varying topology model (contact plans); defaults to the
+    /// paper's static always-on grid.
+    pub topology: TopologyConfig,
     /// Binary weight α balancing communication vs computation cost (eq. 9).
     pub alpha: f64,
 }
@@ -284,6 +527,7 @@ impl SimConfig {
                 shared_pool_prob: 0.9,
                 seed: 2025,
             },
+            topology: TopologyConfig::default(),
             alpha: 1.0,
         }
     }
@@ -450,6 +694,52 @@ impl SimConfig {
                 self.workload.shared_pool_prob = v.as_f64()?
             }
             ("workload", "seed") => self.workload.seed = v.as_u64()?,
+            ("topology", "mode") => {
+                self.topology.mode = match v.as_str()? {
+                    "static" => TopologyMode::Static,
+                    "walker" => TopologyMode::Walker,
+                    other => {
+                        return Err(Error::Config(format!(
+                            "topology mode '{other}' is not 'static' or 'walker'"
+                        )))
+                    }
+                }
+            }
+            ("topology", "kind") => {
+                self.topology.kind = match v.as_str()? {
+                    "delta" => WalkerKind::Delta,
+                    "star" => WalkerKind::Star,
+                    other => {
+                        return Err(Error::Config(format!(
+                            "topology kind '{other}' is not 'delta' or 'star'"
+                        )))
+                    }
+                }
+            }
+            ("topology", "period_s") => self.topology.period_s = v.as_f64()?,
+            ("topology", "duty") => self.topology.duty = v.as_f64()?,
+            ("topology", "phasing") => self.topology.phasing = v.as_usize()?,
+            ("topology", "inter_rate_scale") => {
+                self.topology.inter_rate_scale = v.as_f64()?
+            }
+            ("topology", "inter_extra_latency_s") => {
+                self.topology.inter_extra_latency_s = v.as_f64()?
+            }
+            ("topology", "outages") => {
+                self.topology.outages =
+                    OutageSpec::parse_list(v.as_str()?).map_err(Error::Config)?
+            }
+            ("topology", "ground_stations") => {
+                self.topology.ground_stations = v.as_usize()?
+            }
+            ("topology", "pass_period_s") => {
+                self.topology.pass_period_s = v.as_f64()?
+            }
+            ("topology", "pass_duty") => self.topology.pass_duty = v.as_f64()?,
+            ("topology", "planes") => self.topology.planes = Some(v.as_usize()?),
+            ("topology", "sats_per_plane") => {
+                self.topology.sats_per_plane = Some(v.as_usize()?)
+            }
             ("sim", "alpha") => self.alpha = v.as_f64()?,
             _ => return unknown(),
         }
@@ -643,6 +933,213 @@ retry_backoff = 2.0
         assert_eq!(c.comm.max_retries, 5);
         assert_eq!(c.comm.retry_backoff, 2.0);
         assert!(c.comm.faults_active());
+    }
+
+    #[test]
+    fn paper_default_topology_is_static() {
+        // The contact plan must be degenerate by default: static configs
+        // take the legacy broadcast path and reproduce existing goldens.
+        let c = SimConfig::paper_default(5);
+        assert_eq!(c.topology.mode, TopologyMode::Static);
+        assert!(!c.topology.is_dynamic());
+        c.topology.check(5).unwrap();
+    }
+
+    #[test]
+    fn topology_is_dynamic_detects_each_knob() {
+        let base = TopologyConfig::default();
+
+        // Walker with full duty and no modifiers is still degenerate —
+        // that is the semantic detection the degenerate-plan property
+        // test relies on.
+        let mut c = base.clone();
+        c.mode = TopologyMode::Walker;
+        assert!(!c.is_dynamic());
+        c.check(5).unwrap();
+
+        let mut c = base.clone();
+        c.mode = TopologyMode::Walker;
+        c.duty = 0.6;
+        assert!(c.is_dynamic());
+
+        let mut c = base.clone();
+        c.mode = TopologyMode::Walker;
+        c.inter_rate_scale = 0.5;
+        assert!(c.is_dynamic());
+
+        let mut c = base.clone();
+        c.mode = TopologyMode::Walker;
+        c.inter_extra_latency_s = 0.01;
+        assert!(c.is_dynamic());
+
+        let mut c = base.clone();
+        c.outages = vec![OutageSpec {
+            a: 0,
+            b: 1,
+            start: 10.0,
+            end: 20.0,
+        }];
+        assert!(c.is_dynamic());
+
+        let mut c = base.clone();
+        c.ground_stations = 2;
+        assert!(c.is_dynamic());
+
+        // Stations with a zero pass duty never produce a pass.
+        let mut c = base;
+        c.ground_stations = 2;
+        c.pass_duty = 0.0;
+        assert!(!c.is_dynamic());
+    }
+
+    #[test]
+    fn topology_check_names_each_bad_value() {
+        let walker = || {
+            let mut c = TopologyConfig::default();
+            c.mode = TopologyMode::Walker;
+            c
+        };
+
+        let mut c = walker();
+        c.duty = 0.0;
+        let err = c.check(5).unwrap_err();
+        assert!(err.contains("duty=0"), "value named: {err}");
+        assert!(err.contains("(0, 1]"), "range named: {err}");
+
+        let mut c = walker();
+        c.period_s = 0.0;
+        let err = c.check(5).unwrap_err();
+        assert!(err.contains("period_s=0"), "value named: {err}");
+
+        let mut c = walker();
+        c.inter_rate_scale = 2.0;
+        let err = c.check(5).unwrap_err();
+        assert!(err.contains("inter_rate_scale=2"), "value named: {err}");
+        assert!(err.contains("lookahead"), "soundness rationale named: {err}");
+
+        let mut c = walker();
+        c.inter_extra_latency_s = -1.0;
+        let err = c.check(5).unwrap_err();
+        assert!(err.contains("inter_extra_latency_s=-1"), "value named: {err}");
+
+        // Walker knobs are inert in static mode: reject, don't ignore.
+        let mut c = TopologyConfig::default();
+        c.duty = 0.5;
+        let err = c.check(5).unwrap_err();
+        assert!(err.contains("static mode"), "mode conflict named: {err}");
+
+        let mut c = walker();
+        c.planes = Some(6);
+        let err = c.check(5).unwrap_err();
+        assert!(err.contains("planes/sats_per_plane=6"), "value named: {err}");
+        assert!(err.contains("n=5"), "constraint named: {err}");
+
+        // Outage endpoints must be an in-bounds grid ISL.
+        let mut c = TopologyConfig::default();
+        c.outages = vec![OutageSpec {
+            a: 0,
+            b: 99,
+            start: 0.0,
+            end: 1.0,
+        }];
+        let err = c.check(5).unwrap_err();
+        assert!(err.contains("0-99"), "link named: {err}");
+
+        let mut c = TopologyConfig::default();
+        c.outages = vec![OutageSpec {
+            a: 0,
+            b: 6,
+            start: 0.0,
+            end: 1.0,
+        }];
+        let err = c.check(5).unwrap_err();
+        assert!(err.contains("not a grid ISL"), "adjacency named: {err}");
+
+        let mut c = TopologyConfig::default();
+        c.outages = vec![OutageSpec {
+            a: 0,
+            b: 1,
+            start: 5.0,
+            end: 5.0,
+        }];
+        let err = c.check(5).unwrap_err();
+        assert!(err.contains("start < end"), "interval rule named: {err}");
+
+        let mut c = TopologyConfig::default();
+        c.ground_stations = 1;
+        c.pass_duty = 1.0;
+        let err = c.check(5).unwrap_err();
+        assert!(err.contains("pass_duty=1"), "value named: {err}");
+        assert!(err.contains("[0, 1)"), "range named: {err}");
+    }
+
+    #[test]
+    fn outage_list_parses_and_rejects_garbage() {
+        let specs = OutageSpec::parse_list("3-4@100..200, 7-8@50..80").unwrap();
+        assert_eq!(
+            specs,
+            vec![
+                OutageSpec {
+                    a: 3,
+                    b: 4,
+                    start: 100.0,
+                    end: 200.0
+                },
+                OutageSpec {
+                    a: 7,
+                    b: 8,
+                    start: 50.0,
+                    end: 80.0
+                },
+            ]
+        );
+        assert!(OutageSpec::parse_list("").unwrap().is_empty());
+        for bad in ["3-4", "3@100..200", "3-4@100", "a-b@x..y"] {
+            let err = OutageSpec::parse_list(bad).unwrap_err();
+            assert!(err.contains(bad), "bad entry echoed: {err}");
+            assert!(err.contains("a-b@start..end"), "format named: {err}");
+        }
+    }
+
+    #[test]
+    fn toml_accepts_topology_keys() {
+        let text = r#"
+[topology]
+mode = "walker"
+kind = "star"
+period_s = 600.0
+duty = 0.7
+phasing = 2
+inter_rate_scale = 0.8
+inter_extra_latency_s = 0.002
+outages = "3-4@100..200"
+ground_stations = 2
+pass_period_s = 900.0
+pass_duty = 0.1
+planes = 5
+sats_per_plane = 5
+"#;
+        let c = SimConfig::from_toml_str(text).unwrap();
+        assert_eq!(c.topology.mode, TopologyMode::Walker);
+        assert_eq!(c.topology.kind, WalkerKind::Star);
+        assert_eq!(c.topology.period_s, 600.0);
+        assert_eq!(c.topology.duty, 0.7);
+        assert_eq!(c.topology.phasing, 2);
+        assert_eq!(c.topology.inter_rate_scale, 0.8);
+        assert_eq!(c.topology.inter_extra_latency_s, 0.002);
+        assert_eq!(c.topology.outages.len(), 1);
+        assert_eq!(c.topology.ground_stations, 2);
+        assert_eq!(c.topology.pass_period_s, 900.0);
+        assert_eq!(c.topology.pass_duty, 0.1);
+        assert_eq!(c.topology.planes, Some(5));
+        assert_eq!(c.topology.sats_per_plane, Some(5));
+        assert!(c.topology.is_dynamic());
+        c.topology.check(c.network.n).unwrap();
+
+        let err = SimConfig::from_toml_str("[topology]\nmode = \"torus\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("torus"), "bad mode echoed: {err}");
     }
 
     #[test]

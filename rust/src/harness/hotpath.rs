@@ -18,7 +18,7 @@ use std::time::Duration;
 
 use crate::compute::kernels::{gemm_nt, gemv};
 use crate::compute::{native::ssim_global, ComputeBackend, NativeBackend, Preprocessed};
-use crate::config::SimConfig;
+use crate::config::{SimConfig, TopologyMode};
 use crate::coordinator::scrt::{Record, Scrt};
 use crate::coordinator::Scenario;
 use crate::error::Result;
@@ -293,6 +293,25 @@ pub fn run_suite(opts: &HotpathOpts) -> Result<Bencher> {
             .unwrap();
         black_box(r.total_tasks);
     });
+    // Same fixture under a time-varying Walker contact plan on the
+    // 4-shard conservative engine: every broadcast goes through the
+    // contact-gated chunk planner and every window boundary re-queries
+    // `lookahead_at`, so this is the canary for both the `next_fit`
+    // fixpoint and the per-window lookahead machinery.
+    let mut walker = mid.clone();
+    walker.topology.mode = TopologyMode::Walker;
+    walker.topology.duty = 0.7;
+    walker.topology.period_s = 120.0;
+    b.bench("event_loop_walker_t4", || {
+        let r = Simulation::new(&walker, &backend5, Scenario::Sccr)
+            .aggregate_only()
+            .threads(4)
+            .with_workload(&wl5)
+            .with_prepared(&prep5)
+            .run()
+            .unwrap();
+        black_box(r.total_tasks);
+    });
 
     // ---- extended grids (11×11, 15×15), one timed pass each -------------
     if opts.scale {
@@ -502,6 +521,7 @@ mod tests {
             "event_loop_5x5_125",
             "event_loop_5x5_125_t4",
             "event_loop_5x5_125_lossy",
+            "event_loop_walker_t4",
         ] {
             assert!(names.contains(&expect), "missing bench '{expect}'");
         }

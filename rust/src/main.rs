@@ -17,7 +17,7 @@ use std::collections::HashMap;
 use std::process::ExitCode;
 
 use ccrsat::compute::{ComputeBackend, NativeBackend, PjrtBackend};
-use ccrsat::config::SimConfig;
+use ccrsat::config::{OutageSpec, SimConfig, TopologyMode, WalkerKind};
 use ccrsat::coordinator::Scenario;
 use ccrsat::harness::experiments as exp;
 use ccrsat::harness::hotpath;
@@ -78,6 +78,12 @@ COMMON OPTIONS:
     --link-bandwidth <B> per-link bandwidth cap in bits/s (default uncapped)
     --chunk-bytes <C>    transfer chunk size in bytes (default whole-record)
     --max-retries <R>    retransmission attempts per chunk (default 3)
+    --topology <SPEC>    contact-plan topology: 'static' (default) or
+                         'walker[:k=v,...]' with keys kind=delta|star,
+                         period=<S>, duty=<F>, phasing=<K>, scale=<F>,
+                         extra=<S>, gs=<K>, pass-period=<S>, pass-duty=<F>
+    --outages <LIST>     scripted link outages 'a-b@start..end[,...]'
+                         (satellite ids, seconds; composes with --topology)
     --json               emit machine-readable JSON instead of text
     --csv                emit CSV (reproduce/sweep)
     --help               this help
@@ -225,8 +231,84 @@ fn load_config(flags: &Flags) -> Result<SimConfig> {
     if let Some(retries) = flags.parse_usize("max-retries")? {
         cfg.comm.max_retries = retries;
     }
+    // Contact-plan overrides (see `TopologyConfig`): `--topology
+    // walker:duty=0.6,period=5400` puts the inter-plane ISLs on a
+    // Walker-shell duty cycle; `--outages "a-b@t0..t1,..."` scripts
+    // absolute link outages on top of whichever mode is active.
+    if let Some(spec) = flags.get("topology") {
+        apply_topology_flag(&mut cfg, spec)?;
+    }
+    if let Some(list) = flags.get("outages") {
+        cfg.topology.outages =
+            OutageSpec::parse_list(list).map_err(Error::config)?;
+    }
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Apply a `--topology` spec: a mode name (`static` | `walker`) optionally
+/// followed by `:key=value,...` refinements. Structural validation (duty
+/// ranges, grid adjacency of outages, ...) stays in
+/// [`ccrsat::config::TopologyConfig::check`], which both engines run — this
+/// only translates the flag syntax onto the config fields.
+fn apply_topology_flag(cfg: &mut SimConfig, spec: &str) -> Result<()> {
+    let (mode, rest) = match spec.split_once(':') {
+        Some((m, r)) => (m, Some(r)),
+        None => (spec, None),
+    };
+    cfg.topology.mode = match mode {
+        "static" => TopologyMode::Static,
+        "walker" => TopologyMode::Walker,
+        other => {
+            return Err(Error::config(format!(
+                "--topology mode '{other}' is not 'static' or 'walker'"
+            )))
+        }
+    };
+    let Some(rest) = rest else { return Ok(()) };
+    for kv in rest.split(',').filter(|s| !s.is_empty()) {
+        let (k, v) = kv.split_once('=').ok_or_else(|| {
+            Error::config(format!("--topology option '{kv}' is not 'key=value'"))
+        })?;
+        let num = |v: &str| {
+            v.parse::<f64>().map_err(|_| {
+                Error::config(format!("--topology {k} wants a number, got '{v}'"))
+            })
+        };
+        let int = |v: &str| {
+            v.parse::<usize>().map_err(|_| {
+                Error::config(format!("--topology {k} wants an integer, got '{v}'"))
+            })
+        };
+        match k {
+            "kind" => {
+                cfg.topology.kind = match v {
+                    "delta" => WalkerKind::Delta,
+                    "star" => WalkerKind::Star,
+                    other => {
+                        return Err(Error::config(format!(
+                            "--topology kind '{other}' is not 'delta' or 'star'"
+                        )))
+                    }
+                }
+            }
+            "period" => cfg.topology.period_s = num(v)?,
+            "duty" => cfg.topology.duty = num(v)?,
+            "phasing" => cfg.topology.phasing = int(v)?,
+            "scale" => cfg.topology.inter_rate_scale = num(v)?,
+            "extra" => cfg.topology.inter_extra_latency_s = num(v)?,
+            "gs" => cfg.topology.ground_stations = int(v)?,
+            "pass-period" => cfg.topology.pass_period_s = num(v)?,
+            "pass-duty" => cfg.topology.pass_duty = num(v)?,
+            other => {
+                return Err(Error::config(format!(
+                    "unknown --topology option '{other}' (kind, period, duty, \
+                     phasing, scale, extra, gs, pass-period, pass-duty)"
+                )))
+            }
+        }
+    }
+    Ok(())
 }
 
 /// The explicit scale override for commands that select their own scale

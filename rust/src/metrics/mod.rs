@@ -45,6 +45,12 @@ pub struct RunCounters {
     pub dropped_chunks: u64,
     /// Bytes saved by content-id dedup (chunks the holder already had).
     pub dedup_saved_bytes: f64,
+    /// Chunk sends deferred to a later contact window (contact plans).
+    pub handovers: u64,
+    /// Chunks no contact window could ever carry (never sent at all).
+    pub stranded_chunks: u64,
+    /// Seconds chunks spent waiting for a contact window to open.
+    pub contact_wait_s: f64,
 }
 
 /// Per-satellite summary at the end of a run.
@@ -131,6 +137,16 @@ pub struct RunReport {
     pub dropped_chunks: u64,
     /// MB *not* re-sent thanks to content-id chunk dedup.
     pub dedup_saved_mb: f64,
+    /// Chunk sends deferred to a later contact window (0 on a static
+    /// always-on topology).
+    pub handovers: u64,
+    /// Chunks no contact window could ever carry (0 on a static topology).
+    pub stranded_chunks: u64,
+    /// Total seconds chunks waited for contact windows.
+    pub contact_wait_s: f64,
+    /// Fraction of link engagement spent transmitting rather than waiting
+    /// for a contact: `airtime / (airtime + wait)`, 1.0 when nothing waited.
+    pub contact_utilization: f64,
     pub mean_latency: f64,
     pub p95_latency: f64,
     pub per_satellite: Vec<SatSummary>,
@@ -186,6 +202,10 @@ impl RunReport {
             ("retransmits", Json::num(self.retransmits as f64)),
             ("dropped_chunks", Json::num(self.dropped_chunks as f64)),
             ("dedup_saved_mb", Json::num(self.dedup_saved_mb)),
+            ("handovers", Json::num(self.handovers as f64)),
+            ("stranded_chunks", Json::num(self.stranded_chunks as f64)),
+            ("contact_wait_s", Json::num(self.contact_wait_s)),
+            ("contact_utilization", Json::num(self.contact_utilization)),
             ("mean_latency_s", Json::num(self.mean_latency)),
             ("p95_latency_s", Json::num(self.p95_latency)),
             ("wallclock_s", Json::num(self.wallclock_s)),
@@ -331,6 +351,15 @@ impl MetricsAccum {
             retransmits: counters.retransmits,
             dropped_chunks: counters.dropped_chunks,
             dedup_saved_mb: counters.dedup_saved_bytes / 1e6,
+            handovers: counters.handovers,
+            stranded_chunks: counters.stranded_chunks,
+            contact_wait_s: counters.contact_wait_s,
+            contact_utilization: if counters.contact_wait_s == 0.0 {
+                1.0
+            } else {
+                counters.comm_seconds
+                    / (counters.comm_seconds + counters.contact_wait_s)
+            },
             mean_latency: stats::mean(&self.latencies),
             p95_latency: stats::percentile(&self.latencies, 95.0),
             per_satellite,
@@ -598,6 +627,53 @@ mod tests {
         assert!(json.contains("\"retransmits\""));
         assert!(json.contains("\"dropped_chunks\""));
         assert!(json.contains("\"dedup_saved_mb\""));
+    }
+
+    #[test]
+    fn contact_counters_flow_into_the_report_and_json() {
+        let counters = RunCounters {
+            comm_seconds: 3.0,
+            handovers: 4,
+            stranded_chunks: 2,
+            contact_wait_s: 1.0,
+            ..RunCounters::default()
+        };
+        let r = aggregate(
+            Scenario::Sccr,
+            5,
+            vec![mk_task(0, false, true, 1.0)],
+            vec![mk_sat(1, 0.5)],
+            1.0,
+            &counters,
+            0.0,
+        );
+        assert_eq!(r.handovers, 4);
+        assert_eq!(r.stranded_chunks, 2);
+        assert_eq!(r.contact_wait_s, 1.0);
+        assert!((r.contact_utilization - 0.75).abs() < 1e-12);
+        let json = r.to_json().to_string_pretty();
+        assert!(json.contains("\"handovers\""));
+        assert!(json.contains("\"stranded_chunks\""));
+        assert!(json.contains("\"contact_wait_s\""));
+        assert!(json.contains("\"contact_utilization\""));
+    }
+
+    #[test]
+    fn contact_utilization_defaults_to_one_with_no_waiting() {
+        let counters = RunCounters {
+            comm_seconds: 0.0,
+            ..RunCounters::default()
+        };
+        let r = aggregate(
+            Scenario::Sccr,
+            5,
+            vec![mk_task(0, false, true, 1.0)],
+            vec![mk_sat(1, 0.5)],
+            1.0,
+            &counters,
+            0.0,
+        );
+        assert_eq!(r.contact_utilization, 1.0);
     }
 
     #[test]

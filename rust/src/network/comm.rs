@@ -9,11 +9,19 @@
 //! Satellites only talk to grid neighbours (Sec. III-B), so record
 //! broadcasts propagate hop-by-hop; the data-transfer volume criterion
 //! counts every byte crossing every link.
+//!
+//! Under a time-varying [`ContactPlan`], the chunked planner additionally
+//! gates every last-hop transmission on a contact window: a chunk whose
+//! link is down (outage, Walker duty gap, ground pass) waits for the next
+//! window (`handover`), and a chunk no window can ever carry is
+//! `stranded`. The conservative lookahead the sharded engine needs is the
+//! per-window query [`CommModel::lookahead_at`]; its soundness rests on
+//! the plan's modifiers being slowing-only — see that method's docs.
 
 use std::collections::HashMap;
 
 use crate::config::{CommConfig, NetworkConfig};
-use crate::network::topology::GridTopology;
+use crate::network::topology::{ContactPlan, GridTopology};
 use crate::util::rng::hash_unit;
 use crate::workload::SatId;
 
@@ -51,11 +59,15 @@ impl BroadcastPlan {
 /// One scheduled chunk arrival of a lossy broadcast.
 #[derive(Clone, Copy, Debug)]
 pub struct ChunkDelivery {
+    /// Virtual arrival time at the destination.
     pub time: f64,
+    /// Receiving satellite.
     pub dst: SatId,
     /// Index into the broadcast's record list (plan order).
     pub rec_slot: usize,
+    /// Chunk index within the record.
     pub chunk_seq: usize,
+    /// Chunks per record of this transfer.
     pub total_chunks: usize,
 }
 
@@ -64,8 +76,11 @@ pub struct ChunkDelivery {
 /// is abandoned and its record stays incomplete at that destination.
 #[derive(Clone, Copy, Debug)]
 pub struct ChunkTimeout {
+    /// Virtual time the sender detects the failure.
     pub time: f64,
+    /// Broadcasting satellite (where the timeout event fires).
     pub src: SatId,
+    /// Final attempt: the chunk is abandoned rather than retried.
     pub dropped: bool,
 }
 
@@ -79,13 +94,27 @@ pub struct LossyPlan {
     pub bytes: f64,
     /// Link airtime Ψ contribution, seconds (every attempt pays).
     pub airtime_s: f64,
+    /// Scheduled chunk arrivals, in plan order.
     pub deliveries: Vec<ChunkDelivery>,
+    /// Scheduled sender-side failure detections, in plan order.
     pub timeouts: Vec<ChunkTimeout>,
+    /// Failed attempts that were retried.
     pub retransmits: u64,
+    /// Chunks abandoned after exhausting retries.
     pub dropped_chunks: u64,
     /// Bytes *not* re-sent because the destination already held the chunk
     /// from an earlier broadcast (content-id dedup).
     pub dedup_saved_bytes: f64,
+    /// Chunk sends deferred to a later contact window of their last-hop
+    /// link (always 0 under a degenerate plan).
+    pub handovers: u64,
+    /// Total seconds deferred chunks spent waiting for a contact window.
+    pub contact_wait_s: f64,
+    /// Chunks abandoned because no contact window can ever carry them
+    /// (e.g. a Walker duty window shorter than one chunk transmission).
+    /// Unlike drops these never touch the wire: no bytes, no airtime, no
+    /// timeout event.
+    pub stranded_chunks: u64,
     /// When the network falls quiet: the latest scheduled delivery or
     /// timeout (`now` if every chunk deduped away).
     pub quiet_until: f64,
@@ -119,6 +148,8 @@ pub struct LinkState {
 }
 
 impl LinkState {
+    /// Fresh transfer-layer state for a run seeded with `seed` (the seed
+    /// keys every chunk-fate hash draw).
     pub fn new(seed: u64) -> Self {
         LinkState {
             seed,
@@ -141,9 +172,13 @@ impl LinkState {
 /// Evaluated ISL link budget.
 #[derive(Clone, Copy, Debug)]
 pub struct LinkBudget {
+    /// Link distance, metres.
     pub distance_m: f64,
+    /// Free-space path loss `L` (eq. 3), linear.
     pub path_loss: f64,
+    /// Noise power `N₀` (eq. 4), watts.
     pub noise_w: f64,
+    /// Signal-to-noise ratio (eq. 2), linear.
     pub snr: f64,
     /// Achievable data rate, bits/s (eq. 1).
     pub rate_bps: f64,
@@ -158,6 +193,8 @@ pub struct CommModel {
 }
 
 impl CommModel {
+    /// Evaluate the link budgets for the configured intra-/inter-plane
+    /// distances and freeze the resulting rates.
     pub fn new(net: &NetworkConfig, cfg: &CommConfig) -> Self {
         let intra = Self::link_budget(cfg, net.intra_plane_distance_m);
         let inter = Self::link_budget(cfg, net.inter_plane_distance_m);
@@ -256,10 +293,51 @@ impl CommModel {
     /// (`record_bytes` over the raw rates): `chunk.min(INFINITY)` and
     /// `rate.min(INFINITY)` are exact identities. Degenerate configs
     /// (zero-byte records, non-finite link rates) make this zero/NaN; the
-    /// sharded engine rejects those.
+    /// sharded engine rejects those. Under a contact plan the per-window
+    /// generalisation is [`Self::lookahead_at`]; this is its always-on
+    /// specialisation.
     pub fn min_hop_seconds(&self) -> f64 {
         let bits = self.chunk_bytes_effective() * 8.0;
         (bits / self.eff_intra_rate_bps()).min(bits / self.eff_inter_rate_bps())
+    }
+
+    /// Per-window conservative lookahead over a contact plan: a lower
+    /// bound on how far past `window_start` any event scheduled by a
+    /// broadcast resolved inside the window `[window_start, window_start +
+    /// lookahead)` can land.
+    ///
+    /// **Soundness.** Every scheduled delivery or timeout lies at least
+    /// one *effective* last-hop chunk transmission past its collaboration
+    /// instant, and contact gating only moves transmissions later
+    /// (`next_fit` defers, never advances; stranded chunks schedule
+    /// nothing at all). The plan's rate modifiers are slowing-only by
+    /// validation (`inter_rate_scale ∈ (0, 1]`, `inter_extra_latency_s ≥
+    /// 0`), so the effective inter-plane edge time `t_inter /
+    /// inter_rate_scale + inter_extra_latency_s` is computed here with the
+    /// *same* IEEE operations the planner uses — the bound is float-exact,
+    /// not approximate. For a degenerate plan this returns
+    /// [`Self::min_hop_seconds`] bit-for-bit (same expression, untouched
+    /// operands), which is what keeps static-grid window boundaries — and
+    /// therefore whole runs — identical to the pre-contact-plan engine.
+    ///
+    /// The bound is constant in `window_start` for the current plan
+    /// families (periodic gates and outages change *availability*, not
+    /// rates); a plan with time-varying rate modifiers would tighten the
+    /// value per window here, which is why the engines query per window
+    /// rather than hoisting the value out of the loop.
+    pub fn lookahead_at(&self, contacts: &ContactPlan, window_start: f64) -> f64 {
+        debug_assert!(
+            window_start.is_finite(),
+            "conservative windows start at finite times"
+        );
+        if !contacts.is_dynamic() {
+            return self.min_hop_seconds();
+        }
+        let bits = self.chunk_bytes_effective() * 8.0;
+        let t_intra = bits / self.eff_intra_rate_bps();
+        let t_inter = bits / self.eff_inter_rate_bps() / contacts.inter_rate_scale()
+            + contacts.inter_extra_latency_s();
+        t_intra.min(t_inter)
     }
 
     /// Seconds to deliver `records` records from `src` to `dst` hop-by-hop
@@ -355,9 +433,20 @@ impl CommModel {
     /// shape, at chunk granularity); loss and contention are modelled on
     /// the last hop into each member, whose ingest link is the resource
     /// concurrent broadcasts fight over.
+    ///
+    /// Under a dynamic `contacts` plan, the same last hop is additionally
+    /// the link that must be *up*: each attempt is deferred to the next
+    /// contact window fitting the whole chunk (a `handover`, accumulating
+    /// `contact_wait_s`), inter-plane hops pay the plan's slowing-only
+    /// rate modifiers, and a chunk no window can ever carry is counted
+    /// `stranded` without touching the wire — it cannot schedule a
+    /// timeout, because no event time would respect the conservative
+    /// lookahead bound. A degenerate plan leaves every computation here
+    /// bit-for-bit identical to the plain lossy path.
     pub fn plan_lossy_broadcast(
         &self,
         topo: &GridTopology,
+        contacts: &ContactPlan,
         link: &mut LinkState,
         src: SatId,
         area: &[SatId],
@@ -368,6 +457,7 @@ impl CommModel {
         let chunk_bits = chunk * 8.0;
         let t_intra = chunk_bits / self.eff_intra_rate_bps();
         let t_inter = chunk_bits / self.eff_inter_rate_bps();
+        let dynamic = contacts.is_dynamic();
         let total_chunks = self.chunks_per_record();
         let loss = self.cfg.loss_prob;
         let fail_p = loss + (1.0 - loss) * self.cfg.corrupt_prob;
@@ -392,8 +482,17 @@ impl CommModel {
             let (mo, ms) = topo.coords(m);
             let last_hop_inter = if ms != ss { false } else { mo != so };
             let t_edge = if last_hop_inter { t_inter } else { t_intra };
+            // Contact-plan rate modifiers are slowing-only (scale ≤ 1,
+            // extra ≥ 0), so the effective edge time only grows — the
+            // lookahead bound survives. Degenerate plans leave `t_edge`
+            // untouched (same f64, not just same value).
+            let t_edge = if dynamic && last_hop_inter {
+                t_edge / contacts.inter_rate_scale() + contacts.inter_extra_latency_s()
+            } else {
+                t_edge
+            };
             bottleneck = bottleneck.max(t_edge);
-            members.push((m, depth, t_edge));
+            members.push((m, depth, t_edge, topo.route_parent(src, m)));
         }
 
         let mut plan = LossyPlan {
@@ -404,9 +503,12 @@ impl CommModel {
             retransmits: 0,
             dropped_chunks: 0,
             dedup_saved_bytes: 0.0,
+            handovers: 0,
+            contact_wait_s: 0.0,
+            stranded_chunks: 0,
             quiet_until: now,
         };
-        for &(dst, depth, t_edge) in &members {
+        for &(dst, depth, t_edge, parent) in &members {
             let busy = busy_until.entry(dst).or_insert(0.0);
             for (slot, &rid) in record_ids.iter().enumerate() {
                 let held = possession
@@ -428,7 +530,26 @@ impl CommModel {
                     // (depth-1+j) bottleneck slots.
                     let mut ready = now + (depth - 1 + j) as f64 * bottleneck;
                     for attempt in 0..=self.cfg.max_retries {
-                        let start = ready.max(*busy);
+                        let queued = ready.max(*busy);
+                        let start = if dynamic {
+                            match contacts.next_fit(parent, dst, queued, t_edge) {
+                                Some(s) => s,
+                                None => {
+                                    // No contact window can ever carry this
+                                    // chunk: it never touches the wire and
+                                    // schedules nothing (a timeout here
+                                    // would violate the lookahead bound).
+                                    plan.stranded_chunks += 1;
+                                    break;
+                                }
+                            }
+                        } else {
+                            queued
+                        };
+                        if start > queued {
+                            plan.handovers += 1;
+                            plan.contact_wait_s += start - queued;
+                        }
                         let arr = start + t_edge;
                         *busy = arr;
                         plan.bytes += chunk;
@@ -677,10 +798,11 @@ mod tests {
     fn lossless_chunked_plan_covers_every_chunk() {
         let (topo, m) = lossy_model(0.0, 3);
         let mut link = LinkState::new(42);
+        let cp = ContactPlan::always_on(5);
         let src = topo.sat_at(2, 2);
         let area = topo.area(src, 1);
         let ids = [10usize, 11];
-        let plan = m.plan_lossy_broadcast(&topo, &mut link, src, &area, &ids, 5.0);
+        let plan = m.plan_lossy_broadcast(&topo, &cp, &mut link, src, &area, &ids, 5.0);
         let per_rec = m.chunks_per_record();
         let receivers = area.len() - 1;
         assert!(per_rec > 1, "6 MB chunks must split a ~20.5 MB record");
@@ -704,11 +826,12 @@ mod tests {
     fn every_lossy_event_lands_past_the_lookahead() {
         let (topo, m) = lossy_model(0.3, 3);
         let mut link = LinkState::new(7);
+        let cp = ContactPlan::always_on(5);
         let src = topo.sat_at(0, 0);
         let area = topo.area(src, 2);
         let now = 123.25;
         let plan =
-            m.plan_lossy_broadcast(&topo, &mut link, src, &area, &[0, 1, 2], now);
+            m.plan_lossy_broadcast(&topo, &cp, &mut link, src, &area, &[0, 1, 2], now);
         assert!(plan.retransmits > 0, "loss 0.3 over this many draws must fail some");
         let lookahead = m.min_hop_seconds();
         for d in &plan.deliveries {
@@ -728,16 +851,17 @@ mod tests {
     fn dedup_skips_chunks_already_held() {
         let (topo, m) = lossy_model(0.0, 3);
         let mut link = LinkState::new(9);
+        let cp = ContactPlan::always_on(5);
         let src = topo.sat_at(2, 2);
         let area = topo.area(src, 1);
-        let first = m.plan_lossy_broadcast(&topo, &mut link, src, &area, &[3, 4], 0.0);
+        let first = m.plan_lossy_broadcast(&topo, &cp, &mut link, src, &area, &[3, 4], 0.0);
         assert_eq!(first.dedup_saved_bytes, 0.0);
 
         // In-flight chunks don't dedup: a second overlapping broadcast at
         // the same instant re-sends record 3 in full (possession records
         // *scheduled arrivals*, none of which have happened yet).
         let mut inflight = link.clone();
-        let mid = m.plan_lossy_broadcast(&topo, &mut inflight, src, &area, &[3], 0.0);
+        let mid = m.plan_lossy_broadcast(&topo, &cp, &mut inflight, src, &area, &[3], 0.0);
         assert_eq!(mid.dedup_saved_bytes, 0.0);
         assert!(!mid.deliveries.is_empty());
 
@@ -745,7 +869,7 @@ mod tests {
         // everywhere: a broadcast of {3, 4, 5} moves only record 5.
         let later = first.quiet_until + 1.0;
         let second =
-            m.plan_lossy_broadcast(&topo, &mut link, src, &area, &[3, 4, 5], later);
+            m.plan_lossy_broadcast(&topo, &cp, &mut link, src, &area, &[3, 4, 5], later);
         let per_rec = m.chunks_per_record();
         let receivers = area.len() - 1;
         assert_eq!(second.deliveries.len(), receivers * per_rec);
@@ -775,9 +899,10 @@ mod tests {
         let clean = CommModel::new(&cfg.network, &cfg.comm);
         let topo = GridTopology::new(5);
         let mut link = LinkState::new(1);
+        let cp = ContactPlan::always_on(5);
         let src = topo.sat_at(2, 2);
         let area = topo.area(src, 1);
-        let first = lossy.plan_lossy_broadcast(&topo, &mut link, src, &area, &[8], 0.0);
+        let first = lossy.plan_lossy_broadcast(&topo, &cp, &mut link, src, &area, &[8], 0.0);
         assert!(first.dropped_chunks > 0, "loss 0.6 with no retries must drop");
         assert_eq!(first.retransmits, 0);
         assert!(first.timeouts.iter().all(|t| t.dropped));
@@ -788,7 +913,7 @@ mod tests {
 
         let later = first.quiet_until + 1.0;
         let second =
-            clean.plan_lossy_broadcast(&topo, &mut link, src, &area, &[8], later);
+            clean.plan_lossy_broadcast(&topo, &cp, &mut link, src, &area, &[8], later);
         assert_eq!(second.deliveries.len(), receivers * per_rec - delivered);
         let saved = delivered as f64 * clean.chunk_bytes_effective();
         assert!((second.dedup_saved_bytes - saved).abs() < 1.0);
@@ -807,9 +932,10 @@ mod tests {
     fn retries_exhaustion_splits_retransmits_from_drops() {
         let (topo, m) = lossy_model(0.95, 2);
         let mut link = LinkState::new(3);
+        let cp = ContactPlan::always_on(5);
         let src = topo.sat_at(1, 1);
         let area = topo.area(src, 1);
-        let plan = m.plan_lossy_broadcast(&topo, &mut link, src, &area, &[0], 0.0);
+        let plan = m.plan_lossy_broadcast(&topo, &cp, &mut link, src, &area, &[0], 0.0);
         assert!(plan.retransmits > 0);
         assert!(plan.dropped_chunks > 0, "0.95³ per-chunk drop odds must hit");
         assert_eq!(
@@ -826,13 +952,14 @@ mod tests {
     fn ingest_contention_serializes_per_destination_arrivals() {
         let (topo, m) = lossy_model(0.0, 3);
         let mut link = LinkState::new(5);
+        let cp = ContactPlan::always_on(5);
         let src = topo.sat_at(1, 1);
         let area = topo.area(src, 1);
-        let plan1 = m.plan_lossy_broadcast(&topo, &mut link, src, &area, &[0], 0.0);
+        let plan1 = m.plan_lossy_broadcast(&topo, &cp, &mut link, src, &area, &[0], 0.0);
         // Distinct record at the same instant: the per-destination ingest
         // FIFO queues the whole second transfer behind the first instead
         // of overlapping them.
-        let plan2 = m.plan_lossy_broadcast(&topo, &mut link, src, &area, &[1], 0.0);
+        let plan2 = m.plan_lossy_broadcast(&topo, &cp, &mut link, src, &area, &[1], 0.0);
         let mut last: HashMap<SatId, f64> = HashMap::new();
         for d in plan1.deliveries.iter().chain(&plan2.deliveries) {
             let prev = last.insert(d.dst, d.time);
@@ -841,5 +968,157 @@ mod tests {
             }
         }
         assert!(plan2.quiet_until > plan1.quiet_until);
+    }
+
+    fn walker_topology(duty: f64, period: f64) -> crate::config::TopologyConfig {
+        crate::config::TopologyConfig {
+            mode: crate::config::TopologyMode::Walker,
+            duty,
+            period_s: period,
+            ..crate::config::TopologyConfig::default()
+        }
+    }
+
+    #[test]
+    fn degenerate_walker_plan_reproduces_the_static_schedule() {
+        // Walker mode with full duty and no modifiers must leave every
+        // f64 of the plan untouched — this is the bit-identity the
+        // static-golden reproduction rests on.
+        let (topo, m) = lossy_model(0.3, 3);
+        let always = ContactPlan::always_on(5);
+        let walker = ContactPlan::new(5, &walker_topology(1.0, 600.0));
+        assert!(!walker.is_dynamic());
+        let mut la = LinkState::new(17);
+        let mut lb = la.clone();
+        let src = topo.sat_at(1, 2);
+        let area = topo.area(src, 2);
+        let a = m.plan_lossy_broadcast(&topo, &always, &mut la, src, &area, &[0, 1], 2.5);
+        let b = m.plan_lossy_broadcast(&topo, &walker, &mut lb, src, &area, &[0, 1], 2.5);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        assert_eq!(a.handovers, 0);
+        assert_eq!(a.stranded_chunks, 0);
+        assert_eq!(a.contact_wait_s, 0.0);
+    }
+
+    #[test]
+    fn dynamic_plan_events_respect_the_per_window_lookahead() {
+        // The lookahead-soundness contract under a time-varying plan:
+        // every scheduled event of a broadcast resolved at `now` lands at
+        // least `lookahead_at(plan, now)` later, even with duty cycling,
+        // rate scaling, extra latency and retransmissions all active.
+        let mut cfg = SimConfig::paper_default(5);
+        cfg.comm.loss_prob = 0.3;
+        cfg.comm.chunk_bytes = 6e6;
+        cfg.topology = walker_topology(0.5, 100.0);
+        cfg.topology.inter_rate_scale = 0.8;
+        cfg.topology.inter_extra_latency_s = 0.002;
+        let m = CommModel::new(&cfg.network, &cfg.comm);
+        let topo = GridTopology::new(5);
+        let cp = ContactPlan::new(5, &cfg.topology);
+        assert!(cp.is_dynamic());
+        let lookahead = m.lookahead_at(&cp, 0.0);
+        assert!(lookahead >= m.min_hop_seconds());
+        let mut link = LinkState::new(23);
+        for (i, now) in [0.0, 31.25, 77.5].into_iter().enumerate() {
+            let src = topo.sat_at(i, i);
+            let area = topo.area(src, 2);
+            let plan =
+                m.plan_lossy_broadcast(&topo, &cp, &mut link, src, &area, &[i], now);
+            let bound = now + m.lookahead_at(&cp, now);
+            for d in &plan.deliveries {
+                assert!(d.time >= bound, "delivery {} < bound {bound}", d.time);
+            }
+            for t in &plan.timeouts {
+                assert!(t.time >= bound, "timeout {} < bound {bound}", t.time);
+            }
+        }
+    }
+
+    #[test]
+    fn outage_defers_chunks_to_the_window_end_and_counts_the_handover() {
+        let (topo, m) = lossy_model(0.0, 3);
+        let src = topo.sat_at(2, 2);
+        let area = topo.area(src, 1);
+        let t_intra = m.hop_seconds(m.chunk_bytes_effective());
+        let blocked = topo.sat_at(2, 3); // last hop src -> (2,3) is intra
+        let outage_end = 10.0 * t_intra;
+        let cfg = crate::config::TopologyConfig {
+            outages: vec![crate::config::OutageSpec {
+                a: src,
+                b: blocked,
+                start: 0.0,
+                end: outage_end,
+            }],
+            ..crate::config::TopologyConfig::default()
+        };
+        let cp = ContactPlan::new(5, &cfg);
+        let mut link = LinkState::new(11);
+        let plan = m.plan_lossy_broadcast(&topo, &cp, &mut link, src, &area, &[0], 0.0);
+        // Only the first chunk into the blocked member waits (the ingest
+        // FIFO carries the later ones past the outage on its own).
+        assert_eq!(plan.handovers, 1);
+        assert!(plan.contact_wait_s > 0.0);
+        assert_eq!(plan.stranded_chunks, 0);
+        for d in &plan.deliveries {
+            if d.dst == blocked {
+                assert!(
+                    d.time >= outage_end + t_intra,
+                    "chunk into the outage window: {}",
+                    d.time
+                );
+            }
+        }
+        // Members on other links are not disturbed: bit-identical to the
+        // always-on schedule.
+        let mut clean_link = LinkState::new(11);
+        let clean = m.plan_lossy_broadcast(
+            &topo,
+            &ContactPlan::always_on(5),
+            &mut clean_link,
+            src,
+            &area,
+            &[0],
+            0.0,
+        );
+        for (d, c) in plan
+            .deliveries
+            .iter()
+            .filter(|d| d.dst != blocked)
+            .zip(clean.deliveries.iter().filter(|d| d.dst != blocked))
+        {
+            assert_eq!(d.time, c.time);
+            assert_eq!(d.dst, c.dst);
+        }
+    }
+
+    #[test]
+    fn too_short_duty_windows_strand_inter_plane_chunks() {
+        // Duty windows of 1 ms can never carry a multi-second chunk: the
+        // inter-plane members' chunks are stranded (never sent, never
+        // timed out), while intra-plane members are served normally.
+        let (topo, m) = lossy_model(0.0, 3);
+        let cp = ContactPlan::new(5, &walker_topology(0.001, 1.0));
+        let mut link = LinkState::new(13);
+        let src = topo.sat_at(2, 2);
+        let area = topo.area(src, 1);
+        let plan = m.plan_lossy_broadcast(&topo, &cp, &mut link, src, &area, &[0], 0.0);
+        let per_rec = m.chunks_per_record();
+        // Radius-1 area: two inter-plane last hops ((1,2) and (3,2)).
+        assert_eq!(plan.stranded_chunks, 2 * per_rec as u64);
+        assert_eq!(plan.dropped_chunks, 0);
+        assert!(plan.timeouts.is_empty());
+        let inter_members = [topo.sat_at(1, 2), topo.sat_at(3, 2)];
+        for d in &plan.deliveries {
+            assert!(
+                !inter_members.contains(&d.dst),
+                "stranded member {} must receive nothing",
+                d.dst
+            );
+        }
+        // Six intra-last-hop members still get every chunk.
+        assert_eq!(plan.deliveries.len(), 6 * per_rec);
+        // Stranded chunks never touch the wire.
+        let sent = plan.deliveries.len() as f64 * m.chunk_bytes_effective();
+        assert!((plan.bytes - sent).abs() < 1.0);
     }
 }

@@ -1,16 +1,26 @@
-//! Constellation substrate: grid topology and the ISL communication model.
+//! Constellation substrate: grid topology, time-varying contact plans and
+//! the ISL communication model.
 //!
 //! * [`topology`] — the N×N constellation grid of the paper's Fig. 1:
 //!   row-major satellite ids, 4-neighbour inter-satellite links, Manhattan
 //!   routing distances, and the Chebyshev collaboration areas Alg. 2
 //!   searches ([`GridTopology::area`] / [`GridTopology::expand_area`]);
+//!   plus the [`ContactPlan`] that says *when* each of those links is
+//!   actually up (Walker-shell duty cycling, scripted outages,
+//!   ground-station passes), with the static grid as its degenerate
+//!   always-on case;
 //! * [`comm`] — the link-budget physics of eqs. (1)–(5): free-space path
 //!   loss, SNR and Shannon rate per link class, and the spanning-tree
 //!   broadcast planner ([`CommModel::plan_broadcast`]) that prices every
 //!   record share in bytes and airtime for the data-transfer criterion.
+//!   Its lossy sibling gates every chunk on the contact plan, and
+//!   [`CommModel::lookahead_at`] is the per-window conservative bound the
+//!   sharded engine runs on.
+
+#![deny(missing_docs)]
 
 pub mod comm;
 pub mod topology;
 
 pub use comm::{CommModel, LinkState, LossyPlan};
-pub use topology::GridTopology;
+pub use topology::{ContactPlan, ContactWindow, GridTopology};

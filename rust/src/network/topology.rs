@@ -1,11 +1,42 @@
-//! N×N constellation grid (Fig. 1 of the paper).
+//! N×N constellation grid (Fig. 1 of the paper) and the time-varying
+//! contact plan layered on top of it.
 //!
 //! Row = orbital plane, column = slot along the plane. Satellite ids are
 //! row-major (`orbit * n + slot`). ISLs connect the four grid neighbours
 //! (two intra-plane, two inter-plane); no wrap-around — the grid is a
 //! window onto a larger constellation, exactly like the paper's 5×5 / 7×7 /
 //! 9×9 scenes. Collaboration areas (Alg. 2) are Chebyshev neighbourhoods.
+//!
+//! The *connectivity* of that grid is no longer assumed permanent: a
+//! [`ContactPlan`] says when each ISL is actually up. Three ingredients
+//! compose (a link is up iff none of them blocks it):
+//!
+//! * **Walker-shell duty cycling** — in `walker` mode, inter-plane ISLs
+//!   follow a periodic gate (up for `duty · period_s` of each orbital
+//!   period, with per-link phase from the Walker delta/star phasing),
+//!   while intra-plane ISLs stay up: neighbours within one plane keep
+//!   constant separation, neighbours across planes drift with the
+//!   relative phasing of the planes.
+//! * **Scripted outages** — absolute `[start, end)` intervals from the
+//!   config during which a named ISL is down.
+//! * **Ground-station passes** — while a satellite is in a pass its
+//!   single radio points down, suppressing *all* its ISLs.
+//!
+//! The plan is queried in closed form (`link_up`, `next_fit`), and can be
+//! materialised as the sorted contact-interval view the contact-plan
+//! literature uses (`windows`). A plan whose gates never actually fire is
+//! *degenerate* ([`ContactPlan::is_dynamic`] is false): the engines detect
+//! this and take the legacy always-on broadcast arithmetic verbatim, which
+//! is what keeps static-grid goldens bit-for-bit reproducible.
+//!
+//! The conservative-window lookahead contract lives in
+//! [`CommModel::lookahead_at`](crate::network::CommModel::lookahead_at):
+//! the plan's rate modifiers are slowing-only (`inter_rate_scale ≤ 1`,
+//! `inter_extra_latency_s ≥ 0`), so the per-window minimum edge time the
+//! sharded engine uses as its lookahead never shrinks below what a
+//! scheduled chunk can achieve.
 
+use crate::config::{TopologyConfig, TopologyMode, WalkerKind};
 use crate::workload::SatId;
 
 /// The constellation grid.
@@ -15,11 +46,14 @@ pub struct GridTopology {
 }
 
 impl GridTopology {
+    /// Build an `n × n` grid (panics when `n < 2` — a single satellite
+    /// has no ISLs to model).
     pub fn new(n: usize) -> Self {
         assert!(n >= 2, "grid needs n >= 2");
         GridTopology { n }
     }
 
+    /// Grid scale `n` (planes = slots per plane = `n`).
     pub fn n(&self) -> usize {
         self.n
     }
@@ -29,6 +63,7 @@ impl GridTopology {
         self.n * self.n
     }
 
+    /// Always false: `new` rejects grids below 2×2.
     pub fn is_empty(&self) -> bool {
         false
     }
@@ -81,6 +116,25 @@ impl GridTopology {
         ao.abs_diff(bo) + as_.abs_diff(bs)
     }
 
+    /// The ISL neighbour of `dst` on the grid route from `src`: the
+    /// satellite a broadcast chunk crosses its *last* hop from. Routing is
+    /// slot-corrected first (intra-plane), then orbit-corrected
+    /// (inter-plane), matching the last-hop classification the chunked
+    /// planner in [`comm`](crate::network::comm) uses for its link-rate
+    /// and contact-window lookups.
+    pub fn route_parent(&self, src: SatId, dst: SatId) -> SatId {
+        debug_assert!(src != dst, "route_parent needs distinct endpoints");
+        let (so, ss) = self.coords(src);
+        let (mo, ms) = self.coords(dst);
+        if ms != ss {
+            // Last hop is intra-plane: step back along the slot axis.
+            self.sat_at(mo, if ms > ss { ms - 1 } else { ms + 1 })
+        } else {
+            // Slots aligned: the last hop crosses planes.
+            self.sat_at(if mo > so { mo - 1 } else { mo + 1 }, ms)
+        }
+    }
+
     /// Chebyshev distance (collaboration areas are square rings).
     pub fn chebyshev(&self, a: SatId, b: SatId) -> usize {
         let (ao, as_) = self.coords(a);
@@ -123,6 +177,362 @@ impl GridTopology {
     /// All satellite ids.
     pub fn all(&self) -> impl Iterator<Item = SatId> {
         0..self.len()
+    }
+}
+
+/// Iteration cap for the contact-search fixpoint: a chunk that cannot be
+/// placed within this many window transitions is declared stranded. Far
+/// beyond any plan the config validator accepts (a few periodic gates plus
+/// a bounded outage list), so hitting it means genuine infeasibility, not
+/// a tight budget.
+const MAX_FIT_STEPS: usize = 4096;
+
+/// One contact interval of a link, as materialised by
+/// [`ContactPlan::windows`]: the link is continuously up on
+/// `[start, end)` with the stated rate modifiers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ContactWindow {
+    /// One endpoint of the ISL.
+    pub a: SatId,
+    /// The other endpoint.
+    pub b: SatId,
+    /// Window start, virtual seconds (inclusive).
+    pub start: f64,
+    /// Window end, virtual seconds (exclusive).
+    pub end: f64,
+    /// Link-rate multiplier in effect during the window (≤ 1).
+    pub rate_scale: f64,
+    /// Extra per-chunk latency in effect during the window, seconds.
+    pub extra_latency_s: f64,
+}
+
+/// When every ISL of the grid is actually up, and at what effective rate.
+///
+/// Built from a validated [`TopologyConfig`]; see the module docs for the
+/// three composing ingredients (Walker duty gates, scripted outages,
+/// ground passes) and for the degeneracy contract that keeps static
+/// configs on the legacy broadcast path.
+#[derive(Clone, Debug)]
+pub struct ContactPlan {
+    n: usize,
+    cfg: TopologyConfig,
+    dynamic: bool,
+}
+
+/// Periodic duty gate: phase-shifted sawtooth `u = t / period + phase`,
+/// "on" while `fract(u) < duty`. Returns `(on_now, boundary)` where
+/// `boundary` is the end of the current on-window when on, or the start of
+/// the next on-window when off. Assumes `0 < duty < 1` (a full duty cycle
+/// never gates and must be short-circuited by the caller).
+fn periodic_gate(t: f64, period: f64, phase: f64, duty: f64) -> (bool, f64) {
+    let u = t / period + phase;
+    let k = u.floor();
+    if u - k < duty {
+        (true, (k - phase + duty) * period)
+    } else {
+        (false, (k + 1.0 - phase) * period)
+    }
+}
+
+impl ContactPlan {
+    /// Build the plan for an `n × n` grid from validated topology knobs.
+    /// Outages are re-sorted by start time so interval queries can
+    /// early-exit.
+    pub fn new(n: usize, cfg: &TopologyConfig) -> Self {
+        let mut cfg = cfg.clone();
+        cfg.outages.sort_by(|x, y| {
+            x.start
+                .total_cmp(&y.start)
+                .then(x.a.cmp(&y.a))
+                .then(x.b.cmp(&y.b))
+        });
+        ContactPlan {
+            n,
+            dynamic: cfg.is_dynamic(),
+            cfg,
+        }
+    }
+
+    /// The degenerate always-on plan: every ISL permanently up — the
+    /// static grid of the paper expressed as a contact plan.
+    pub fn always_on(n: usize) -> Self {
+        Self::new(n, &TopologyConfig::default())
+    }
+
+    /// Grid scale this plan was built for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// `true` when some link is ever down or rate-modified; `false` for
+    /// plans whose gates can never fire (see
+    /// [`TopologyConfig::is_dynamic`]). The engines branch on this to keep
+    /// degenerate plans on the legacy static-grid arithmetic.
+    pub fn is_dynamic(&self) -> bool {
+        self.dynamic
+    }
+
+    /// Rate multiplier applied to inter-plane hops while the plan is
+    /// dynamic (1.0 otherwise). Constant over time for the current plan
+    /// families; `window_start`-dependent modifiers would surface here.
+    pub fn inter_rate_scale(&self) -> f64 {
+        if self.dynamic {
+            self.cfg.inter_rate_scale
+        } else {
+            1.0
+        }
+    }
+
+    /// Extra per-chunk latency on inter-plane hops while the plan is
+    /// dynamic (0.0 otherwise).
+    pub fn inter_extra_latency_s(&self) -> f64 {
+        if self.dynamic {
+            self.cfg.inter_extra_latency_s
+        } else {
+            0.0
+        }
+    }
+
+    fn coords(&self, sat: SatId) -> (usize, usize) {
+        (sat / self.n, sat % self.n)
+    }
+
+    /// Does the link cross planes? (Inter-plane links are the ones the
+    /// Walker gate and the rate modifiers apply to.)
+    pub fn is_inter(&self, a: SatId, b: SatId) -> bool {
+        let (ao, as_) = self.coords(a);
+        let (bo, bs) = self.coords(b);
+        debug_assert!(
+            (ao == bo && as_.abs_diff(bs) == 1) || (as_ == bs && ao.abs_diff(bo) == 1),
+            "contact queries are defined on grid ISLs only ({a}-{b})"
+        );
+        as_ == bs
+    }
+
+    /// Is this link subject to the Walker duty gate?
+    fn walker_gated(&self, a: SatId, b: SatId) -> bool {
+        self.cfg.mode == TopologyMode::Walker && self.cfg.duty < 1.0 && self.is_inter(a, b)
+    }
+
+    /// Are ground passes configured at all?
+    fn pass_gated(&self) -> bool {
+        self.cfg.ground_stations > 0 && self.cfg.pass_duty > 0.0
+    }
+
+    /// Phase of the Walker gate for the inter-plane link between plane `o`
+    /// and `o + 1` at slot `s`. Delta shells spread consecutive planes'
+    /// windows by `F / n` of a period; star shells (counter-rotating
+    /// seam) by half that. The `s / n` term staggers slots within a plane.
+    fn inter_phase(&self, o: usize, s: usize) -> f64 {
+        let n = self.n as f64;
+        let f = self.cfg.phasing as f64;
+        let raw = match self.cfg.kind {
+            WalkerKind::Delta => (o as f64) * f / n + (s as f64) / n,
+            WalkerKind::Star => 0.5 * (o as f64) * f / n + (s as f64) / n,
+        };
+        raw - raw.floor()
+    }
+
+    /// Phase of the pass gate for (station `g`, satellite `sat`):
+    /// deterministic golden-ratio spread so passes don't synchronise
+    /// across the constellation.
+    fn pass_phase(&self, g: usize, sat: SatId) -> f64 {
+        let x = (g as f64) * 0.618_033_988_749_895 + (sat as f64) * 0.381_966_011_250_105;
+        x - x.floor()
+    }
+
+    /// If some constraint blocks the link at instant `t`, the time that
+    /// constraint clears (strictly greater than `t`); `None` when the
+    /// link is up at `t`.
+    fn blocked_until(&self, a: SatId, b: SatId, t: f64) -> Option<f64> {
+        for o in &self.cfg.outages {
+            if o.start > t {
+                break; // sorted by start: nothing later can cover t
+            }
+            if o.end > t && ((o.a == a && o.b == b) || (o.a == b && o.b == a)) {
+                return Some(o.end);
+            }
+        }
+        if self.walker_gated(a, b) {
+            let (ao, as_) = self.coords(a);
+            let (bo, _) = self.coords(b);
+            let (up, boundary) =
+                periodic_gate(t, self.cfg.period_s, self.inter_phase(ao.min(bo), as_), self.cfg.duty);
+            if !up {
+                return Some(boundary);
+            }
+        }
+        if self.pass_gated() {
+            for &e in &[a, b] {
+                for g in 0..self.cfg.ground_stations {
+                    let (in_pass, boundary) = periodic_gate(
+                        t,
+                        self.cfg.pass_period_s,
+                        self.pass_phase(g, e),
+                        self.cfg.pass_duty,
+                    );
+                    if in_pass {
+                        return Some(boundary); // pass ends at the boundary
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Is the ISL `(a, b)` up at instant `t`?
+    pub fn link_up(&self, a: SatId, b: SatId, t: f64) -> bool {
+        !self.dynamic || self.blocked_until(a, b, t).is_none()
+    }
+
+    /// Assuming the link is up at `t`, the end of the current contact
+    /// (possibly `+inf` for an unconstrained link).
+    fn up_until(&self, a: SatId, b: SatId, t: f64) -> f64 {
+        let mut end = f64::INFINITY;
+        for o in &self.cfg.outages {
+            if o.start > t && ((o.a == a && o.b == b) || (o.a == b && o.b == a)) {
+                end = end.min(o.start);
+                break; // sorted by start: the first future outage is the nearest
+            }
+        }
+        if self.walker_gated(a, b) {
+            let (ao, as_) = self.coords(a);
+            let (bo, _) = self.coords(b);
+            let (up, boundary) =
+                periodic_gate(t, self.cfg.period_s, self.inter_phase(ao.min(bo), as_), self.cfg.duty);
+            debug_assert!(up);
+            end = end.min(boundary);
+        }
+        if self.pass_gated() {
+            for &e in &[a, b] {
+                for g in 0..self.cfg.ground_stations {
+                    let (in_pass, boundary) = periodic_gate(
+                        t,
+                        self.cfg.pass_period_s,
+                        self.pass_phase(g, e),
+                        self.cfg.pass_duty,
+                    );
+                    debug_assert!(!in_pass);
+                    end = end.min(boundary); // next pass starts here
+                }
+            }
+        }
+        end
+    }
+
+    /// First constraint that prevents a transmission occupying the link
+    /// for `[t, t + dur]`, and when it clears. `None` = the transmission
+    /// fits starting at `t`. A contact that *ends* exactly at `t + dur`
+    /// still fits (occupancy is closed-open).
+    fn first_conflict(&self, a: SatId, b: SatId, t: f64, dur: f64) -> Option<f64> {
+        let end = t + dur;
+        for o in &self.cfg.outages {
+            if o.start >= end {
+                break;
+            }
+            if o.end > t && ((o.a == a && o.b == b) || (o.a == b && o.b == a)) {
+                return Some(o.end);
+            }
+        }
+        if self.walker_gated(a, b) {
+            let (ao, as_) = self.coords(a);
+            let (bo, _) = self.coords(b);
+            let period = self.cfg.period_s;
+            let duty = self.cfg.duty;
+            let (up, boundary) =
+                periodic_gate(t, period, self.inter_phase(ao.min(bo), as_), duty);
+            if !up {
+                return Some(boundary); // next window start
+            }
+            if boundary < end {
+                // Window closes mid-transmission: retry at the next one.
+                return Some(boundary + (1.0 - duty) * period);
+            }
+        }
+        if self.pass_gated() {
+            let period = self.cfg.pass_period_s;
+            let duty = self.cfg.pass_duty;
+            for &e in &[a, b] {
+                for g in 0..self.cfg.ground_stations {
+                    let (in_pass, boundary) =
+                        periodic_gate(t, period, self.pass_phase(g, e), duty);
+                    if in_pass {
+                        return Some(boundary); // wait out the current pass
+                    }
+                    if boundary < end {
+                        // A pass would interrupt the transmission: wait
+                        // until that pass is over.
+                        return Some(boundary + duty * period);
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Earliest `start ≥ t0` such that the link is continuously up over
+    /// `[start, start + dur]`, or `None` when no contact window can ever
+    /// carry the transmission (e.g. a duty window shorter than the chunk).
+    ///
+    /// For a degenerate plan this is the identity (`Some(t0)`) — crucial
+    /// for golden reproduction: the static path never even observes the
+    /// plan's arithmetic.
+    pub fn next_fit(&self, a: SatId, b: SatId, t0: f64, dur: f64) -> Option<f64> {
+        if !self.dynamic {
+            return Some(t0);
+        }
+        if self.walker_gated(a, b) && dur > self.cfg.duty * self.cfg.period_s {
+            return None; // no duty window is ever long enough
+        }
+        let mut t = t0;
+        for _ in 0..MAX_FIT_STEPS {
+            match self.first_conflict(a, b, t, dur) {
+                None => return Some(t),
+                Some(clear) => {
+                    debug_assert!(clear > t, "contact search must make progress");
+                    t = clear;
+                }
+            }
+        }
+        None
+    }
+
+    /// Materialise the sorted contact-interval view of one link over
+    /// `[t0, t1)` — the `(link, start, end, latency, bandwidth)` tuple
+    /// list of the contact-plan literature. Diagnostic/test surface; the
+    /// engines use the closed-form queries above instead.
+    pub fn windows(&self, a: SatId, b: SatId, t0: f64, t1: f64) -> Vec<ContactWindow> {
+        let (rate_scale, extra) = if self.is_inter(a, b) {
+            (self.inter_rate_scale(), self.inter_extra_latency_s())
+        } else {
+            (1.0, 0.0)
+        };
+        let mut out = Vec::new();
+        let mut t = t0;
+        for _ in 0..MAX_FIT_STEPS {
+            if t >= t1 {
+                break;
+            }
+            match self.blocked_until(a, b, t) {
+                Some(clear) => t = clear,
+                None => {
+                    let end = self.up_until(a, b, t).min(t1);
+                    if end <= t {
+                        break; // float-degenerate window; stop rather than spin
+                    }
+                    out.push(ContactWindow {
+                        a,
+                        b,
+                        start: t,
+                        end,
+                        rate_scale,
+                        extra_latency_s: extra,
+                    });
+                    t = end;
+                }
+            }
+        }
+        out
     }
 }
 
@@ -215,6 +625,191 @@ mod tests {
         for a in g.all() {
             for b in g.all() {
                 assert!(g.chebyshev(a, b) <= g.hops(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn route_parent_steps_one_hop_toward_the_source() {
+        let g = GridTopology::new(5);
+        for src in g.all() {
+            for dst in g.all() {
+                if src == dst {
+                    continue;
+                }
+                let p = g.route_parent(src, dst);
+                assert!(g.adjacent(p, dst), "parent must own the last hop");
+                assert_eq!(g.hops(src, p) + 1, g.hops(src, dst));
+                // The last hop is inter-plane exactly when the chunked
+                // planner classifies it so: slots aligned, orbits not.
+                let (so, ss) = g.coords(src);
+                let (mo, ms) = g.coords(dst);
+                let last_hop_inter = if ms != ss { false } else { mo != so };
+                let (po, ps) = g.coords(p);
+                assert_eq!(ps == ms && po != mo, last_hop_inter);
+            }
+        }
+    }
+
+    fn walker_cfg(duty: f64, period: f64) -> TopologyConfig {
+        TopologyConfig {
+            mode: TopologyMode::Walker,
+            duty,
+            period_s: period,
+            ..TopologyConfig::default()
+        }
+    }
+
+    #[test]
+    fn always_on_plan_is_degenerate_and_transparent() {
+        let plan = ContactPlan::always_on(5);
+        assert!(!plan.is_dynamic());
+        assert_eq!(plan.inter_rate_scale(), 1.0);
+        assert_eq!(plan.inter_extra_latency_s(), 0.0);
+        assert!(plan.link_up(0, 1, 0.0));
+        assert!(plan.link_up(0, 5, 1e9));
+        // next_fit is the identity — the value the static path would use,
+        // untouched by any plan arithmetic.
+        assert_eq!(plan.next_fit(0, 5, 123.456, 7.89), Some(123.456));
+        let w = plan.windows(0, 5, 0.0, 100.0);
+        assert_eq!(w.len(), 1);
+        assert_eq!((w[0].start, w[0].end), (0.0, 100.0));
+    }
+
+    #[test]
+    fn full_duty_walker_is_degenerate() {
+        let plan = ContactPlan::new(5, &walker_cfg(1.0, 600.0));
+        assert!(!plan.is_dynamic());
+        assert_eq!(plan.next_fit(0, 5, 10.0, 5.0), Some(10.0));
+    }
+
+    #[test]
+    fn walker_duty_gates_inter_but_not_intra_links() {
+        let plan = ContactPlan::new(5, &walker_cfg(0.5, 100.0));
+        assert!(plan.is_dynamic());
+        // Intra-plane link (same orbit): always up.
+        let w = plan.windows(0, 1, 0.0, 1000.0);
+        assert_eq!(w.len(), 1);
+        assert_eq!((w[0].start, w[0].end), (0.0, 1000.0));
+        // Inter-plane link (0-5): alternates 50 s up / 50 s down.
+        let w = plan.windows(0, 5, 0.0, 1000.0);
+        assert!(w.len() >= 9, "expected ~10 windows, got {}", w.len());
+        for win in &w {
+            assert!((win.end - win.start) <= 50.0 + 1e-9);
+            assert!(plan.link_up(0, 5, win.start));
+            assert!(plan.link_up(0, 5, (win.start + win.end) / 2.0));
+        }
+        for pair in w.windows(2) {
+            assert!(pair[0].end < pair[1].start, "windows sorted and disjoint");
+            let gap = (pair[0].end + pair[1].start) / 2.0;
+            assert!(!plan.link_up(0, 5, gap));
+        }
+    }
+
+    #[test]
+    fn next_fit_defers_into_a_window_and_respects_its_length() {
+        let plan = ContactPlan::new(5, &walker_cfg(0.5, 100.0));
+        let w = plan.windows(0, 5, 0.0, 500.0);
+        let first = w[0];
+        // Asking from inside a window with room: identity.
+        assert_eq!(plan.next_fit(0, 5, first.start, 1.0), Some(first.start));
+        // Asking mid-gap: deferred to the next window start.
+        let gap = first.end + 1.0;
+        let start = plan.next_fit(0, 5, gap, 1.0).unwrap();
+        assert!(start > gap);
+        assert!(plan.link_up(0, 5, start));
+        // A transmission longer than any duty window can never fit.
+        assert_eq!(plan.next_fit(0, 5, 0.0, 51.0), None);
+        // A fit that ends exactly at the window boundary is allowed.
+        let fit = plan.next_fit(0, 5, first.start, first.end - first.start);
+        assert_eq!(fit, Some(first.start));
+    }
+
+    #[test]
+    fn scripted_outage_splits_windows_and_defers_fits() {
+        let cfg = TopologyConfig {
+            outages: vec![crate::config::OutageSpec {
+                a: 3,
+                b: 4,
+                start: 100.0,
+                end: 200.0,
+            }],
+            ..TopologyConfig::default()
+        };
+        let plan = ContactPlan::new(5, &cfg);
+        assert!(plan.is_dynamic());
+        // The named link goes down on [100, 200); others are untouched.
+        assert!(plan.link_up(3, 4, 99.0));
+        assert!(!plan.link_up(3, 4, 100.0));
+        assert!(!plan.link_up(4, 3, 150.0));
+        assert!(plan.link_up(3, 4, 200.0));
+        assert!(plan.link_up(0, 1, 150.0));
+        let w = plan.windows(3, 4, 0.0, 300.0);
+        assert_eq!(w.len(), 2);
+        assert_eq!((w[0].start, w[0].end), (0.0, 100.0));
+        assert_eq!((w[1].start, w[1].end), (200.0, 300.0));
+        // A transmission queued just before the outage that would overlap
+        // it resumes at the outage end.
+        assert_eq!(plan.next_fit(3, 4, 95.0, 10.0), Some(200.0));
+        assert_eq!(plan.next_fit(3, 4, 95.0, 5.0), Some(95.0));
+    }
+
+    #[test]
+    fn ground_pass_suppresses_every_isl_of_the_satellite() {
+        let cfg = TopologyConfig {
+            ground_stations: 1,
+            pass_period_s: 100.0,
+            pass_duty: 0.2,
+            ..TopologyConfig::default()
+        };
+        let plan = ContactPlan::new(5, &cfg);
+        assert!(plan.is_dynamic());
+        // Find an instant where sat 6 is in a pass, via its link going down.
+        let w = plan.windows(6, 7, 0.0, 300.0);
+        assert!(w.len() >= 2, "passes must interrupt the link: {w:?}");
+        let gap = (w[0].end + w[1].start) / 2.0;
+        // During the gap at least one endpoint is in a pass; every ISL of
+        // that endpoint must be down. Identify which endpoint by probing.
+        let six_down = !plan.link_up(6, 1, gap) && !plan.link_up(6, 5, gap);
+        let seven_down = !plan.link_up(7, 2, gap) && !plan.link_up(7, 8, gap);
+        assert!(
+            six_down || seven_down,
+            "a pass must silence all ISLs of the satellite in pass"
+        );
+    }
+
+    #[test]
+    fn next_fit_lands_inside_a_materialised_window() {
+        // Cross-check the closed-form search against the interval view.
+        let cfg = TopologyConfig {
+            outages: vec![crate::config::OutageSpec {
+                a: 0,
+                b: 5,
+                start: 40.0,
+                end: 60.0,
+            }],
+            ..walker_cfg(0.6, 100.0)
+        };
+        let plan = ContactPlan::new(5, &cfg);
+        let windows = plan.windows(0, 5, 0.0, 1000.0);
+        for t0 in [0.0, 10.0, 45.0, 59.0, 61.0, 70.0, 123.0] {
+            let dur = 7.5;
+            let start = plan.next_fit(0, 5, t0, dur).unwrap();
+            assert!(start >= t0);
+            let host = windows
+                .iter()
+                .find(|w| w.start <= start && start + dur <= w.end);
+            assert!(
+                host.is_some(),
+                "fit at {start} (+{dur}) not inside any window: {windows:?}"
+            );
+            // And no earlier placement exists: either t0 itself fits, or
+            // the chosen start is a window start.
+            if start > t0 {
+                assert!(
+                    windows.iter().any(|w| w.start == start),
+                    "deferred fit must begin exactly at a contact start"
+                );
             }
         }
     }

@@ -34,7 +34,7 @@ use crate::coordinator::srs::srs;
 use crate::coordinator::Scenario;
 use crate::error::{Error, Result};
 use crate::metrics::{MetricsAccum, RunCounters, RunReport, SatSummary, TaskLog};
-use crate::network::{CommModel, GridTopology, LinkState};
+use crate::network::{CommModel, ContactPlan, GridTopology, LinkState};
 use crate::satellite::{InFlight, SatNode};
 use crate::simulator::events::{EventKind, EventQueue};
 use crate::simulator::observer::Observer;
@@ -160,13 +160,18 @@ pub struct Engine<'a> {
     network_quiet_until: f64,
     collab: RunCounters,
     metrics: MetricsAccum,
-    /// `Some` iff the fault model is on ([`CommConfig::faults_active`]):
-    /// the shared transfer-cache / link-contention state every lossy
-    /// broadcast plans against. `None` keeps the legacy ideal-link path
-    /// byte-for-byte, so loss = 0 runs reproduce existing goldens.
+    /// `Some` iff the fault model is on ([`CommConfig::faults_active`])
+    /// *or* the contact plan is dynamic: the shared transfer-cache /
+    /// link-contention state every lossy broadcast plans against. `None`
+    /// keeps the legacy ideal-link path byte-for-byte, so loss = 0 runs
+    /// over a degenerate plan reproduce existing goldens. A dynamic plan
+    /// routes every broadcast through the chunked planner even with loss
+    /// off — contact gating happens per chunk.
     ///
     /// [`CommConfig::faults_active`]: crate::config::CommConfig::faults_active
     link: Option<LinkState>,
+    /// When each ISL is up (degenerate always-on plan for static configs).
+    contacts: ContactPlan,
     /// Reusable all-satellite SRS buffer: one allocation for the whole
     /// run instead of one per collaboration request.
     srs_scratch: Vec<f64>,
@@ -187,6 +192,7 @@ impl<'a> Engine<'a> {
     ) -> Self {
         let topo = GridTopology::new(cfg.network.n);
         let comm = CommModel::new(&cfg.network, &cfg.comm);
+        let contacts = ContactPlan::new(cfg.network.n, &cfg.topology);
         let sats = topo.len();
         let cap = cfg.cache_capacity_records();
         let num_buckets = backend.num_buckets();
@@ -209,10 +215,9 @@ impl<'a> Engine<'a> {
             network_quiet_until: f64::NEG_INFINITY,
             collab: RunCounters::default(),
             metrics: MetricsAccum::new(keep_logs),
-            link: cfg
-                .comm
-                .faults_active()
+            link: (cfg.comm.faults_active() || contacts.is_dynamic())
                 .then(|| LinkState::new(cfg.workload.seed)),
+            contacts,
             srs_scratch: Vec::new(),
             share_scratch: Vec::new(),
         }
@@ -241,10 +246,14 @@ impl<'a> Engine<'a> {
         source: &mut dyn PreparedSource,
         obs: &mut dyn Observer,
     ) -> Result<RunReport> {
-        // A nonsensical fault model is a simulation the engine refuses to
-        // run — the same contract as the sharded engine's degenerate-
-        // lookahead rejection, and shared with it via `fault_check`.
+        // A nonsensical fault model or contact plan is a simulation the
+        // engine refuses to run — the same contract as the sharded
+        // engine's degenerate-lookahead rejection, and shared with it via
+        // `fault_check` / `TopologyConfig::check`.
         if let Err(msg) = self.cfg.comm.fault_check() {
+            return Err(Error::simulation(msg));
+        }
+        if let Err(msg) = self.cfg.topology.check(self.cfg.network.n) {
             return Err(Error::simulation(msg));
         }
         let wl = self.wl;
@@ -417,6 +426,7 @@ impl<'a> Engine<'a> {
                 records.iter().map(|(_, r)| r.id).collect();
             let plan = self.comm.plan_lossy_broadcast(
                 &self.topo,
+                &self.contacts,
                 &mut link,
                 decision.source,
                 &decision.area,
@@ -427,6 +437,9 @@ impl<'a> Engine<'a> {
             self.collab.transfer_bytes += plan.bytes;
             self.collab.comm_seconds += plan.airtime_s;
             self.collab.dedup_saved_bytes += plan.dedup_saved_bytes;
+            self.collab.handovers += plan.handovers;
+            self.collab.contact_wait_s += plan.contact_wait_s;
+            self.collab.stranded_chunks += plan.stranded_chunks;
             self.network_quiet_until = plan.quiet_until;
             let mut shared = std::mem::take(&mut self.share_scratch);
             shared.clear();

@@ -349,6 +349,14 @@ impl<'a> Simulation<'a> {
                  compare Simulation::run against the sharded engine instead",
             ));
         }
+        // Same contract for time-varying contact plans (degenerate
+        // always-on plans run fine: they take the identical legacy path).
+        if self.cfg.topology.is_dynamic() {
+            return Err(Error::simulation(
+                "run_reference does not model time-varying contact plans — \
+                 compare Simulation::run against the sharded engine instead",
+            ));
+        }
 
         let owned_wl;
         let wl = match self.workload {

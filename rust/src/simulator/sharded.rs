@@ -4,11 +4,18 @@
 //! (`sat % K`), each owning a private [`EventQueue`] for its satellites'
 //! `Arrival` / `Completion` events. The only *event* that crosses
 //! satellites is `BroadcastDeliver`, and every broadcast record needs at
-//! least [`CommModel::min_hop_seconds`] of virtual time to reach its
-//! first receiver — which is exactly the lookahead a conservative
-//! parallel discrete-event engine needs: inside a window
-//! `[T, T + lookahead)` no shard's local events can depend on another
-//! shard's future. The coordinator therefore repeats:
+//! least [`CommModel::lookahead_at`] of virtual time to reach its first
+//! receiver — which is exactly the lookahead a conservative parallel
+//! discrete-event engine needs: inside a window `[T, T + lookahead)` no
+//! shard's local events can depend on another shard's future. The
+//! lookahead is queried *per window* against the run's [`ContactPlan`]:
+//! for a degenerate (always-on) plan it is
+//! [`CommModel::min_hop_seconds`] bit-for-bit, and for a dynamic plan it
+//! is the effective minimum edge time under the plan's slowing-only rate
+//! modifiers — contact gating itself only ever defers transmissions, so
+//! the bound is pause-safe and float-exact either way (see
+//! [`CommModel::lookahead_at`] for the full argument). The coordinator
+//! repeats:
 //!
 //! 1. **Advance** (parallel): every shard processes its local events up to
 //!    the window end on its own thread — the expensive per-task reuse
@@ -56,7 +63,7 @@ use crate::coordinator::srs::srs;
 use crate::coordinator::Scenario;
 use crate::error::{Error, Result};
 use crate::metrics::{fold_sharded, RunCounters, RunReport, SatSummary, TaskLog};
-use crate::network::{CommModel, GridTopology, LinkState};
+use crate::network::{CommModel, ContactPlan, GridTopology, LinkState};
 use crate::satellite::{InFlight, SatNode, SatelliteState};
 use crate::simulator::engine::{reuse_service, scratch_service, take_completed};
 use crate::simulator::events::{EventKind, EventQueue};
@@ -465,9 +472,13 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
     let shard_count = threads.max(1);
     let topo = GridTopology::new(cfg.network.n);
     let comm = CommModel::new(&cfg.network, &cfg.comm);
+    let contacts = ContactPlan::new(cfg.network.n, &cfg.topology);
     let sats = topo.len();
     let policy = scenario.collab_policy();
-    let lookahead = comm.min_hop_seconds();
+    // Probe the per-window lookahead at t = 0; the plan families keep it
+    // constant over time, so a degenerate probe here is degenerate in
+    // every window.
+    let lookahead = comm.lookahead_at(&contacts, 0.0);
     if policy.is_some() && !(lookahead.is_finite() && lookahead > 0.0) {
         return Err(Error::simulation(format!(
             "sharded engine needs a strictly positive broadcast lookahead, \
@@ -475,9 +486,13 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
              the conservative window could never advance past a broadcast"
         )));
     }
-    // A nonsensical fault model is rejected on the same contract (shared
-    // with the single-threaded engine via `fault_check`).
+    // A nonsensical fault model or contact plan is rejected on the same
+    // contract (shared with the single-threaded engine via `fault_check`
+    // / `TopologyConfig::check`).
     if let Err(msg) = cfg.comm.fault_check() {
+        return Err(Error::simulation(msg));
+    }
+    if let Err(msg) = cfg.topology.check(cfg.network.n) {
         return Err(Error::simulation(msg));
     }
 
@@ -548,9 +563,12 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
     let tau = cfg.reuse.tau;
     let mut quiet_until = f64::NEG_INFINITY;
     let mut collab = RunCounters::default();
-    // Transfer-layer bookkeeping for the lossy path; `None` keeps the
-    // ideal-link planner (and its exact golden outputs) untouched.
-    let mut link = cfg.comm.faults_active().then(|| LinkState::new(cfg.workload.seed));
+    // Transfer-layer bookkeeping for the lossy/contact-gated path; `None`
+    // keeps the ideal-link planner (and its exact golden outputs)
+    // untouched. A dynamic contact plan forces the chunked planner even
+    // with loss off, mirroring `Engine::new`.
+    let mut link = (cfg.comm.faults_active() || contacts.is_dynamic())
+        .then(|| LinkState::new(cfg.workload.seed));
     let mut pending: Vec<Vec<PendingEvent>> =
         (0..shard_count).map(|_| Vec::new()).collect();
 
@@ -570,7 +588,13 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
             ));
         }
         let window_end = if policy.is_some() {
-            window_start + lookahead
+            // Per-window query over the contact plan. For today's plan
+            // families this returns the same f64 every window (and
+            // exactly `min_hop_seconds()` when degenerate — preserving
+            // pre-contact-plan window boundaries bit-for-bit); the query
+            // is in the loop so plans with time-varying rate modifiers
+            // slot in without touching the engine.
+            window_start + comm.lookahead_at(&contacts, window_start)
         } else {
             f64::INFINITY
         };
@@ -686,6 +710,7 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
                                     records.iter().map(|(_, r)| r.id).collect();
                                 let plan = comm.plan_lossy_broadcast(
                                     &topo,
+                                    &contacts,
                                     link,
                                     decision.source,
                                     &decision.area,
@@ -695,6 +720,9 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
                                 collab.transfer_bytes += plan.bytes;
                                 collab.comm_seconds += plan.airtime_s;
                                 collab.dedup_saved_bytes += plan.dedup_saved_bytes;
+                                collab.handovers += plan.handovers;
+                                collab.contact_wait_s += plan.contact_wait_s;
+                                collab.stranded_chunks += plan.stranded_chunks;
                                 quiet_until = plan.quiet_until;
                                 let shared: Vec<(u32, Arc<Record>)> = records
                                     .into_iter()
@@ -771,6 +799,10 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
                 // Exact even in floats: every scheduled time is a chain of
                 // `start ⊕ t_edge` steps with start ≥ window_start and
                 // t_edge ≥ lookahead bit-for-bit, and ⊕ is monotone.
+                // Contact gating preserves this: `next_fit` only moves
+                // `start` later, and the effective edge time under the
+                // plan's slowing-only modifiers is one of `lookahead_at`'s
+                // min operands.
                 debug_assert!(ev.time >= window_end);
                 shards[si].q.push(ev.time, ev.kind);
             }

@@ -10,7 +10,7 @@
 //! float summation order — fails here first.
 
 use ccrsat::compute::NativeBackend;
-use ccrsat::config::SimConfig;
+use ccrsat::config::{OutageSpec, SimConfig, TopologyMode};
 use ccrsat::coordinator::Scenario;
 use ccrsat::metrics::RunReport;
 use ccrsat::simulator::{
@@ -49,6 +49,10 @@ fn assert_aggregates_identical(a: &RunReport, b: &RunReport, label: &str) {
     assert_eq!(a.retransmits, b.retransmits, "{label}");
     assert_eq!(a.dropped_chunks, b.dropped_chunks, "{label}");
     assert_eq!(a.dedup_saved_mb, b.dedup_saved_mb, "{label}");
+    assert_eq!(a.handovers, b.handovers, "{label}");
+    assert_eq!(a.stranded_chunks, b.stranded_chunks, "{label}");
+    assert_eq!(a.contact_wait_s, b.contact_wait_s, "{label}");
+    assert_eq!(a.contact_utilization, b.contact_utilization, "{label}");
     assert_eq!(a.mean_latency, b.mean_latency, "{label}");
     assert_eq!(a.p95_latency, b.p95_latency, "{label}");
 }
@@ -305,6 +309,98 @@ fn engines_reject_degenerate_fault_configs_naming_the_value() {
                 ),
             }
         }
+    }
+}
+
+#[test]
+fn engines_reject_bad_topology_configs_naming_the_value() {
+    // Same contract as the fault-model check above, for the contact-plan
+    // layer: both engines must reject a nonsensical topology up front
+    // with an `Error::Simulation` naming the offending value.
+    let mutations: Vec<(Box<dyn Fn(&mut SimConfig)>, &str)> = vec![
+        (
+            Box::new(|c| {
+                c.topology.mode = TopologyMode::Walker;
+                c.topology.duty = 0.0;
+            }),
+            "duty=0",
+        ),
+        (
+            Box::new(|c| {
+                c.topology.mode = TopologyMode::Walker;
+                c.topology.inter_rate_scale = 1.5;
+            }),
+            "inter_rate_scale=1.5",
+        ),
+        (
+            // Inert Walker knobs on a static topology are a config bug,
+            // not a silent no-op.
+            Box::new(|c| c.topology.duty = 0.5),
+            "static",
+        ),
+        (
+            Box::new(|c| {
+                c.topology.outages =
+                    OutageSpec::parse_list("0-1@5..2").unwrap();
+            }),
+            "start < end",
+        ),
+        (
+            // Satellites 0 and 2 are two hops apart on the 3×3 grid:
+            // not an ISL, so no outage can name that pair.
+            Box::new(|c| {
+                c.topology.outages =
+                    OutageSpec::parse_list("0-2@1..2").unwrap();
+            }),
+            "not a grid ISL",
+        ),
+        (
+            Box::new(|c| {
+                c.topology.mode = TopologyMode::Walker;
+                c.topology.planes = Some(4);
+            }),
+            "planes",
+        ),
+    ];
+    for (mutate, needle) in &mutations {
+        let mut c = cfg(3, 12);
+        mutate(&mut c);
+        let backend = NativeBackend::new(&c);
+        for threads in [None, Some(2)] {
+            let mut sim = Simulation::new(&c, &backend, Scenario::Sccr);
+            if let Some(k) = threads {
+                sim = sim.threads(k);
+            }
+            match sim.run() {
+                Err(ccrsat::Error::Simulation(msg)) => {
+                    assert!(
+                        msg.contains(needle),
+                        "threads {threads:?}: expected '{needle}' in: {msg}"
+                    );
+                }
+                other => panic!(
+                    "threads {threads:?} ({needle}): expected Error::Simulation, got {other:?}"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn reference_monolith_refuses_dynamic_contact_plans() {
+    // The kept pre-refactor monolith predates contact plans: it must
+    // refuse a dynamic topology rather than silently report always-on
+    // numbers for it.
+    let mut c = cfg(3, 12);
+    c.topology.mode = TopologyMode::Walker;
+    c.topology.duty = 0.5;
+    let backend = NativeBackend::new(&c);
+    let refr = Simulation::new(&c, &backend, Scenario::Sccr).run_reference();
+    match refr {
+        Err(ccrsat::Error::Simulation(msg)) => {
+            assert!(msg.contains("run_reference"), "unexpected message: {msg}");
+        }
+        other => panic!("expected Error::Simulation, got {other:?}"),
     }
 }
 

@@ -11,7 +11,7 @@ use ccrsat::coordinator::scrt::{Record, Scrt};
 use ccrsat::coordinator::srs::srs;
 use ccrsat::coordinator::Scenario;
 use ccrsat::network::{CommModel, GridTopology};
-use ccrsat::config::SimConfig;
+use ccrsat::config::{OutageSpec, SimConfig, TopologyMode};
 use ccrsat::simulator::{
     prepare, prepare_sequential, PreparedSource, Simulation, StreamConfig,
     StreamingSource,
@@ -361,6 +361,10 @@ fn assert_reports_bit_identical(
     assert_eq!(a.retransmits, b.retransmits, "{label}");
     assert_eq!(a.dropped_chunks, b.dropped_chunks, "{label}");
     assert_eq!(a.dedup_saved_mb, b.dedup_saved_mb, "{label}");
+    assert_eq!(a.handovers, b.handovers, "{label}");
+    assert_eq!(a.stranded_chunks, b.stranded_chunks, "{label}");
+    assert_eq!(a.contact_wait_s, b.contact_wait_s, "{label}");
+    assert_eq!(a.contact_utilization, b.contact_utilization, "{label}");
     assert_eq!(a.mean_latency, b.mean_latency, "{label}");
     assert_eq!(a.p95_latency, b.p95_latency, "{label}");
     assert_eq!(a.per_satellite.len(), b.per_satellite.len(), "{label}");
@@ -456,6 +460,127 @@ fn prop_lossy_sweep_bit_identical_and_loss_zero_reproduces_goldens() {
             }
         }
     }
+}
+
+/// Degenerate contact plans are invisible. A Walker-mode topology at full
+/// duty with no rate/latency modifiers is semantically static
+/// (`TopologyConfig::is_dynamic()` is false), so it must land on the
+/// static-grid goldens bit-for-bit — through the reference monolith, the
+/// single-threaded engine and the sharded engine alike. The static grid
+/// IS the always-on degenerate plan, not a parallel code path.
+#[test]
+fn prop_degenerate_walker_plan_reproduces_the_static_goldens() {
+    for seed in [21_000u64, 21_001] {
+        let mut base = SimConfig::paper_default(3);
+        base.workload.total_tasks = 40;
+        base.workload.seed = seed;
+        base.workload.raw_h = 32;
+        base.workload.raw_w = 32;
+        let mut walker = base.clone();
+        walker.topology.mode = TopologyMode::Walker;
+        // duty stays 1.0 and no rate/latency modifiers: degenerate.
+        let backend = NativeBackend::new(&base);
+        let wl = build_workload(&base);
+        let prep = prepare(&backend, &wl).unwrap();
+        for scenario in Scenario::ALL {
+            let golden = Simulation::new(&base, &backend, scenario)
+                .with_workload(&wl)
+                .with_prepared(&prep)
+                .run()
+                .unwrap();
+            assert_eq!(golden.handovers, 0, "static grid never hands over");
+            assert_eq!(golden.stranded_chunks, 0, "static grid never strands");
+            assert_eq!(golden.contact_utilization, 1.0, "{seed} {scenario}");
+            let reference = Simulation::new(&walker, &backend, scenario)
+                .with_workload(&wl)
+                .with_prepared(&prep)
+                .run_reference()
+                .unwrap();
+            assert_reports_bit_identical(
+                &golden,
+                &reference,
+                &format!("seed {seed} {scenario} degenerate walker reference"),
+            );
+            for threads in [1usize, 4] {
+                let run = Simulation::new(&walker, &backend, scenario)
+                    .with_workload(&wl)
+                    .with_prepared(&prep)
+                    .threads(threads)
+                    .run()
+                    .unwrap();
+                assert_reports_bit_identical(
+                    &golden,
+                    &run,
+                    &format!("seed {seed} {scenario} degenerate walker K={threads}"),
+                );
+            }
+        }
+    }
+}
+
+/// Time-varying contact plans keep the house invariant: across Walker
+/// duty cycling, scripted mid-run outages, ground-station passes and
+/// inter-plane rate/latency modifiers, the sharded engine's `RunReport`
+/// is bit-identical to the single-threaded engine's for every scenario
+/// and K ∈ {1, 2, 4}. The sweep also checks the dynamic machinery
+/// actually engaged (some chunk waited for a window somewhere) so the
+/// identity isn't vacuous.
+#[test]
+fn prop_dynamic_contact_plans_stay_bit_identical_across_shards() {
+    let mut walker = SimConfig::paper_default(3);
+    walker.workload.total_tasks = 36;
+    walker.workload.seed = 31_000;
+    walker.workload.raw_h = 32;
+    walker.workload.raw_w = 32;
+    walker.comm.chunk_bytes = 6e6;
+    walker.topology.mode = TopologyMode::Walker;
+    walker.topology.duty = 0.6;
+    walker.topology.period_s = 30.0;
+
+    // Second variant: outages that open and close mid-run, a ground
+    // station stealing each satellite's radio periodically, and slowed
+    // inter-plane links.
+    let mut contested = walker.clone();
+    contested.topology.outages =
+        OutageSpec::parse_list("0-1@0..30,1-4@10..45").unwrap();
+    contested.topology.ground_stations = 1;
+    contested.topology.pass_period_s = 50.0;
+    contested.topology.pass_duty = 0.1;
+    contested.topology.inter_rate_scale = 0.8;
+    contested.topology.inter_extra_latency_s = 0.01;
+
+    let mut engaged = 0u64;
+    for (variant, cfg) in [("walker", &walker), ("contested", &contested)] {
+        let backend = NativeBackend::new(cfg);
+        let wl = build_workload(cfg);
+        let prep = prepare(&backend, &wl).unwrap();
+        for scenario in Scenario::ALL {
+            let single = Simulation::new(cfg, &backend, scenario)
+                .with_workload(&wl)
+                .with_prepared(&prep)
+                .run()
+                .unwrap();
+            engaged += single.handovers + single.stranded_chunks;
+            for threads in [1usize, 2, 4] {
+                let sharded = Simulation::new(cfg, &backend, scenario)
+                    .with_workload(&wl)
+                    .with_prepared(&prep)
+                    .threads(threads)
+                    .run()
+                    .unwrap();
+                assert_reports_bit_identical(
+                    &single,
+                    &sharded,
+                    &format!("{variant} {scenario} K={threads}"),
+                );
+            }
+        }
+    }
+    assert!(
+        engaged > 0,
+        "no chunk ever waited for a contact window: the dynamic plan never \
+         engaged and the sweep is vacuous"
+    );
 }
 
 // ---------------------------------------------------------------------------
