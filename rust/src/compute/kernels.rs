@@ -13,9 +13,16 @@
 //! * **multi-accumulator lanes** — the inner loop keeps [`LANES`]
 //!   independent partial sums, so the reduction is re-associated into a
 //!   form the autovectorizer can turn into SIMD adds/FMAs;
+//! * **fixed-width array arithmetic** — every inner loop converts its
+//!   chunk slices to `&[f32; LANES]` arrays before the lane loop, so the
+//!   trip count and the absence of bounds checks are visible in the IR
+//!   (a `chunks_exact` slice still carries a runtime length LLVM has to
+//!   re-derive per loop; the array type carries it in the type);
 //! * **row blocking** — [`gemm_nt`] walks the weight matrix once per block
 //!   of [`GEMM_ROW_BLOCK`] input rows, so weights stream from cache instead
-//!   of from memory once per task.
+//!   of from memory once per task, and [`gemv`]/[`gemm_nt`] process
+//!   [`ROW_LANES`] matrix rows per pass through the shared vector so each
+//!   loaded input chunk is reused `ROW_LANES` times from registers.
 //!
 //! Determinism contract: every kernel reduces each dot product in exactly
 //! the same order ([`dot`]'s fixed lane tree), so `gemm_nt` is bitwise
@@ -36,12 +43,27 @@ pub const LANES: usize = 8;
 /// it once per block.
 pub const GEMM_ROW_BLOCK: usize = 8;
 
+/// Matrix rows processed together by the multi-row kernel behind
+/// [`gemv`]/[`gemm_nt`]: each chunk of the shared vector is loaded once
+/// and multiplied against [`ROW_LANES`] rows from registers. Four rows ×
+/// eight lanes keeps the accumulator working set (4 vector registers)
+/// comfortably inside both SSE and NEON register files.
+pub const ROW_LANES: usize = 4;
+
 /// Reduce the lane accumulators in a fixed pairwise tree. One order,
 /// everywhere — this is what makes batched and single-task paths agree
 /// bitwise.
 #[inline]
 fn reduce(acc: [f32; LANES]) -> f32 {
     ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// View a `LANES`-long chunk slice as a fixed-width array. The conversion
+/// is free; what it buys is a compile-time length on every lane loop below
+/// (no bounds checks, a known trip count for the vectorizer).
+#[inline]
+fn lanes(chunk: &[f32]) -> &[f32; LANES] {
+    chunk.try_into().expect("chunk length == LANES")
 }
 
 /// Lane-accumulator dot product over equal-length slices.
@@ -56,6 +78,7 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     let (b_main, b_tail) = b.split_at(split);
     let mut acc = [0f32; LANES];
     for (ca, cb) in a_main.chunks_exact(LANES).zip(b_main.chunks_exact(LANES)) {
+        let (ca, cb) = (lanes(ca), lanes(cb));
         for l in 0..LANES {
             acc[l] += ca[l] * cb[l];
         }
@@ -67,10 +90,46 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     reduce(acc) + tail
 }
 
+/// `R` simultaneous dot products sharing one pass over `x`: each chunk of
+/// `x` is loaded once and multiplied against the matching chunk of every
+/// row. Per row, the multiply/accumulate sequence — chunk order, lane
+/// assignment, the [`reduce`] tree, the scalar tail — is *exactly*
+/// [`dot`]'s, so `dot_rows(rows, x)[r] == dot(rows[r], x)` bit for bit
+/// (asserted by the unit tests below). Rows must all have `x`'s length.
+#[inline]
+fn dot_rows<const R: usize>(rows: [&[f32]; R], x: &[f32]) -> [f32; R] {
+    for row in &rows {
+        debug_assert_eq!(row.len(), x.len(), "dot_rows: length mismatch");
+    }
+    let split = x.len() - x.len() % LANES;
+    let (x_main, x_tail) = x.split_at(split);
+    let mut acc = [[0f32; LANES]; R];
+    for (c, cx) in x_main.chunks_exact(LANES).enumerate() {
+        let cx = lanes(cx);
+        let base = c * LANES;
+        for r in 0..R {
+            let cr = lanes(&rows[r][base..base + LANES]);
+            for l in 0..LANES {
+                acc[r][l] += cr[l] * cx[l];
+            }
+        }
+    }
+    let mut out = [0f32; R];
+    for r in 0..R {
+        let mut tail = 0f32;
+        for (v, y) in rows[r][split..].iter().zip(x_tail.iter()) {
+            tail += v * y;
+        }
+        out[r] = reduce(acc[r]) + tail;
+    }
+    out
+}
+
 /// `out = A · x` for a row-major `rows × cols` matrix `A`.
 ///
-/// One [`dot`] per row over the contiguous row slice; `out` must hold
-/// exactly `rows` elements.
+/// [`ROW_LANES`] rows per pass through `x` via [`dot_rows`] (leftover rows
+/// fall back to plain [`dot`]); every output element is bitwise a [`dot`]
+/// of its row against `x`. `out` must hold exactly `rows` elements.
 pub fn gemv(a: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
     assert_eq!(a.len(), rows * cols, "gemv: matrix shape mismatch");
     assert_eq!(x.len(), cols, "gemv: input length mismatch");
@@ -79,8 +138,17 @@ pub fn gemv(a: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
         out.fill(0.0); // keep the gemm_nt ≡ gemv-loop contract at k = 0
         return;
     }
-    for (row, o) in a.chunks_exact(cols).zip(out.iter_mut()) {
-        *o = dot(row, x);
+    let mut r = 0;
+    while r + ROW_LANES <= rows {
+        let vals = dot_rows::<ROW_LANES>(
+            core::array::from_fn(|t| &a[(r + t) * cols..(r + t + 1) * cols]),
+            x,
+        );
+        out[r..r + ROW_LANES].copy_from_slice(&vals);
+        r += ROW_LANES;
+    }
+    for rr in r..rows {
+        out[rr] = dot(&a[rr * cols..(rr + 1) * cols], x);
     }
 }
 
@@ -106,9 +174,21 @@ pub fn gemm_nt(x: &[f32], n: usize, w: &[f32], m: usize, k: usize, out: &mut [f3
         .chunks(GEMM_ROW_BLOCK * k)
         .zip(out.chunks_mut(GEMM_ROW_BLOCK * m))
     {
+        let rows_in_block = xb.len() / k;
         for (j, wrow) in w.chunks_exact(k).enumerate() {
-            for (i, xrow) in xb.chunks_exact(k).enumerate() {
-                ob[i * m + j] = dot(xrow, wrow);
+            let mut i = 0;
+            while i + ROW_LANES <= rows_in_block {
+                let vals = dot_rows::<ROW_LANES>(
+                    core::array::from_fn(|t| &xb[(i + t) * k..(i + t + 1) * k]),
+                    wrow,
+                );
+                for (t, &v) in vals.iter().enumerate() {
+                    ob[(i + t) * m + j] = v;
+                }
+                i += ROW_LANES;
+            }
+            for ii in i..rows_in_block {
+                ob[ii * m + j] = dot(&xb[ii * k..(ii + 1) * k], wrow);
             }
         }
     }
@@ -162,6 +242,24 @@ mod tests {
                 (got - want).abs() <= 1e-4 * scale,
                 "n={n}: {got} vs {want}"
             );
+        }
+    }
+
+    #[test]
+    fn dot_rows_is_bitwise_per_row_dot() {
+        let mut rng = Rng::new(17);
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 65, 257, 3072] {
+            let rows: Vec<Vec<f32>> = (0..ROW_LANES).map(|_| randvec(&mut rng, n)).collect();
+            let x = randvec(&mut rng, n);
+            let refs: [&[f32]; ROW_LANES] = core::array::from_fn(|t| rows[t].as_slice());
+            let got = dot_rows::<ROW_LANES>(refs, &x);
+            for (r, row) in rows.iter().enumerate() {
+                assert_eq!(
+                    got[r].to_bits(),
+                    dot(row, &x).to_bits(),
+                    "n={n} row={r}"
+                );
+            }
         }
     }
 

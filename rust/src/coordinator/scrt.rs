@@ -32,6 +32,28 @@
 //! The expensive SSIM gate (eq. 12) then runs on the single best
 //! candidate, via the compute backend — exactly Alg. 1 lines 2 & 8.
 //!
+//! ## Quantized coarse scan
+//!
+//! On populous buckets [`Scrt::nearest`] does not run the exact f32 scan
+//! over every record. Each bucket maintains a u8-quantized mirror of its
+//! SoA feature array (per-record scale/zero-point, kept in lock-step by
+//! insert/evict/merge): a widened-integer pass over the 1-byte codes —
+//! 4× less memory traffic than the f32 scan, and an associative integer
+//! reduction the autovectorizer is free to reorder — yields, per record,
+//! a *provably safe lower bound* on the exact distance. The lower bound
+//! combines the coarse distance with each record's **measured**
+//! reconstruction error (`‖f − f̂‖₂`, computed at quantization time, so no
+//! analytic model of the quantizer is trusted), an explicit f64
+//! evaluation margin, and the f32 summation-error factor of `l2_sq`
+//! itself. Records whose bound exceeds the coarse winner's exact distance
+//! provably cannot win; the survivors are re-ranked in ascending slot
+//! order by the *unchanged* `l2_sq`, so the returned `(slot, distance)` —
+//! including the earliest-slot-wins tie rule — is bit-identical to the
+//! full scan (property-tested against the naive reference model in
+//! `tests/properties.rs`; the error-bound argument is spelled out in
+//! `docs/ARCHITECTURE.md`). Small buckets, oversized dims and non-finite
+//! probes fall back to the exact scan verbatim.
+//!
 //! ## Op journal (sharded engine support)
 //!
 //! With [`Scrt::enable_journal`] the table records every mutation as a
@@ -112,11 +134,132 @@ struct Slot {
 }
 
 /// One LSH bucket: SoA feature storage plus parallel slot metadata.
-/// Slot `i`'s feature vector occupies `feats[i * dim .. (i + 1) * dim]`.
+/// Slot `i`'s feature vector occupies `feats[i * dim .. (i + 1) * dim]`,
+/// and its quantized mirror occupies `qcodes[i * dim .. (i + 1) * dim]`
+/// with per-record parameters in `qmeta[i]` — the three arrays move in
+/// lock-step through insert and `swap_remove` eviction.
 #[derive(Clone, Debug, Default)]
 struct Bucket {
     feats: Vec<f32>,
     slots: Vec<Slot>,
+    /// u8-quantized mirror of `feats` (same stride) for the coarse scan.
+    qcodes: Vec<u8>,
+    /// Per-slot quantization parameters, parallel to `slots`.
+    qmeta: Vec<QuantMeta>,
+}
+
+/// Per-record quantization parameters of the coarse mirror. A code `q`
+/// reconstructs as `zero + scale · q` (both promoted f32 values, so the
+/// f64 reconstruction arithmetic below is exact to one rounding).
+#[derive(Clone, Copy, Debug)]
+struct QuantMeta {
+    /// Zero-point: the record's minimum feature value.
+    zero: f64,
+    /// Step size: `(max − min) / 255` (0 for a constant record).
+    scale: f64,
+    /// `Σ qᵢ` — exact (< 2^53).
+    sum_q: f64,
+    /// `Σ qᵢ²` — exact (< 2^53).
+    sum_q2: f64,
+    /// **Measured** reconstruction error `‖f − f̂‖₂`, inflated by the
+    /// measurement's own f64 rounding slack. `+∞` marks a record with
+    /// non-finite features: its lower bound collapses to 0, so the exact
+    /// re-rank always visits it.
+    err_l2: f64,
+}
+
+/// Minimum bucket population before the coarse pass pays for itself;
+/// below it [`Scrt::nearest`] runs the exact scan directly. Correctness
+/// is threshold-independent (both paths return identical bits).
+const QUANT_MIN_SLOTS: usize = 16;
+
+/// Feature-dim ceiling for the coarse pass: keeps the widened-integer
+/// lane accumulators provably overflow-free (`(dim/8) · 255² < 2^32`)
+/// with a wide margin. Larger strides fall back to the exact scan.
+const MAX_QUANT_DIM: usize = 1 << 18;
+
+/// Relative slack covering the f64 rounding of the expanded coarse
+/// distance (≈ 15 roundings ⇒ true error < 2e-15 of the term-magnitude
+/// sum; 1e-12 leaves ~500× headroom).
+const COARSE_EVAL_EPS: f64 = 1e-12;
+
+/// Quantize a feature row to u8 codes (appended to `codes`) and return
+/// its [`QuantMeta`]. The reconstruction-error bound is *measured* from
+/// the codes actually produced, so the lower bound stays safe even for
+/// pathological inputs (subnormal scales, saturating casts).
+fn quantize_row(pd: &[f32], codes: &mut Vec<u8>) -> QuantMeta {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in pd {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let range = hi - lo;
+    if !range.is_finite() {
+        // Non-finite features (or a range overflowing f32): mirror with
+        // all-zero codes and an infinite error bound — always re-ranked.
+        codes.resize(codes.len() + pd.len(), 0);
+        return QuantMeta {
+            zero: 0.0,
+            scale: 0.0,
+            sum_q: 0.0,
+            sum_q2: 0.0,
+            err_l2: f64::INFINITY,
+        };
+    }
+    let scale = range / 255.0;
+    let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+    let (z, s) = (f64::from(lo), f64::from(scale));
+    let mut sum_q = 0.0f64;
+    let mut sum_q2 = 0.0f64;
+    let mut err2 = 0.0f64;
+    let mut amax = 0.0f64;
+    for &v in pd {
+        // Saturating cast: ±∞ clamps, NaN → 0 — any code is *safe*
+        // because the error bound below measures what was stored.
+        let q = ((v - lo) * inv).round().clamp(0.0, 255.0) as u8;
+        codes.push(q);
+        let qd = f64::from(q);
+        sum_q += qd;
+        sum_q2 += qd * qd;
+        let rec = z + s * qd;
+        let e = f64::from(v) - rec;
+        err2 += e * e;
+        amax = amax.max(rec.abs()).max(f64::from(v).abs());
+    }
+    // Inflate the measured bound past the measurement's own rounding:
+    // a relative factor for the O(dim) f64 summation plus an absolute
+    // term for the one rounding in each reconstruction (≤ |f̂|·2⁻⁵³).
+    let n = pd.len() as f64;
+    let err_l2 = err2.sqrt() * (1.0 + 1e-9) + (amax + 1.0) * n.sqrt() * 1e-13;
+    QuantMeta {
+        zero: z,
+        scale: s,
+        sum_q,
+        sum_q2,
+        err_l2,
+    }
+}
+
+/// Widened-integer dot product of two u8 code rows: `Σ aᵢ·bᵢ`, exact.
+/// Eight u32 lanes autovectorize; integer addition is associative, so —
+/// unlike the f32 kernels — lane layout cannot change the result.
+#[inline]
+fn dot_u8(a: &[u8], b: &[u8]) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    const L: usize = 8;
+    let split = a.len() - a.len() % L;
+    let mut acc = [0u32; L];
+    for (ca, cb) in a[..split].chunks_exact(L).zip(b[..split].chunks_exact(L)) {
+        for l in 0..L {
+            acc[l] += u32::from(ca[l]) * u32::from(cb[l]);
+        }
+    }
+    let mut total: u64 = acc.iter().map(|&v| u64::from(v)).sum();
+    for (&x, &y) in a[split..].iter().zip(b[split..].iter()) {
+        total += u64::from(x) * u64::from(y);
+    }
+    total
 }
 
 /// One journaled table mutation (see [`Scrt::enable_journal`]). `time` is
@@ -247,8 +390,17 @@ impl Scrt {
     }
 
     /// Exact nearest neighbour (min L2 over `pd`) within a bucket, filtered
-    /// by task type. Returns `(bucket_slot, distance²)`. The scan walks the
-    /// bucket's contiguous SoA feature array in stride-`dim` chunks.
+    /// by task type. Returns `(bucket_slot, distance²)`.
+    ///
+    /// On buckets of [`QUANT_MIN_SLOTS`]+ records the search runs the
+    /// quantized coarse pass first (see the module docs): a
+    /// widened-integer scan over the u8 mirror lower-bounds every
+    /// record's distance, records that provably cannot beat the coarse
+    /// winner's exact distance are pruned, and only the survivors pay the
+    /// exact f32 L2. The result — slot, distance bits, earliest-slot tie
+    /// wins — is **identical** to the full scan's, which smaller buckets
+    /// (and non-finite probes, and dims past [`MAX_QUANT_DIM`]) still run
+    /// verbatim.
     pub fn nearest(
         &self,
         bucket: u32,
@@ -261,6 +413,23 @@ impl Scrt {
         let dim = self.dim;
         debug_assert_eq!(pre.pd.len(), dim, "probe stride mismatch");
         let b = &self.buckets[bucket as usize];
+        if b.slots.len() >= QUANT_MIN_SLOTS && dim <= MAX_QUANT_DIM {
+            if let Some(result) = Self::nearest_coarse(b, dim, task_type, pre) {
+                return result;
+            }
+        }
+        Self::nearest_scan(b, dim, task_type, pre)
+    }
+
+    /// The exact full scan: a chunked L2 pass over the bucket's
+    /// contiguous SoA feature array in stride-`dim` chunks. This is the
+    /// semantic reference the coarse path must reproduce bit for bit.
+    fn nearest_scan(
+        b: &Bucket,
+        dim: usize,
+        task_type: u16,
+        pre: &Preprocessed,
+    ) -> Option<(usize, f32)> {
         let mut best: Option<(usize, f32)> = None;
         for (slot, (s, feat)) in
             b.slots.iter().zip(b.feats.chunks_exact(dim)).enumerate()
@@ -274,6 +443,106 @@ impl Scrt {
             }
         }
         best
+    }
+
+    /// Quantized coarse scan + exact re-rank. Returns `None` when the
+    /// probe cannot be coarse-bounded (non-finite features) — the caller
+    /// then falls back to [`Scrt::nearest_scan`]; `Some(result)` is the
+    /// final answer, bit-identical to the full scan's.
+    ///
+    /// Why pruning is exact (full argument in `docs/ARCHITECTURE.md`):
+    /// for record `r` with true features `f` and probe `p`, the triangle
+    /// inequality gives `‖f−p‖ ≥ ‖f̂−p̂‖ − ‖f−f̂‖ − ‖p−p̂‖` over the
+    /// *reconstructions* `f̂`/`p̂`. The coarse pass computes `‖f̂−p̂‖²` in
+    /// closed form from the integer code statistics (minus an explicit
+    /// f64 rounding margin), and both reconstruction errors are measured
+    /// bounds stored at quantization time. Deflating the squared result
+    /// by `l2_sq`'s worst-case f32 summation factor yields `lb(r)` with
+    /// `lb(r) ≤ l2_sq(f, p)` guaranteed. A record with
+    /// `lb(r) > U := l2_sq(coarse winner, p)` therefore satisfies
+    /// `l2_sq(r) > U ≥ min`, so it is neither the minimum nor a tie for
+    /// it — pruning it cannot change the argmin or the earliest-slot tie
+    /// rule. Every minimizer survives (its `lb ≤ its l2_sq = min ≤ U`),
+    /// and the survivors are re-ranked in ascending slot order with the
+    /// unchanged `l2_sq` and strict `<`, exactly as the full scan.
+    fn nearest_coarse(
+        b: &Bucket,
+        dim: usize,
+        task_type: u16,
+        pre: &Preprocessed,
+    ) -> Option<Option<(usize, f32)>> {
+        let mut pcodes = Vec::with_capacity(dim);
+        let pq = quantize_row(&pre.pd, &mut pcodes);
+        if !pq.err_l2.is_finite() {
+            return None; // non-finite probe: no usable bound, scan instead
+        }
+        // Worst-case relative shrink of l2_sq's f32 value vs the exact
+        // distance: (dim + 3) roundings at u = 2⁻²⁴ each; doubled.
+        let fudge = (2.0 * dim as f64 + 16.0) * (f64::from(f32::EPSILON) * 0.5);
+        // Coarse pass: a lower bound per eligible slot, plus the
+        // coarse-nearest candidate (earliest slot on equal coarse
+        // distance — any eligible candidate keeps pruning correct).
+        let mut bounds: Vec<(usize, f64)> = Vec::with_capacity(b.slots.len());
+        let mut cand: Option<(usize, f64)> = None;
+        for (slot, s) in b.slots.iter().enumerate() {
+            if s.task_type != task_type {
+                continue;
+            }
+            let qrow = &b.qcodes[slot * dim..(slot + 1) * dim];
+            let m = &b.qmeta[slot];
+            if !m.err_l2.is_finite() {
+                // A non-finite record can carry a NaN distance, and the
+                // full scan's fold is order-sensitive around NaN (the
+                // first eligible slot wins unconditionally) — pruning
+                // *other* slots could change which slot comes first. Only
+                // the verbatim scan reproduces that, so use it.
+                return None;
+            }
+            let dotv = dot_u8(qrow, &pcodes) as f64;
+            // ‖f̂−p̂‖² expanded over the code statistics: with
+            // c = z_r − z_p the exact algebra is
+            //   dim·c² + 2c(s_r·Σq_r − s_p·Σq_p)
+            //   + s_r²·Σq_r² + s_p²·Σq_p² − 2·s_r·s_p·Σq_r·q_p.
+            let c = m.zero - pq.zero;
+            let t1 = dim as f64 * c * c;
+            let t2 = 2.0 * c * (m.scale * m.sum_q - pq.scale * pq.sum_q);
+            let t3 = m.scale * m.scale * m.sum_q2;
+            let t4 = pq.scale * pq.scale * pq.sum_q2;
+            let t5 = -2.0 * m.scale * pq.scale * dotv;
+            let dhat2 = ((t1 + t2) + (t3 + t4)) + t5;
+            let tabs = t1.abs() + t2.abs() + t3.abs() + t4.abs() + t5.abs();
+            let lb = (dhat2 - tabs * COARSE_EVAL_EPS).max(0.0).sqrt()
+                - m.err_l2
+                - pq.err_l2;
+            let lb2 = if lb > 0.0 { lb * lb * (1.0 - fudge) } else { 0.0 };
+            bounds.push((slot, lb2));
+            if cand.map_or(true, |(_, cd)| dhat2 < cd) {
+                cand = Some((slot, dhat2));
+            }
+        }
+        let Some((cslot, _)) = cand else {
+            return Some(None); // no record of this task type in the bucket
+        };
+        // Exact distance of the coarse winner upper-bounds the minimum.
+        let u = f64::from(l2_sq(
+            &b.feats[cslot * dim..(cslot + 1) * dim],
+            &pre.pd,
+        ));
+        // Exact re-rank of the survivors, ascending slot order, the same
+        // strict-< comparison as the full scan. (A NaN/∞ `u` disables
+        // pruning — `lb2 > u` is then never true — degrading gracefully
+        // to the full scan.)
+        let mut best: Option<(usize, f32)> = None;
+        for &(slot, lb2) in &bounds {
+            if lb2 > u {
+                continue; // provably cannot beat (or tie) the winner
+            }
+            let d = l2_sq(&b.feats[slot * dim..(slot + 1) * dim], &pre.pd);
+            if best.map_or(true, |(_, bd)| d < bd) {
+                best = Some((slot, d));
+            }
+        }
+        Some(best)
     }
 
     /// Borrow a record view by (bucket, slot).
@@ -367,8 +636,11 @@ impl Scrt {
         } = record;
         let b = &mut self.buckets[bucket as usize];
         let slot = b.slots.len();
-        // Move the feature vector into the SoA array; `pre` keeps only
+        // Quantize into the coarse mirror first (it reads `pre.pd`), then
+        // move the feature vector into the SoA array; `pre` keeps only
         // the grayscale plane for the SSIM gate.
+        let meta = quantize_row(&pre.pd, &mut b.qcodes);
+        b.qmeta.push(meta);
         b.feats.append(&mut pre.pd);
         b.slots.push(Slot {
             id,
@@ -559,21 +831,26 @@ impl Scrt {
         Some((id, taken))
     }
 
-    /// `swap_remove` a slot and mirror the swap in the SoA feature array,
-    /// fixing up the identity index of the record that moved.
+    /// `swap_remove` a slot and mirror the swap in the SoA feature array
+    /// *and* its quantized mirror, fixing up the identity index of the
+    /// record that moved.
     fn remove_slot(&mut self, bucket: u32, slot: usize) {
         debug_assert!(self.dim != 0, "removing a slot implies a prior insert");
         let dim = self.dim;
         let b = &mut self.buckets[bucket as usize];
         let last = b.slots.len() - 1;
         b.slots.swap_remove(slot);
+        b.qmeta.swap_remove(slot);
         if slot != last {
             let (head, tail) = b.feats.split_at_mut(last * dim);
             head[slot * dim..(slot + 1) * dim].copy_from_slice(&tail[..dim]);
+            let (qhead, qtail) = b.qcodes.split_at_mut(last * dim);
+            qhead[slot * dim..(slot + 1) * dim].copy_from_slice(&qtail[..dim]);
             let moved = b.slots[slot].id;
             self.index.insert(moved, (bucket, slot));
         }
         b.feats.truncate(last * dim);
+        b.qcodes.truncate(last * dim);
     }
 }
 
@@ -881,5 +1158,173 @@ mod tests {
         // undoes the (forgotten) bump.
         let at1 = s.top_tau_at(1, 1.0);
         assert_eq!(at1[0].1.reuse_count, 2);
+    }
+
+    // ---- quantized coarse scan -------------------------------------
+
+    use crate::util::rng::Rng;
+
+    fn rand_pre(rng: &mut Rng, dim: usize) -> Preprocessed {
+        Preprocessed {
+            h: 2,
+            w: 2,
+            pd: (0..dim).map(|_| rng.f32() * 2.0 - 1.0).collect(),
+            gray: vec![0.5; 4],
+        }
+    }
+
+    fn rand_rec(id: RecordId, rng: &mut Rng, dim: usize) -> Record {
+        Record {
+            id,
+            pre: rand_pre(rng, dim),
+            task_type: (id % 2) as u16,
+            result: id as u32,
+            reuse_count: 0,
+            last_used: id as f64,
+            origin: 0,
+        }
+    }
+
+    /// Assert the public `nearest` (coarse path on populous buckets)
+    /// returns bit-identical results to the exact scan for every task
+    /// type of a set of probes.
+    fn assert_nearest_matches_scan(s: &Scrt, bucket: u32, probes: &[Preprocessed]) {
+        let b = &s.buckets[bucket as usize];
+        for probe in probes {
+            for tt in 0..2u16 {
+                let got = s.nearest(bucket, tt, probe);
+                let want = Scrt::nearest_scan(b, s.dim, tt, probe);
+                match (got, want) {
+                    (None, None) => {}
+                    (Some((gs, gd)), Some((ws, wd))) => {
+                        assert_eq!(gs, ws, "slot diverged (task_type {tt})");
+                        assert_eq!(
+                            gd.to_bits(),
+                            wd.to_bits(),
+                            "distance bits diverged (task_type {tt})"
+                        );
+                    }
+                    _ => panic!("presence diverged: {got:?} vs {want:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_nearest_matches_full_scan_on_random_buckets() {
+        let dim = 24;
+        let mut rng = Rng::new(41);
+        let mut s = Scrt::new(1, 256);
+        for id in 0..64 {
+            s.insert(0, rand_rec(id, &mut rng, dim));
+        }
+        assert!(s.buckets[0].slots.len() >= QUANT_MIN_SLOTS);
+        let probes: Vec<Preprocessed> =
+            (0..32).map(|_| rand_pre(&mut rng, dim)).collect();
+        assert_nearest_matches_scan(&s, 0, &probes);
+    }
+
+    #[test]
+    fn quantized_nearest_ties_keep_earliest_slot() {
+        // Many identical features: every distance ties, so the earliest
+        // eligible slot must win — on both paths.
+        let dim = 24;
+        let mut s = Scrt::new(1, 64);
+        for id in 0..32 {
+            let mut r = rec(id, 0.5, 0, id as f64);
+            r.pre.pd = vec![0.25; dim];
+            r.pre.gray = vec![0.25; 4];
+            r.task_type = (id % 2) as u16;
+            s.insert(0, r);
+        }
+        let mut probe = pre(0.25);
+        probe.pd = vec![0.3; dim];
+        let (slot, _) = s.nearest(0, 0, &probe).unwrap();
+        assert_eq!(s.view(0, slot).id, 0, "earliest tied slot wins");
+        let (slot1, _) = s.nearest(0, 1, &probe).unwrap();
+        assert_eq!(s.view(0, slot1).id, 1);
+        assert_nearest_matches_scan(&s, 0, &[probe]);
+    }
+
+    #[test]
+    fn quantized_nearest_handles_near_duplicates() {
+        // Records differing by ~1e-7 stress the shortlist bound: the
+        // coarse pass cannot separate them, so all must be re-ranked.
+        let dim = 24;
+        let mut rng = Rng::new(43);
+        let mut s = Scrt::new(1, 64);
+        for id in 0..32usize {
+            let mut r = rand_rec(id, &mut rng, dim);
+            r.task_type = 0;
+            r.pre.pd = (0..dim)
+                .map(|j| 0.5 + (id as f32) * 1e-7 + (j as f32) * 1e-3)
+                .collect();
+            s.insert(0, r);
+        }
+        let mut probe = rand_pre(&mut rng, dim);
+        probe.pd = (0..dim)
+            .map(|j| 0.5 + 1.6e-6 + (j as f32) * 1e-3)
+            .collect();
+        assert_nearest_matches_scan(&s, 0, std::slice::from_ref(&probe));
+    }
+
+    #[test]
+    fn quantized_nearest_survives_constant_and_nonfinite_records() {
+        let dim = 24;
+        let mut rng = Rng::new(44);
+        let mut s = Scrt::new(1, 64);
+        for id in 0..20 {
+            s.insert(0, rand_rec(id, &mut rng, dim));
+        }
+        // constant record (scale = 0)
+        let mut flat = rand_rec(20, &mut rng, dim);
+        flat.pre.pd = vec![0.125; dim];
+        flat.task_type = 0;
+        s.insert(0, flat);
+        // non-finite record (err bound = ∞ → always re-ranked)
+        let mut weird = rand_rec(21, &mut rng, dim);
+        weird.pre.pd[3] = f32::NAN;
+        weird.pre.pd[7] = f32::INFINITY;
+        weird.task_type = 0;
+        s.insert(0, weird);
+        let probes: Vec<Preprocessed> =
+            (0..8).map(|_| rand_pre(&mut rng, dim)).collect();
+        assert_nearest_matches_scan(&s, 0, &probes);
+        // non-finite probe falls back to the scan — same result shape
+        let mut bad_probe = rand_pre(&mut rng, dim);
+        bad_probe.pd[0] = f32::NEG_INFINITY;
+        assert_nearest_matches_scan(&s, 0, &[bad_probe]);
+    }
+
+    #[test]
+    fn quant_mirror_stays_in_sync_across_evictions() {
+        let dim = 24;
+        let mut rng = Rng::new(45);
+        let mut s = Scrt::new(2, 24);
+        // overfill so evictions exercise the swap_remove mirror fixup
+        for id in 0..48 {
+            s.insert((id % 2) as u32, rand_rec(id, &mut rng, dim));
+        }
+        assert!(s.evictions >= 24);
+        for b in &s.buckets {
+            assert_eq!(b.qcodes.len(), b.slots.len() * dim);
+            assert_eq!(b.qmeta.len(), b.slots.len());
+            // every stored code row must equal a fresh quantization of
+            // the feature row it mirrors
+            for slot in 0..b.slots.len() {
+                let mut fresh = Vec::new();
+                let m = quantize_row(&b.feats[slot * dim..(slot + 1) * dim], &mut fresh);
+                assert_eq!(
+                    &b.qcodes[slot * dim..(slot + 1) * dim],
+                    &fresh[..],
+                    "stale code row at slot {slot}"
+                );
+                assert_eq!(m.err_l2.to_bits(), b.qmeta[slot].err_l2.to_bits());
+            }
+        }
+        let probes: Vec<Preprocessed> =
+            (0..8).map(|_| rand_pre(&mut rng, dim)).collect();
+        assert_nearest_matches_scan(&s, 0, &probes);
+        assert_nearest_matches_scan(&s, 1, &probes);
     }
 }

@@ -24,7 +24,7 @@ use crate::coordinator::Scenario;
 use crate::error::Result;
 use crate::harness::bench::{black_box, format_ns, Bencher, Measurement};
 use crate::harness::experiments::{run_scale_suite_timed, EXTENDED_SCALES};
-use crate::simulator::{prepare, Simulation};
+use crate::simulator::{prepare, ShardPartition, Simulation};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::workload::build_workload;
@@ -94,12 +94,32 @@ fn fake_record(id: usize, rng: &mut Rng) -> Record {
 /// selection and the insert-at-capacity eviction path.
 fn scrt_benches(b: &mut Bencher, cap: usize, rng: &mut Rng) {
     let mut scrt = Scrt::new(4, cap);
+    // Keep one mid-table record's features around as the reuse-hit probe
+    // below (the index is ≡ 1 mod 4 for every suite cap, so it lands in
+    // the probed bucket).
+    let hit_idx = cap / 2 + 1;
+    let mut hit_probe = None;
     for i in 0..cap - 1 {
-        scrt.insert((i % 4) as u32, fake_record(i, rng));
+        let rec = fake_record(i, rng);
+        if i == hit_idx {
+            hit_probe = Some(rec.pre.clone());
+        }
+        scrt.insert((i % 4) as u32, rec);
     }
+    let hit_probe = hit_probe.expect("hit probe captured");
+    debug_assert_eq!(hit_idx % 4, 1, "hit probe must land in bucket 1");
     let probe = fake_pre(rng);
     b.bench(&format!("scrt_nearest_{cap}"), || {
         black_box(scrt.nearest(1, 0, &probe));
+    });
+    // The quantized-coarse-scan regime: the probe *is* a stored record,
+    // so the coarse winner re-ranks at distance ~0 and nearly every other
+    // slot is excluded by its quantized lower bound — the reuse-hit fast
+    // path the per-bucket quantized mirror targets. (At the paper-sized
+    // table the bucket is below the coarse-scan gate and this measures
+    // the exact-scan fallback instead.)
+    b.bench(&format!("scrt_nearest_quant_{cap}"), || {
+        black_box(scrt.nearest(1, 0, &hit_probe));
     });
     let present = cap / 2;
     b.bench(&format!("scrt_contains_{cap}"), || {
@@ -355,6 +375,23 @@ pub fn run_suite(opts: &HotpathOpts) -> Result<Bencher> {
                     .unwrap();
                 black_box(r.total_tasks);
             });
+            // The same headline case with the blocked partition pinned
+            // explicitly (the `_t4` twin above rides the engine default,
+            // so this entry keeps a tracked number for the explicit
+            // `--partition blocks` path even if the default ever moves).
+            if n == 15 {
+                b.bench_once(&format!("event_loop_{n}x{n}_625_t4_blocks"), || {
+                    let r = Simulation::new(&big, &backend_n, Scenario::Sccr)
+                        .aggregate_only()
+                        .threads(4)
+                        .partition(ShardPartition::Blocks)
+                        .with_workload(&wl_n)
+                        .with_prepared(&prep_n)
+                        .run()
+                        .unwrap();
+                    black_box(r.total_tasks);
+                });
+            }
         }
         // Constellation-scale sharded case: the 21×21 grid (441
         // satellites) with the CI smoke workload, 4 worker shards.
@@ -417,26 +454,68 @@ fn measurement_entries(doc: &Json) -> Result<Vec<(String, f64)>> {
 /// skipped show `—`; measured benches absent from the baseline are listed
 /// at the bottom (they need a baseline refresh).
 pub fn comparison_markdown(measured: &Json, baseline: &Json) -> Result<String> {
+    comparison_markdown_with_snapshot(measured, baseline, None)
+}
+
+/// [`comparison_markdown`] plus an optional per-case Δ column against a
+/// previously committed snapshot of the same artifact (the repo-root
+/// `BENCH_hotpath.json`): `ccrsat bench-report --snapshot
+/// BENCH_hotpath.json` reproduces locally the before/after delta CI only
+/// showed in its workflow summary. Cases missing from the snapshot show
+/// `—` (they are new since the snapshot was committed).
+pub fn comparison_markdown_with_snapshot(
+    measured: &Json,
+    baseline: &Json,
+    snapshot: Option<&Json>,
+) -> Result<String> {
     let base = measurement_entries(baseline)?;
     let meas = measurement_entries(measured)?;
     let meas_map: BTreeMap<&str, f64> =
         meas.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+    let snap_map: Option<BTreeMap<String, f64>> = match snapshot {
+        Some(doc) => Some(measurement_entries(doc)?.into_iter().collect()),
+        None => None,
+    };
+    // The Δ column: measured vs the snapshot's value for the same case.
+    let snap_cell = |name: &str, measured_ns: Option<f64>| -> String {
+        let Some(snap) = &snap_map else {
+            return String::new();
+        };
+        match (snap.get(name), measured_ns) {
+            (Some(&s_ns), Some(m_ns)) => format!(
+                " {} | {:+.1}% |",
+                format_ns(s_ns).trim(),
+                (m_ns - s_ns) / s_ns * 100.0
+            ),
+            (Some(&s_ns), None) => format!(" {} | — |", format_ns(s_ns).trim()),
+            (None, _) => " — | — |".to_string(),
+        }
+    };
     let mut out = String::from("## Hot-path bench vs committed baseline\n\n");
-    out.push_str("| bench | baseline | measured | measured/baseline |\n");
-    out.push_str("|---|---:|---:|---:|\n");
+    if snap_map.is_some() {
+        out.push_str(
+            "| bench | baseline | measured | measured/baseline | snapshot | Δ vs snapshot |\n",
+        );
+        out.push_str("|---|---:|---:|---:|---:|---:|\n");
+    } else {
+        out.push_str("| bench | baseline | measured | measured/baseline |\n");
+        out.push_str("|---|---:|---:|---:|\n");
+    }
     for (name, base_ns) in &base {
         match meas_map.get(name.as_str()) {
             Some(&m_ns) => out.push_str(&format!(
-                "| {} | {} | {} | {:.2}x |\n",
+                "| {} | {} | {} | {:.2}x |{}\n",
                 name,
                 format_ns(*base_ns).trim(),
                 format_ns(m_ns).trim(),
-                m_ns / base_ns
+                m_ns / base_ns,
+                snap_cell(name, Some(m_ns))
             )),
             None => out.push_str(&format!(
-                "| {} | {} | — | — |\n",
+                "| {} | {} | — | — |{}\n",
                 name,
-                format_ns(*base_ns).trim()
+                format_ns(*base_ns).trim(),
+                snap_cell(name, None)
             )),
         }
     }
@@ -445,9 +524,10 @@ pub fn comparison_markdown(measured: &Json, baseline: &Json) -> Result<String> {
     for (name, m_ns) in &meas {
         if !base_names.contains(name.as_str()) {
             out.push_str(&format!(
-                "| {} (no baseline) | — | {} | — |\n",
+                "| {} (no baseline) | — | {} | — |{}\n",
                 name,
-                format_ns(*m_ns).trim()
+                format_ns(*m_ns).trim(),
+                snap_cell(name, Some(*m_ns))
             ));
         }
     }
@@ -503,6 +583,7 @@ mod tests {
         let names: Vec<&str> = b.results().iter().map(|m| m.name.as_str()).collect();
         for expect in [
             "scrt_nearest_32",
+            "scrt_nearest_quant_32",
             "scrt_contains_32",
             "scrt_top_tau_11_32",
             "scrt_insert_evict_32",
@@ -586,5 +667,42 @@ mod tests {
         assert!(md.contains("| skipped |") && md.contains("| — | — |"), "{md}");
         assert!(md.contains("brand_new (no baseline)"), "{md}");
         assert!(comparison_markdown(&measured, &Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn snapshot_column_reports_per_case_delta() {
+        let baseline = Json::parse(
+            r#"{"schema": "ccrsat-bench-v1", "measurements": [
+                {"name": "tracked", "per_iter_ns": 1000.0},
+                {"name": "skipped", "per_iter_ns": 2000.0}
+            ]}"#,
+        )
+        .unwrap();
+        let measured = Json::parse(
+            r#"{"schema": "ccrsat-bench-v1", "measurements": [
+                {"name": "tracked", "per_iter_ns": 500.0},
+                {"name": "brand_new", "per_iter_ns": 42.0}
+            ]}"#,
+        )
+        .unwrap();
+        let snapshot = Json::parse(
+            r#"{"schema": "ccrsat-bench-v1", "measurements": [
+                {"name": "tracked", "per_iter_ns": 800.0},
+                {"name": "skipped", "per_iter_ns": 1900.0}
+            ]}"#,
+        )
+        .unwrap();
+        let md = comparison_markdown_with_snapshot(&measured, &baseline, Some(&snapshot))
+            .unwrap();
+        assert!(md.contains("Δ vs snapshot"), "{md}");
+        // tracked: 500 measured vs 800 snapshot → -37.5%
+        assert!(md.contains("-37.5%"), "delta missing:\n{md}");
+        // skipped: in the snapshot but unmeasured → snapshot value, dash delta
+        assert!(md.contains("1.90 µs/iter | — |"), "{md}");
+        // brand_new: not in the snapshot → both cells dashed
+        assert!(md.contains("brand_new (no baseline)"), "{md}");
+        // Without a snapshot the classic 4-column table is unchanged.
+        let classic = comparison_markdown(&measured, &baseline).unwrap();
+        assert!(!classic.contains("snapshot"), "{classic}");
     }
 }

@@ -5,7 +5,7 @@
 //! ccrsat reproduce  --experiment table2|table3|fig3|fig4|fig5|all [...]
 //! ccrsat sweep      --param tau|thco [...]
 //! ccrsat bench      [--scale] [--check] [--out F]   # hot-path perf suite
-//! ccrsat bench-report [--measured F] [--baseline F] # markdown perf table
+//! ccrsat bench-report [--measured F] [--baseline F] [--snapshot F] # perf table
 //! ccrsat inspect    [--artifacts DIR]        # artifact/manifest report
 //! ccrsat selftest   [--artifacts DIR]        # cross-check pjrt vs native
 //! ```
@@ -23,7 +23,7 @@ use ccrsat::harness::experiments as exp;
 use ccrsat::harness::hotpath;
 use ccrsat::metrics::reports_to_csv;
 use ccrsat::simulator::{
-    PreparedSource, Simulation, StreamConfig, StreamingSource,
+    PreparedSource, ShardPartition, Simulation, StreamConfig, StreamingSource,
 };
 use ccrsat::util::json::Json;
 use ccrsat::workload::build_workload;
@@ -54,6 +54,9 @@ BENCH OPTIONS:
     --baseline <FILE>    baseline to check/report against (default benches/baseline.json)
     --factor <X>         regression factor for --check (default 2.0)
     --measured <FILE>    bench-report: measured artifact (default BENCH_hotpath.json)
+    --snapshot <FILE>    bench-report: also render a per-case Δ column vs a
+                         committed snapshot of the artifact (e.g. the
+                         repo-root BENCH_hotpath.json at HEAD)
 
 RUN SCALE OPTIONS:
     --streaming          prepare task inputs in on-demand chunks with a
@@ -63,6 +66,11 @@ RUN SCALE OPTIONS:
     --threads <K>        run the sharded conservative event engine with K
                          worker shards (bit-identical report; default:
                          single-threaded engine)
+    --partition <P>      sharded-engine satellite partition: 'blocks'
+                         (contiguous id ranges — whole orbital planes per
+                         shard; default) or 'roundrobin' (sat % K); only
+                         relabels shard ownership, the report is
+                         bit-identical either way (use with --threads)
 
 COMMON OPTIONS:
     --config <FILE>      TOML config (defaults: paper Table I values)
@@ -353,6 +361,21 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         }
         sim = sim.threads(threads);
     }
+    if let Some(spec) = flags.get("partition") {
+        let part = ShardPartition::parse(spec).ok_or_else(|| {
+            Error::config(format!(
+                "--partition must be 'roundrobin' or 'blocks', got '{spec}'"
+            ))
+        })?;
+        if threads.is_none() {
+            eprintln!(
+                "warning: --partition {} only affects the sharded engine; \
+                 pass --threads K to use it",
+                part.name()
+            );
+        }
+        sim = sim.partition(part);
+    }
     let report = if flags.has("streaming") {
         let stream = StreamConfig::with_window_tasks(
             flags.parse_usize("stream-window")?.unwrap_or(256),
@@ -557,7 +580,21 @@ fn cmd_bench_report(flags: &Flags) -> Result<()> {
     let baseline_path = flags.get("baseline").unwrap_or(hotpath::BASELINE_PATH);
     let measured = hotpath::load_bench_json(measured_path)?;
     let baseline = hotpath::load_bench_json(baseline_path)?;
-    print!("{}", hotpath::comparison_markdown(&measured, &baseline)?);
+    // `--snapshot F` adds the per-case Δ column CI shows in its workflow
+    // summary — typically F is the committed repo-root BENCH_hotpath.json
+    // and `--measured` a fresh local run.
+    let snapshot = flags
+        .get("snapshot")
+        .map(hotpath::load_bench_json)
+        .transpose()?;
+    print!(
+        "{}",
+        hotpath::comparison_markdown_with_snapshot(
+            &measured,
+            &baseline,
+            snapshot.as_ref()
+        )?
+    );
     Ok(())
 }
 

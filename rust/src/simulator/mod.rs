@@ -58,6 +58,7 @@ use events::{EventKind, EventQueue};
 
 pub use engine::Engine;
 pub use observer::{NullObserver, Observer, TraceObserver};
+pub use sharded::ShardPartition;
 pub use source::{PreparedSource, SharedPrepared, StreamConfig, StreamingSource};
 
 /// A configured simulation, ready to run.
@@ -75,6 +76,9 @@ pub struct Simulation<'a> {
     /// `Some(k)` routes the run through the sharded conservative engine
     /// with `k` worker shards; `None` keeps the single-threaded engine.
     threads: Option<usize>,
+    /// How the sharded engine maps satellites onto shards. Only read when
+    /// `threads` is set; the report is bit-identical either way.
+    partition: ShardPartition,
 }
 
 /// Pre-computed per-task data, shareable across scenario runs.
@@ -185,12 +189,14 @@ impl<'a> Simulation<'a> {
             prepared: None,
             aggregate_only: false,
             threads: None,
+            partition: ShardPartition::default(),
         }
     }
 
     /// Run the event loop on the **sharded conservative engine** with
     /// `threads` worker shards (clamped to ≥ 1). Satellites partition
-    /// round-robin across shards; cross-shard broadcasts synchronize at
+    /// across shards per [`Simulation::partition`] (contiguous id blocks
+    /// by default); cross-shard broadcasts synchronize at
     /// conservative windows sized by the minimum ISL record-hop latency,
     /// and the resulting [`RunReport`] is bit-identical to the
     /// single-threaded engine's for every scenario and source (pinned by
@@ -201,6 +207,16 @@ impl<'a> Simulation<'a> {
     /// exactly (the sharded loop has no observer seam).
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = Some(threads.max(1));
+        self
+    }
+
+    /// Select the sharded engine's satellite ↔ shard mapping (default:
+    /// [`ShardPartition::Blocks`], which keeps whole orbital planes on
+    /// one shard). Only meaningful together with [`Simulation::threads`];
+    /// the partition relabels shard ownership only, so the report stays
+    /// bit-identical across variants.
+    pub fn partition(mut self, partition: ShardPartition) -> Self {
+        self.partition = partition;
         self
     }
 
@@ -313,6 +329,7 @@ impl<'a> Simulation<'a> {
                     wl,
                     !self.aggregate_only,
                     threads,
+                    self.partition,
                     source,
                     wall_start,
                 );
@@ -1046,6 +1063,47 @@ mod tests {
             assert_eq!(sharded.mean_latency, single.mean_latency, "{threads}");
             assert_eq!(sharded.p95_latency, single.p95_latency, "{threads}");
             assert_eq!(sharded.tasks.len(), single.tasks.len(), "{threads}");
+        }
+    }
+
+    #[test]
+    fn sharded_partitions_produce_identical_reports() {
+        let cfg = tiny_cfg(3, 45);
+        let backend = NativeBackend::new(&cfg);
+        let wl = build_workload(&cfg);
+        let prep = prepare(&backend, &wl).unwrap();
+        let single = Simulation::new(&cfg, &backend, Scenario::Sccr)
+            .with_workload(&wl)
+            .with_prepared(&prep)
+            .run()
+            .unwrap();
+        for part in [ShardPartition::RoundRobin, ShardPartition::Blocks] {
+            for threads in [2usize, 4] {
+                let sharded = Simulation::new(&cfg, &backend, Scenario::Sccr)
+                    .with_workload(&wl)
+                    .with_prepared(&prep)
+                    .threads(threads)
+                    .partition(part)
+                    .run()
+                    .unwrap();
+                let tag = format!("{} x{threads}", part.name());
+                assert_eq!(sharded.completion_time, single.completion_time, "{tag}");
+                assert_eq!(sharded.compute_seconds, single.compute_seconds, "{tag}");
+                assert_eq!(sharded.reused_tasks, single.reused_tasks, "{tag}");
+                assert_eq!(sharded.data_transfer_mb, single.data_transfer_mb, "{tag}");
+                assert_eq!(sharded.collab_events, single.collab_events, "{tag}");
+                assert_eq!(sharded.p95_latency, single.p95_latency, "{tag}");
+                assert_eq!(
+                    sharded.per_satellite.len(),
+                    single.per_satellite.len(),
+                    "{tag}"
+                );
+                for (a, b) in sharded.per_satellite.iter().zip(&single.per_satellite) {
+                    assert_eq!(a.sat, b.sat, "{tag}: summary order");
+                    assert_eq!(a.tasks, b.tasks, "{tag}: sat {}", a.sat);
+                    assert_eq!(a.busy_s, b.busy_s, "{tag}: sat {}", a.sat);
+                }
+            }
         }
     }
 

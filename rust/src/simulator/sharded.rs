@@ -1,8 +1,11 @@
 //! Sharded conservative parallel event engine.
 //!
-//! Satellites are partitioned round-robin across K worker shards
-//! (`sat % K`), each owning a private [`EventQueue`] for its satellites'
-//! `Arrival` / `Completion` events. The only *event* that crosses
+//! Satellites are partitioned across K worker shards by a
+//! [`ShardPartition`] — contiguous id blocks by default (row-major grid
+//! ids make an orbital plane one contiguous range, so most broadcast
+//! deliveries stay intra-shard), or the classic round-robin `sat % K`
+//! interleave — each shard owning a private [`EventQueue`] for its
+//! satellites' `Arrival` / `Completion` events. The only *event* that crosses
 //! satellites is `BroadcastDeliver`, and every broadcast record needs at
 //! least [`CommModel::lookahead_at`] of virtual time to reach its first
 //! receiver — which is exactly the lookahead a conservative parallel
@@ -70,6 +73,124 @@ use crate::simulator::events::{EventKind, EventQueue};
 use crate::simulator::source::PreparedSource;
 use crate::workload::{SatId, Workload};
 
+/// How global satellite ids map onto worker shards.
+///
+/// Either partition assigns every satellite to exactly one shard, and the
+/// engine's merge discipline is partition-agnostic — gates resolve in
+/// global `(time, requester id)` order, completion logs fold in global
+/// `(completion, start, task_id)` order, fault counters sum commutatively
+/// — so the choice only *relabels ownership*: the [`RunReport`] is
+/// bit-identical across variants and K (pinned in `tests/properties.rs`).
+/// What changes is locality: with row-major grid ids (`orbit * n + slot`)
+/// a contiguous block keeps whole orbital planes on one shard, so most
+/// broadcast deliveries stay intra-shard instead of crossing on every
+/// hop as under the interleave.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShardPartition {
+    /// Interleaved `sat % K` — the engine's original layout, kept for
+    /// comparison and as the worst-case-locality reference.
+    RoundRobin,
+    /// Contiguous satellite-id ranges of near-equal size (the first
+    /// `sats % K` shards own one extra satellite). The default.
+    #[default]
+    Blocks,
+}
+
+impl ShardPartition {
+    /// Parse a `--partition` flag value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "roundrobin" | "round-robin" | "rr" => Some(Self::RoundRobin),
+            "blocks" | "block" => Some(Self::Blocks),
+            _ => None,
+        }
+    }
+
+    /// The canonical flag spelling, for reports and error messages.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::RoundRobin => "roundrobin",
+            Self::Blocks => "blocks",
+        }
+    }
+}
+
+/// A [`ShardPartition`] resolved for a concrete satellite count and shard
+/// count: the bidirectional `sat ↔ (shard, local)` mapping every routing
+/// site goes through.
+#[derive(Clone, Copy, Debug)]
+struct PartitionMap {
+    kind: ShardPartition,
+    sats: usize,
+    k: usize,
+    /// Blocks: `sats / k` satellites per shard before the remainder is
+    /// spread over the leading shards.
+    base: usize,
+    /// Blocks: the first `rem` shards own `base + 1` satellites.
+    rem: usize,
+}
+
+impl PartitionMap {
+    fn new(kind: ShardPartition, sats: usize, k: usize) -> Self {
+        debug_assert!(k >= 1, "partition over zero shards");
+        Self {
+            kind,
+            sats,
+            k,
+            base: sats / k,
+            rem: sats % k,
+        }
+    }
+
+    /// First satellite id of a Blocks shard.
+    fn block_start(&self, shard: usize) -> usize {
+        shard * self.base + shard.min(self.rem)
+    }
+
+    /// The shard owning satellite `sat`.
+    fn shard_of(&self, sat: SatId) -> usize {
+        match self.kind {
+            ShardPartition::RoundRobin => sat % self.k,
+            ShardPartition::Blocks => {
+                // The first `rem` shards cover ids `[0, rem * (base+1))`.
+                let split = self.rem * (self.base + 1);
+                if sat < split {
+                    sat / (self.base + 1)
+                } else {
+                    // `base == 0` implies `split == sats`, so a valid id
+                    // never reaches this branch with a zero divisor.
+                    self.rem + (sat - split) / self.base.max(1)
+                }
+            }
+        }
+    }
+
+    /// Satellite `sat`'s slot within its owning shard.
+    fn local_of(&self, sat: SatId) -> usize {
+        match self.kind {
+            ShardPartition::RoundRobin => sat / self.k,
+            ShardPartition::Blocks => sat - self.block_start(self.shard_of(sat)),
+        }
+    }
+
+    /// The global satellite id at `(shard, local)` — `local_of`'s inverse.
+    fn sat_of(&self, shard: usize, local: usize) -> SatId {
+        match self.kind {
+            ShardPartition::RoundRobin => local * self.k + shard,
+            ShardPartition::Blocks => self.block_start(shard) + local,
+        }
+    }
+
+    /// How many satellites shard `shard` owns.
+    fn len_of(&self, shard: usize) -> usize {
+        match self.kind {
+            // Count of `s ∈ [0, sats)` with `s ≡ shard (mod k)`.
+            ShardPartition::RoundRobin => (self.sats + self.k - 1 - shard) / self.k,
+            ShardPartition::Blocks => self.base + usize::from(shard < self.rem),
+        }
+    }
+}
+
 /// One SRS-relevant state checkpoint of a satellite inside the current
 /// window, taken after every mutation (service start, completion
 /// bookkeeping). `time = NEG_INFINITY` marks the lazily-recorded
@@ -136,11 +257,11 @@ struct ShardCtx<'a, S: PreparedSource + ?Sized> {
 /// One worker shard: the satellites it owns, their private event queue,
 /// its completion-log stream and the per-window journals.
 struct Shard {
-    /// Shard index within the round-robin partition.
+    /// Shard index within the partition.
     id: usize,
-    /// Total shard count K (global sat `s` lives at shard `s % K`,
-    /// local slot `s / K`).
-    stride: usize,
+    /// The resolved satellite ↔ shard mapping (one copy per shard; it is
+    /// a handful of words and `Copy`).
+    part: PartitionMap,
     nodes: Vec<SatNode>,
     q: EventQueue,
     /// Completed-task logs in this shard's completion order.
@@ -159,7 +280,7 @@ struct Shard {
 
 impl Shard {
     fn sat_of(&self, local: usize) -> SatId {
-        local * self.stride + self.id
+        self.part.sat_of(self.id, local)
     }
 
     /// Reset the per-window journals (SRS checkpoints + SCRT ops).
@@ -247,15 +368,15 @@ impl Shard {
             match ev.kind {
                 EventKind::Arrival(idx) => {
                     let sat = ctx.wl.tasks[idx].satellite;
-                    debug_assert_eq!(sat % self.stride, self.id, "foreign arrival");
-                    let local = sat / self.stride;
+                    debug_assert_eq!(self.part.shard_of(sat), self.id, "foreign arrival");
+                    let local = self.part.local_of(sat);
                     self.nodes[local].queue.push_back(idx);
                     if self.nodes[local].in_flight.is_none() {
                         self.start_service(ctx, local, now)?;
                     }
                 }
                 EventKind::Completion(sat) => {
-                    let local = sat / self.stride;
+                    let local = self.part.local_of(sat);
                     if self.on_completion(ctx, local, now, quiet_until)? {
                         return Ok(()); // paused at an unresolved gate
                     }
@@ -265,8 +386,8 @@ impl Shard {
                     bucket,
                     record,
                 } => {
-                    debug_assert_eq!(dst % self.stride, self.id, "foreign delivery");
-                    let node = &mut self.nodes[dst / self.stride];
+                    debug_assert_eq!(self.part.shard_of(dst), self.id, "foreign delivery");
+                    let node = &mut self.nodes[self.part.local_of(dst)];
                     node.scrt.merge_broadcast(bucket, record.as_ref(), now);
                     // Receiver damping, as in the single-threaded engine.
                     node.collab_armed = false;
@@ -280,8 +401,8 @@ impl Shard {
                     chunk_seq,
                     total_chunks,
                 } => {
-                    debug_assert_eq!(dst % self.stride, self.id, "foreign chunk");
-                    let node = &mut self.nodes[dst / self.stride];
+                    debug_assert_eq!(self.part.shard_of(dst), self.id, "foreign chunk");
+                    let node = &mut self.nodes[self.part.local_of(dst)];
                     if node.accept_chunk(record.id, chunk_seq, total_chunks) {
                         node.scrt.merge_broadcast(bucket, record.as_ref(), now);
                         node.collab_armed = false;
@@ -466,6 +587,7 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
     wl: &Workload,
     keep_logs: bool,
     threads: usize,
+    partition: ShardPartition,
     source: &mut S,
     wall_start: std::time::Instant,
 ) -> Result<RunReport> {
@@ -525,12 +647,12 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
         lookup_s: cfg.compute.lookup_fixed_s + cfg.compute.lookup_flops / c_comp,
     };
 
+    let part = PartitionMap::new(partition, sats, shard_count);
     let mut shards: Vec<Shard> = (0..shard_count)
         .map(|id| {
-            let nodes: Vec<SatNode> = (id..sats)
-                .step_by(shard_count)
-                .map(|s| {
-                    let mut node = SatNode::new(s, num_buckets, cap);
+            let nodes: Vec<SatNode> = (0..part.len_of(id))
+                .map(|local| {
+                    let mut node = SatNode::new(part.sat_of(id, local), num_buckets, cap);
                     if ctx.journal {
                         node.scrt.enable_journal();
                     }
@@ -540,7 +662,7 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
             let locals = nodes.len();
             Shard {
                 id,
-                stride: shard_count,
+                part,
                 nodes,
                 q: EventQueue::new(),
                 logs: Vec::new(),
@@ -555,7 +677,7 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
     // Seed the arrivals, in task order per shard (same relative order as
     // the single-threaded engine's global arrival pushes).
     for (idx, task) in wl.tasks.iter().enumerate() {
-        shards[task.satellite % shard_count]
+        shards[part.shard_of(task.satellite)]
             .q
             .push(task.arrival, EventKind::Arrival(idx));
     }
@@ -647,7 +769,7 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
             let Some((t, req_sat, i)) = earliest else {
                 break;
             };
-            let local = req_sat / shard_count;
+            let local = part.local_of(req_sat);
             let gate_policy = policy.expect("gates only fire with a collab policy");
 
             // Re-check against the authoritative quiet horizon (a collab
@@ -678,15 +800,15 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
                 let mut all_srs = vec![0.0f64; sats];
                 for (si, shard) in shards.iter().enumerate() {
                     for local_idx in 0..shard.nodes.len() {
-                        all_srs[local_idx * shard_count + si] =
+                        all_srs[part.sat_of(si, local_idx)] =
                             shard.srs_at(local_idx, t, ctx.beta);
                     }
                 }
                 match gate_policy.select_source(&topo, req_sat, &all_srs, ctx.th_co) {
                     None => collab.aborted_collabs += 1,
                     Some(decision) => {
-                        let records = shards[decision.source % shard_count].nodes
-                            [decision.source / shard_count]
+                        let records = shards[part.shard_of(decision.source)].nodes
+                            [part.local_of(decision.source)]
                             .scrt
                             .top_tau_at(tau, t);
                         if records.is_empty() {
@@ -696,8 +818,8 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
                             if decision.expanded {
                                 collab.expanded_events += 1;
                             }
-                            shards[decision.source % shard_count].nodes
-                                [decision.source / shard_count]
+                            shards[part.shard_of(decision.source)].nodes
+                                [part.local_of(decision.source)]
                                 .state
                                 .times_source += 1;
                             collab.broadcast_records += records.len();
@@ -730,7 +852,7 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
                                     .collect();
                                 for d in &plan.deliveries {
                                     let (bucket, rec) = &shared[d.rec_slot];
-                                    pending[d.dst % shard_count].push(PendingEvent {
+                                    pending[part.shard_of(d.dst)].push(PendingEvent {
                                         time: d.time,
                                         kind: EventKind::ChunkDeliver {
                                             dst: d.dst,
@@ -742,7 +864,7 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
                                     });
                                 }
                                 for to in &plan.timeouts {
-                                    pending[to.src % shard_count].push(PendingEvent {
+                                    pending[part.shard_of(to.src)].push(PendingEvent {
                                         time: to.time,
                                         kind: EventKind::LinkTimeout {
                                             src: to.src,
@@ -769,7 +891,7 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
                                 // relative seq order of equal-time deliveries.
                                 for &(dst, depth) in &plan.arrivals {
                                     for (k, (bucket, rec)) in shared.iter().enumerate() {
-                                        pending[dst % shard_count].push(PendingEvent {
+                                        pending[part.shard_of(dst)].push(PendingEvent {
                                             time: t + plan.arrival_offset(k, depth),
                                             kind: EventKind::BroadcastDeliver {
                                                 dst,
@@ -824,7 +946,7 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
     let makespan = metrics.makespan();
     let per_satellite: Vec<SatSummary> = (0..sats)
         .map(|s| {
-            let node = &shards[s % shard_count].nodes[s / shard_count];
+            let node = &shards[part.shard_of(s)].nodes[part.local_of(s)];
             SatSummary {
                 sat: s,
                 tasks: node.state.tasks_processed,
@@ -847,4 +969,79 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
         &collab,
         wall_start.elapsed().as_secs_f64(),
     ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every `(shard, local)` slot maps to a unique in-range satellite and
+    /// `shard_of`/`local_of` invert `sat_of` exactly.
+    fn check_bijection(kind: ShardPartition, sats: usize, k: usize) {
+        let part = PartitionMap::new(kind, sats, k);
+        let mut seen = vec![false; sats];
+        let mut total = 0usize;
+        for shard in 0..k {
+            for local in 0..part.len_of(shard) {
+                let sat = part.sat_of(shard, local);
+                assert!(sat < sats, "{kind:?} {sats}/{k}: sat {sat} out of range");
+                assert!(!seen[sat], "{kind:?} {sats}/{k}: sat {sat} owned twice");
+                seen[sat] = true;
+                assert_eq!(part.shard_of(sat), shard, "{kind:?} {sats}/{k}: shard_of({sat})");
+                assert_eq!(part.local_of(sat), local, "{kind:?} {sats}/{k}: local_of({sat})");
+                total += 1;
+            }
+        }
+        assert_eq!(total, sats, "{kind:?} {sats}/{k}: coverage");
+    }
+
+    #[test]
+    fn partitions_are_bijections() {
+        for kind in [ShardPartition::RoundRobin, ShardPartition::Blocks] {
+            for sats in [0usize, 1, 2, 3, 9, 25, 49, 225, 441] {
+                for k in [1usize, 2, 3, 4, 5, 7, 16] {
+                    check_bijection(kind, sats, k);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_ranges_are_contiguous_and_balanced() {
+        // 25 satellites over 4 shards: 25 = 4·6 + 1, so shard 0 owns one
+        // extra and every shard's range is one contiguous id interval.
+        let part = PartitionMap::new(ShardPartition::Blocks, 25, 4);
+        assert_eq!(
+            (0..4).map(|s| part.len_of(s)).collect::<Vec<_>>(),
+            vec![7, 6, 6, 6]
+        );
+        let mut next = 0usize;
+        for shard in 0..4 {
+            for local in 0..part.len_of(shard) {
+                assert_eq!(part.sat_of(shard, local), next, "non-contiguous block");
+                next += 1;
+            }
+        }
+        assert_eq!(next, 25);
+    }
+
+    #[test]
+    fn blocks_keeps_grid_rows_on_one_shard() {
+        // A 4x4 grid over 4 shards: row-major ids make each orbital plane
+        // (grid row) exactly one shard — the locality the default buys.
+        let part = PartitionMap::new(ShardPartition::Blocks, 16, 4);
+        for sat in 0..16 {
+            assert_eq!(part.shard_of(sat), sat / 4);
+        }
+    }
+
+    #[test]
+    fn partition_flag_spellings_round_trip() {
+        for kind in [ShardPartition::RoundRobin, ShardPartition::Blocks] {
+            assert_eq!(ShardPartition::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(ShardPartition::parse("rr"), Some(ShardPartition::RoundRobin));
+        assert_eq!(ShardPartition::parse("hilbert"), None);
+        assert_eq!(ShardPartition::default(), ShardPartition::Blocks);
+    }
 }

@@ -13,8 +13,8 @@ use ccrsat::coordinator::Scenario;
 use ccrsat::network::{CommModel, GridTopology};
 use ccrsat::config::{OutageSpec, SimConfig, TopologyMode};
 use ccrsat::simulator::{
-    prepare, prepare_sequential, PreparedSource, Simulation, StreamConfig,
-    StreamingSource,
+    prepare, prepare_sequential, PreparedSource, ShardPartition, Simulation,
+    StreamConfig, StreamingSource,
 };
 use ccrsat::util::rng::Rng;
 use ccrsat::workload::build_workload;
@@ -583,6 +583,63 @@ fn prop_dynamic_contact_plans_stay_bit_identical_across_shards() {
     );
 }
 
+/// Shard partition is pure relabeling. Whether satellites map to shards
+/// round-robin (`sat % K`) or as contiguous id blocks, the sharded
+/// engine's `RunReport` — aggregates, per-satellite summaries, per-task
+/// logs — is bit-identical to the single-threaded engine's, across every
+/// scenario, K ∈ {1, 2, 4}, and both a static grid and a dynamic Walker
+/// contact plan. The partition decides only which worker *executes* a
+/// satellite; gate resolution and log folding run in global orders that
+/// never observe shard ownership.
+#[test]
+fn prop_shard_partitions_are_pure_relabelings() {
+    let mut grid = SimConfig::paper_default(3);
+    grid.workload.total_tasks = 36;
+    grid.workload.seed = 41_000;
+    // Smaller tiles keep the debug-mode render cost sane; identity is
+    // independent of tile size.
+    grid.workload.raw_h = 32;
+    grid.workload.raw_w = 32;
+
+    let mut walker = grid.clone();
+    walker.topology.mode = TopologyMode::Walker;
+    walker.topology.duty = 0.6;
+    walker.topology.period_s = 30.0;
+    walker.comm.chunk_bytes = 6e6;
+
+    for (variant, cfg) in [("grid", &grid), ("walker", &walker)] {
+        let backend = NativeBackend::new(cfg);
+        let wl = build_workload(cfg);
+        let prep = prepare(&backend, &wl).unwrap();
+        for scenario in Scenario::ALL {
+            let single = Simulation::new(cfg, &backend, scenario)
+                .with_workload(&wl)
+                .with_prepared(&prep)
+                .run()
+                .unwrap();
+            for part in [ShardPartition::RoundRobin, ShardPartition::Blocks] {
+                for threads in [1usize, 2, 4] {
+                    let sharded = Simulation::new(cfg, &backend, scenario)
+                        .with_workload(&wl)
+                        .with_prepared(&prep)
+                        .threads(threads)
+                        .partition(part)
+                        .run()
+                        .unwrap();
+                    assert_reports_bit_identical(
+                        &single,
+                        &sharded,
+                        &format!(
+                            "{variant} {scenario} {} K={threads}",
+                            part.name()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // SCRT invariants
 // ---------------------------------------------------------------------------
@@ -919,6 +976,173 @@ fn prop_indexed_scrt_matches_naive_reference() {
             assert_tables_equal(seed, step, &real, &model);
         }
     }
+}
+
+/// Slot + distance-bit comparison for `nearest` results. Plain
+/// `assert_eq!` on the `f32` would accept `-0.0 == 0.0`; the quantized
+/// coarse path promises *bit* identity with the full scan, so that is
+/// what gets checked.
+fn assert_nearest_bits(
+    got: Option<(usize, f32)>,
+    want: Option<(usize, f32)>,
+    label: &str,
+) {
+    match (got, want) {
+        (None, None) => {}
+        (Some((gs, gd)), Some((ws, wd))) => {
+            assert_eq!(gs, ws, "{label}: slot diverged");
+            assert_eq!(
+                gd.to_bits(),
+                wd.to_bits(),
+                "{label}: distance bits diverged ({gd} vs {wd})"
+            );
+        }
+        _ => panic!("{label}: presence diverged: {got:?} vs {want:?}"),
+    }
+}
+
+/// The quantized coarse scan inside `Scrt::nearest` is bit-identical to
+/// the naive full scan. Unlike `prop_indexed_scrt_matches_naive_reference`
+/// (tiny buckets, so the ≥16-slot coarse gate never opens), this sweep
+/// builds populous buckets at several feature dims and drives
+/// insert/evict/merge/reuse churn plus probes that are hard on the error
+/// bound: near-duplicate records 1e-6 apart, probes near those clusters,
+/// and rows carrying non-finite values (which must force the exact-scan
+/// fallback). Every probe must return the same slot and the same f32
+/// *bits* as the naive reference, and the table contents must stay
+/// field-identical after every mutation so quant-mirror bookkeeping can
+/// never silently desynchronize record storage.
+#[test]
+fn prop_quantized_nearest_matches_naive_reference_bitwise() {
+    let mut coarse_cases = 0usize;
+    let mut hits = 0u64;
+    let sweeps = CASES / 2;
+    for seed in 0..sweeps {
+        let mut rng = Rng::new(seed ^ 0x0A57);
+        // `pre(dim)` stores a pd of 3×dim f32s — up to 360-wide rows.
+        let dim = [8usize, 16, 40, 120][rng.below(4)];
+        let num_buckets = 1 + rng.below(2);
+        let cap = 24 + rng.below(40);
+        let mut real = Scrt::new(num_buckets, cap);
+        let mut model = NaiveScrt::new(num_buckets, cap);
+        // Cluster center for near-duplicate records and probes.
+        let base = pre(&mut rng, dim);
+        let mut next_id = 0usize;
+
+        let make_rec = |id: usize, rng: &mut Rng| -> Record {
+            let mut p = match rng.below(3) {
+                // near-duplicate of the cluster center, 1e-6 apart
+                0 => {
+                    let mut p = base.clone();
+                    for v in p.pd.iter_mut() {
+                        *v += (rng.f32() - 0.5) * 1e-6;
+                    }
+                    p
+                }
+                _ => pre(rng, dim),
+            };
+            if rng.below(24) == 0 {
+                // non-finite row: quantization must flag it and the
+                // whole lookup must fall back to the exact scan
+                p.pd[0] = f32::INFINITY;
+            }
+            Record {
+                id,
+                pre: p,
+                task_type: rng.below(3) as u16,
+                result: rng.below(21) as u32,
+                reuse_count: rng.below(10) as u32,
+                last_used: rng.f64() * 100.0,
+                origin: rng.below(25),
+            }
+        };
+
+        // Fill to capacity so the coarse gate opens, then churn.
+        for _ in 0..cap {
+            let r = make_rec(next_id, &mut rng);
+            next_id += 1;
+            let b = rng.below(num_buckets) as u32;
+            let ev_real = real.insert(b, r.clone());
+            let ev_model = model.insert(b, r);
+            assert_eq!(ev_real, ev_model, "seed {seed} prefill: eviction");
+        }
+        let mut per_bucket = vec![0usize; num_buckets];
+        for (b, _) in real.iter() {
+            per_bucket[b as usize] += 1;
+        }
+        if per_bucket.iter().any(|&n| n >= 16) {
+            coarse_cases += 1;
+        }
+
+        for step in 0..60 {
+            match rng.below(5) {
+                0 => {
+                    // evicting insert
+                    let r = make_rec(next_id, &mut rng);
+                    next_id += 1;
+                    let b = rng.below(num_buckets) as u32;
+                    let ev_real = real.insert(b, r.clone());
+                    let ev_model = model.insert(b, r);
+                    assert_eq!(
+                        ev_real, ev_model,
+                        "seed {seed} step {step}: eviction"
+                    );
+                }
+                1 => {
+                    // broadcast merge, half the time a duplicate id
+                    let dup = rng.below(2) == 0;
+                    let id = if dup { rng.below(next_id) } else { next_id };
+                    if !dup {
+                        next_id += 1;
+                    }
+                    let r = make_rec(id, &mut rng);
+                    let b = rng.below(num_buckets) as u32;
+                    let now = rng.f64() * 1e3;
+                    assert_eq!(
+                        real.merge_broadcast(b, &r, now),
+                        model.merge_broadcast(b, r, now),
+                        "seed {seed} step {step}: merge"
+                    );
+                }
+                _ => {
+                    // probe: random, or aimed at the near-duplicate
+                    // cluster where coarse bounds are tightest
+                    let probe = if rng.below(2) == 0 {
+                        let mut p = base.clone();
+                        for v in p.pd.iter_mut() {
+                            *v += (rng.f32() - 0.5) * 2e-6;
+                        }
+                        p
+                    } else {
+                        pre(&mut rng, dim)
+                    };
+                    let b = rng.below(num_buckets) as u32;
+                    let tt = rng.below(3) as u16;
+                    let got = real.nearest(b, tt, &probe);
+                    let want = model.nearest(b, tt, &probe);
+                    assert_nearest_bits(
+                        got,
+                        want,
+                        &format!("seed {seed} step {step}"),
+                    );
+                    if let Some((slot, _)) = got {
+                        hits += 1;
+                        let now = rng.f64() * 1e3;
+                        real.mark_reused(b, slot, now);
+                        model.mark_reused(b, slot, now);
+                    }
+                }
+            }
+            assert_tables_equal(seed, step, &real, &model);
+        }
+    }
+    // Non-vacuity: most cases must actually open the ≥16-slot coarse
+    // gate, and plenty of probes must land on real records.
+    assert!(
+        coarse_cases * 2 >= sweeps as usize,
+        "coarse gate opened in only {coarse_cases}/{sweeps} cases"
+    );
+    assert!(hits > sweeps * 10, "only {hits} probe hits: sweep is vacuous");
 }
 
 // ---------------------------------------------------------------------------
