@@ -67,6 +67,7 @@
 //! one `Option` check per mutation.
 
 use std::collections::{BTreeSet, HashMap};
+use std::sync::Arc;
 
 use crate::compute::Preprocessed;
 use crate::workload::SatId;
@@ -83,8 +84,10 @@ pub type RecordId = usize;
 pub struct Record {
     pub id: RecordId,
     /// Pre-processed input (`D_t` after Alg. 1 line 1) — both the feature
-    /// vector for NN search and the grayscale plane for SSIM.
-    pub pre: Preprocessed,
+    /// vector for NN search and the grayscale plane for SSIM. `Arc`-backed
+    /// so broadcast fan-out ([`Scrt::top_tau`]) and merge clones share one
+    /// payload allocation instead of duplicating `pd`/`gray` per copy.
+    pub pre: Arc<Preprocessed>,
     /// Task type `P_t`.
     pub task_type: u16,
     /// Cached result `R_t` (the class label).
@@ -127,10 +130,13 @@ struct Slot {
     reuse_count: u32,
     last_used: f64,
     origin: SatId,
-    /// Stored input with `pd` intentionally empty (it was moved into the
-    /// bucket's `feats`); `h`/`w`/`gray` remain — exactly what the SSIM
-    /// gate consumes via [`Scrt::candidate_pre`].
-    gray_pre: Preprocessed,
+    /// The record's full shared payload, exactly as inserted. The SSIM
+    /// gate reads `h`/`w`/`gray` through it ([`Scrt::candidate_pre`]),
+    /// and [`Scrt::top_tau`] hands the `Arc` out verbatim — zero payload
+    /// allocation on the collaboration fan-out path. `pd` is also mirrored
+    /// into the bucket's contiguous `feats` for the NN scan; that copy is
+    /// the price of keeping the broadcast path allocation-free.
+    payload: Arc<Preprocessed>,
 }
 
 /// One LSH bucket: SoA feature storage plus parallel slot metadata.
@@ -566,20 +572,20 @@ impl Scrt {
             last_used: s.last_used,
             origin: s.origin,
             pd: &b.feats[slot * dim..(slot + 1) * dim],
-            gray: &s.gray_pre.gray,
-            h: s.gray_pre.h,
-            w: s.gray_pre.w,
+            gray: &s.payload.gray,
+            h: s.payload.h,
+            w: s.payload.w,
         }
     }
 
     /// The stored input of a candidate, for the SSIM gate (Alg. 1 line 8).
     ///
-    /// The returned [`Preprocessed`] carries the grayscale plane and dims;
-    /// its `pd` is **empty** — the feature vector lives in the bucket's SoA
-    /// array (borrow it via [`Scrt::view`] when needed). Both compute
+    /// The returned [`Preprocessed`] is the record's full shared payload —
+    /// grayscale plane, dims, *and* the feature vector (which is also
+    /// mirrored in the bucket's SoA array for the NN scan). Both compute
     /// backends gate on the gray plane only, per eq. (12).
     pub fn candidate_pre(&self, bucket: u32, slot: usize) -> &Preprocessed {
-        &self.buckets[bucket as usize].slots[slot].gray_pre
+        &self.buckets[bucket as usize].slots[slot].payload
     }
 
     /// Register a successful reuse of a record (Alg. 1 line 11).
@@ -627,7 +633,7 @@ impl Scrt {
         }
         let Record {
             id,
-            mut pre,
+            pre,
             task_type,
             result,
             reuse_count,
@@ -636,12 +642,12 @@ impl Scrt {
         } = record;
         let b = &mut self.buckets[bucket as usize];
         let slot = b.slots.len();
-        // Quantize into the coarse mirror first (it reads `pre.pd`), then
-        // move the feature vector into the SoA array; `pre` keeps only
-        // the grayscale plane for the SSIM gate.
+        // Quantize into the coarse mirror and copy the feature vector into
+        // the SoA array; the shared payload itself is stored untouched so
+        // `top_tau` can re-broadcast it without allocating.
         let meta = quantize_row(&pre.pd, &mut b.qcodes);
         b.qmeta.push(meta);
-        b.feats.append(&mut pre.pd);
+        b.feats.extend_from_slice(&pre.pd);
         b.slots.push(Slot {
             id,
             task_type,
@@ -649,7 +655,7 @@ impl Scrt {
             reuse_count,
             last_used,
             origin,
-            gray_pre: pre,
+            payload: pre,
         });
         self.index.insert(id, (bucket, slot));
         self.order.insert(value_key(reuse_count, last_used, id));
@@ -669,10 +675,9 @@ impl Scrt {
     ///
     /// Takes the record by reference so the engines can pass the
     /// `Arc`-shared broadcast payload straight through: a duplicate
-    /// delivery costs only the identity probe — the pd + gray planes are
-    /// cloned *only* past the dedup, on actual insert. (Before this, every
-    /// duplicate delivery in a flood paid a full payload allocation just
-    /// to discard it.)
+    /// delivery costs only the identity probe, and even an actual insert
+    /// clones no payload — `Record::clone` bumps the shared `Arc`, and the
+    /// metadata fields (`N_t` reset, recency) are plain copies.
     pub fn merge_broadcast(&mut self, bucket: u32, record: &Record, now: f64) -> bool {
         if self.contains(record.id) {
             return false;
@@ -685,9 +690,11 @@ impl Scrt {
     }
 
     /// The `τ` records with the highest reuse counts (ties broken by
-    /// recency, then id), cloned for broadcast with their bucket ids.
-    /// Reads the τ maxima straight off the value index — O(τ + log n)
-    /// instead of collecting and fully sorting the table.
+    /// recency, then id), with their bucket ids. Reads the τ maxima
+    /// straight off the value index — O(τ + log n) instead of collecting
+    /// and fully sorting the table — and each returned [`Record`] shares
+    /// the slot's stored payload `Arc`: zero per-record `pd`/`gray`
+    /// allocation on the collaboration fan-out path.
     pub fn top_tau(&self, tau: usize) -> Vec<(u32, Record)> {
         self.order
             .iter()
@@ -788,23 +795,19 @@ impl Scrt {
         })
     }
 
-    /// Reassemble a full exchange-form [`Record`] (pd copied back out of
-    /// the SoA array) — broadcast payloads travel by value.
+    /// Reassemble a full exchange-form [`Record`]: metadata is copied from
+    /// the slot, the payload is the slot's stored `Arc` shared by refcount
+    /// bump — no `pd`/`gray` allocation.
     fn rebuild_record(&self, bucket: u32, slot: usize) -> Record {
-        let v = self.view(bucket, slot);
+        let s = &self.buckets[bucket as usize].slots[slot];
         Record {
-            id: v.id,
-            pre: Preprocessed {
-                h: v.h,
-                w: v.w,
-                pd: v.pd.to_vec(),
-                gray: v.gray.to_vec(),
-            },
-            task_type: v.task_type,
-            result: v.result,
-            reuse_count: v.reuse_count,
-            last_used: v.last_used,
-            origin: v.origin,
+            id: s.id,
+            pre: Arc::clone(&s.payload),
+            task_type: s.task_type,
+            result: s.result,
+            reuse_count: s.reuse_count,
+            last_used: s.last_used,
+            origin: s.origin,
         }
     }
 
@@ -882,7 +885,7 @@ mod tests {
     fn rec(id: RecordId, fill: f32, count: u32, t: f64) -> Record {
         Record {
             id,
-            pre: pre(fill),
+            pre: Arc::new(pre(fill)),
             task_type: 0,
             result: id as u32,
             reuse_count: count,
@@ -959,9 +962,34 @@ mod tests {
         let top = s.top_tau(1);
         let r = &top[0].1;
         assert_eq!(r.id, 7);
-        assert_eq!(r.pre.pd, vec![0.25; 12], "pd restored from SoA storage");
+        assert_eq!(r.pre.pd, vec![0.25; 12], "full pd travels with the record");
         assert_eq!(r.pre.gray, vec![0.25; 4]);
         assert_eq!((r.pre.h, r.pre.w), (2, 2));
+    }
+
+    #[test]
+    fn top_tau_shares_the_stored_payload_arc() {
+        // The fan-out path must not allocate per record: the Record handed
+        // out by top_tau points at the very payload the insert stored.
+        let mut s = Scrt::new(2, 4);
+        let payload = Arc::new(pre(0.25));
+        s.insert(
+            0,
+            Record {
+                id: 7,
+                pre: Arc::clone(&payload),
+                task_type: 0,
+                result: 7,
+                reuse_count: 3,
+                last_used: 1.0,
+                origin: 0,
+            },
+        );
+        let top = s.top_tau(1);
+        assert!(
+            Arc::ptr_eq(&top[0].1.pre, &payload),
+            "top_tau must share the slot payload, not copy it"
+        );
     }
 
     #[test]
@@ -1041,11 +1069,11 @@ mod tests {
     }
 
     #[test]
-    fn candidate_pre_keeps_gray_plane_only() {
+    fn candidate_pre_carries_the_full_payload() {
         let mut s = Scrt::new(1, 2);
         s.insert(0, rec(4, 0.5, 0, 0.0));
         let p = s.candidate_pre(0, 0);
-        assert!(p.pd.is_empty(), "pd lives in the SoA array");
+        assert_eq!(p.pd, vec![0.5; 12], "payload keeps pd (mirrored in SoA)");
         assert_eq!(p.gray, vec![0.5; 4]);
         assert_eq!((p.h, p.w), (2, 2));
     }
@@ -1070,7 +1098,7 @@ mod tests {
         let mut s = Scrt::new(2, 4);
         s.insert(0, rec(0, 0.1, 0, 0.0));
         let mut bad = rec(1, 0.2, 0, 1.0);
-        bad.pre.pd = vec![0.2; 9];
+        Arc::make_mut(&mut bad.pre).pd = vec![0.2; 9];
         s.insert(1, bad);
     }
 
@@ -1176,7 +1204,7 @@ mod tests {
     fn rand_rec(id: RecordId, rng: &mut Rng, dim: usize) -> Record {
         Record {
             id,
-            pre: rand_pre(rng, dim),
+            pre: Arc::new(rand_pre(rng, dim)),
             task_type: (id % 2) as u16,
             result: id as u32,
             reuse_count: 0,
@@ -1232,8 +1260,9 @@ mod tests {
         let mut s = Scrt::new(1, 64);
         for id in 0..32 {
             let mut r = rec(id, 0.5, 0, id as f64);
-            r.pre.pd = vec![0.25; dim];
-            r.pre.gray = vec![0.25; 4];
+            let p = Arc::make_mut(&mut r.pre);
+            p.pd = vec![0.25; dim];
+            p.gray = vec![0.25; 4];
             r.task_type = (id % 2) as u16;
             s.insert(0, r);
         }
@@ -1256,7 +1285,7 @@ mod tests {
         for id in 0..32usize {
             let mut r = rand_rec(id, &mut rng, dim);
             r.task_type = 0;
-            r.pre.pd = (0..dim)
+            Arc::make_mut(&mut r.pre).pd = (0..dim)
                 .map(|j| 0.5 + (id as f32) * 1e-7 + (j as f32) * 1e-3)
                 .collect();
             s.insert(0, r);
@@ -1278,13 +1307,14 @@ mod tests {
         }
         // constant record (scale = 0)
         let mut flat = rand_rec(20, &mut rng, dim);
-        flat.pre.pd = vec![0.125; dim];
+        Arc::make_mut(&mut flat.pre).pd = vec![0.125; dim];
         flat.task_type = 0;
         s.insert(0, flat);
         // non-finite record (err bound = ∞ → always re-ranked)
         let mut weird = rand_rec(21, &mut rng, dim);
-        weird.pre.pd[3] = f32::NAN;
-        weird.pre.pd[7] = f32::INFINITY;
+        let wp = Arc::make_mut(&mut weird.pre);
+        wp.pd[3] = f32::NAN;
+        wp.pd[7] = f32::INFINITY;
         weird.task_type = 0;
         s.insert(0, weird);
         let probes: Vec<Preprocessed> =

@@ -77,7 +77,7 @@ pub fn process_task(
             bucket,
             Record {
                 id: task_id,
-                pre: pre.clone(),
+                pre: std::sync::Arc::new(pre.clone()),
                 task_type,
                 result,
                 reuse_count: 0,
@@ -101,7 +101,7 @@ pub fn process_task(
         bucket,
         Record {
             id: task_id,
-            pre: pre.clone(),
+            pre: std::sync::Arc::new(pre.clone()),
             task_type,
             result,
             reuse_count: 0,

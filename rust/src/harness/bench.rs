@@ -19,6 +19,10 @@ use std::time::{Duration, Instant};
 use crate::error::Result;
 use crate::util::json::Json;
 
+/// Schema marker every `BENCH_*.json` artifact carries; consumers
+/// ([`crate::harness::hotpath`], the CI perf budget) key on it.
+pub const SCHEMA: &str = "ccrsat-bench-v1";
+
 /// Defeat the optimizer without `std::hint::black_box` availability issues.
 #[inline]
 pub fn black_box<T>(x: T) -> T {
@@ -140,7 +144,7 @@ impl Bencher {
     /// Serialize the whole group to the `ccrsat-bench-v1` schema.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
-            ("schema", Json::str("ccrsat-bench-v1")),
+            ("schema", Json::str(SCHEMA)),
             ("group", Json::str(self.group.clone())),
             ("warmup_ms", Json::num(self.warmup.as_secs_f64() * 1e3)),
             ("budget_ms", Json::num(self.budget.as_secs_f64() * 1e3)),

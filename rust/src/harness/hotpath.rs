@@ -14,6 +14,7 @@
 //! of [`crate::harness::experiments::EXTENDED_SCALES`].
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::compute::kernels::{gemm_nt, gemv};
@@ -21,9 +22,12 @@ use crate::compute::{native::ssim_global, ComputeBackend, NativeBackend, Preproc
 use crate::config::{SimConfig, TopologyMode};
 use crate::coordinator::scrt::{Record, Scrt};
 use crate::coordinator::Scenario;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::harness::bench::{black_box, format_ns, Bencher, Measurement};
 use crate::harness::experiments::{run_scale_suite_timed, EXTENDED_SCALES};
+use crate::satellite::SatelliteState;
+use crate::simulator::events::{EventKind, EventQueue};
+use crate::simulator::srs_index::SrsIndex;
 use crate::simulator::{prepare, ShardPartition, Simulation};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -81,7 +85,7 @@ fn fake_pre(rng: &mut Rng) -> Preprocessed {
 fn fake_record(id: usize, rng: &mut Rng) -> Record {
     Record {
         id,
-        pre: fake_pre(rng),
+        pre: Arc::new(fake_pre(rng)),
         task_type: 0,
         result: (id % 21) as u32,
         reuse_count: (id % 7) as u32,
@@ -193,6 +197,58 @@ pub fn run_suite(opts: &HotpathOpts) -> Result<Bencher> {
     b.bench("gemm_64x21x3072", || {
         gemm_nt(&xmat, 64, &wmat, 21, 3072, &mut gemm_out);
         black_box(gemm_out[0]);
+    });
+
+    // ---- event queue churn (bucketed calendar queue) --------------------
+    // Steady-state hold of 64k pending events: each iteration pops the
+    // global minimum and pushes a replacement a short random offset past
+    // it — the near-future calendar regime both engines' loops live in.
+    // The old binary heap paid an O(log 64k) sift on both sides of this
+    // pair; the calendar queue's budget prices the bucketed path.
+    let mut q = EventQueue::new();
+    for i in 0..65_536 {
+        q.push(rng.f64() * 1000.0, EventKind::Arrival(i));
+    }
+    b.bench("event_queue_churn_64k", || {
+        let ev = q.pop().expect("churn keeps the queue at 64k events");
+        q.push(ev.time + rng.f64() * 2.0, EventKind::Arrival(0));
+        black_box(ev.time);
+    });
+
+    // ---- collaboration fan-out (SoA snapshot + zero-copy top-τ) ---------
+    // The Alg. 2 per-trigger core at a 15×15 constellation: one
+    // contiguous SRS snapshot over 225 SoA lanes, the best-source scan,
+    // and the τ-record fan-out, which must hand out the stored payload
+    // `Arc`s — the old path re-cloned pd + gray (~16 KB) per record per
+    // trigger, and the budget is set so that path cannot return.
+    let mut fan_scrt = Scrt::new(4, 32);
+    for i in 0..31 {
+        fan_scrt.insert((i % 4) as u32, fake_record(i, &mut rng));
+    }
+    let mut fan_idx = SrsIndex::new(225);
+    for s in 0..225 {
+        let mut st = SatelliteState::new(s);
+        for k in 0..1 + s % 7 {
+            st.serve(k as f64, 0.5 + (s % 5) as f64 * 0.1);
+        }
+        st.tasks_reused = s % 3;
+        fan_idx.sync(s, &st);
+    }
+    let mut fan_snap: Vec<f64> = Vec::new();
+    b.bench("collab_fanout_15x15", || {
+        fan_idx.snapshot_into(0.5, 1000.0, &mut fan_snap);
+        let best = fan_snap
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(s, _)| s)
+            .unwrap();
+        let shared: Vec<(u32, std::sync::Arc<Record>)> = fan_scrt
+            .top_tau(11)
+            .into_iter()
+            .map(|(bkt, r)| (bkt, std::sync::Arc::new(r)))
+            .collect();
+        black_box((best, shared.len()));
     });
 
     // ---- workload generation + preprocessing ----------------------------
@@ -410,6 +466,28 @@ pub fn run_suite(opts: &HotpathOpts) -> Result<Bencher> {
                 .unwrap();
             black_box(r.total_tasks);
         });
+        // Collaboration-heavy 15×15: a near-unreachable SRS threshold and
+        // a short cooldown make most completions fire the Alg. 2 trigger,
+        // so this case prices the collaboration machinery itself — the
+        // all-satellite SRS snapshot, source selection and the τ-record
+        // broadcast fan-out — rather than the service path the plain
+        // `event_loop_15x15_625` case tracks.
+        let mut collab_cfg = SimConfig::paper_default(15);
+        collab_cfg.workload.total_tasks = 625;
+        collab_cfg.reuse.th_co = 0.95;
+        collab_cfg.reuse.collab_cooldown_s = 1.0;
+        let backend_c = NativeBackend::new(&collab_cfg);
+        let wl_c = build_workload(&collab_cfg);
+        let prep_c = prepare(&backend_c, &wl_c)?;
+        b.bench_once("event_loop_15x15_625_collab", || {
+            let r = Simulation::new(&collab_cfg, &backend_c, Scenario::Sccr)
+                .aggregate_only()
+                .with_workload(&wl_c)
+                .with_prepared(&prep_c)
+                .run()
+                .unwrap();
+            black_box(r.total_tasks);
+        });
     }
 
     Ok(b)
@@ -534,6 +612,42 @@ pub fn comparison_markdown_with_snapshot(
     Ok(out)
 }
 
+/// Validate a committed full-suite snapshot (the repo-root
+/// `BENCH_hotpath.json`) against the committed baseline: the snapshot
+/// must carry the `ccrsat-bench-v1` schema marker, well-formed
+/// measurement entries, and **every** case the baseline tracks (unlike a
+/// reduced-budget CI run, the committed snapshot is the full `--scale`
+/// artifact, so a missing case means it is stale). The CI lint job runs
+/// this via `ccrsat bench-report --validate`, so a malformed or stale
+/// snapshot fails fast instead of silently degrading the workflow-summary
+/// diff to `—` cells.
+pub fn validate_snapshot(snapshot: &Json, baseline: &Json) -> Result<()> {
+    let schema = snapshot.at(&["schema"])?.as_str()?;
+    if schema != crate::harness::bench::SCHEMA {
+        return Err(Error::simulation(format!(
+            "snapshot schema is '{schema}', expected '{}'",
+            crate::harness::bench::SCHEMA
+        )));
+    }
+    let snap_names: std::collections::BTreeSet<String> = measurement_entries(snapshot)?
+        .into_iter()
+        .map(|(n, _)| n)
+        .collect();
+    let missing: Vec<String> = measurement_entries(baseline)?
+        .into_iter()
+        .map(|(n, _)| n)
+        .filter(|n| !snap_names.contains(n))
+        .collect();
+    if !missing.is_empty() {
+        return Err(Error::simulation(format!(
+            "snapshot is stale: {} baseline case(s) missing ({})",
+            missing.len(),
+            missing.join(", ")
+        )));
+    }
+    Ok(())
+}
+
 /// Compare measurements against a `ccrsat-bench-v1` baseline document: a
 /// measurement regresses when `per_iter_ns > factor × baseline`.
 ///
@@ -594,6 +708,8 @@ mod tests {
             "lsh_bucket_batch64_3072",
             "gemv_21x3072",
             "gemm_64x21x3072",
+            "event_queue_churn_64k",
+            "collab_fanout_15x15",
             "render_64x64",
             "preprocess_64x64",
             "simulate_slcr_3x3_45",
@@ -643,6 +759,43 @@ mod tests {
     fn baseline_check_rejects_malformed_documents() {
         let bad = Json::parse(r#"{"schema": "x"}"#).unwrap();
         assert!(check_against_baseline(&[], &bad, 2.0).is_err());
+    }
+
+    #[test]
+    fn snapshot_validation_catches_stale_and_malformed_artifacts() {
+        let baseline = Json::parse(
+            r#"{"schema": "ccrsat-bench-v1", "measurements": [
+                {"name": "a", "per_iter_ns": 100.0},
+                {"name": "b", "per_iter_ns": 200.0}
+            ]}"#,
+        )
+        .unwrap();
+        let complete = Json::parse(
+            r#"{"schema": "ccrsat-bench-v1", "measurements": [
+                {"name": "b", "per_iter_ns": 190.0},
+                {"name": "a", "per_iter_ns": 90.0},
+                {"name": "extra", "per_iter_ns": 1.0}
+            ]}"#,
+        )
+        .unwrap();
+        validate_snapshot(&complete, &baseline).unwrap();
+
+        let wrong_schema = Json::parse(
+            r#"{"schema": "not-a-bench", "measurements": []}"#,
+        )
+        .unwrap();
+        let err = validate_snapshot(&wrong_schema, &baseline).unwrap_err();
+        assert!(err.to_string().contains("schema"), "{err}");
+
+        let stale = Json::parse(
+            r#"{"schema": "ccrsat-bench-v1", "measurements": [
+                {"name": "a", "per_iter_ns": 90.0}
+            ]}"#,
+        )
+        .unwrap();
+        let err = validate_snapshot(&stale, &baseline).unwrap_err();
+        assert!(err.to_string().contains("stale"), "{err}");
+        assert!(err.to_string().contains('b'), "{err}");
     }
 
     #[test]

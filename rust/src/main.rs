@@ -57,6 +57,10 @@ BENCH OPTIONS:
     --snapshot <FILE>    bench-report: also render a per-case Δ column vs a
                          committed snapshot of the artifact (e.g. the
                          repo-root BENCH_hotpath.json at HEAD)
+    --validate           bench-report: additionally require the measured
+                         artifact to carry the ccrsat-bench-v1 schema and
+                         every baseline case (CI lint smoke for the
+                         committed BENCH_hotpath.json snapshot)
 
 RUN SCALE OPTIONS:
     --streaming          prepare task inputs in on-demand chunks with a
@@ -126,7 +130,9 @@ impl Flags {
                 .ok_or_else(|| Error::config(format!("unexpected argument '{a}'")))?;
             match key {
                 "json" | "csv" | "help" | "quiet" | "scale" | "check"
-                | "streaming" | "aggregate-only" => bools.push(key.to_string()),
+                | "validate" | "streaming" | "aggregate-only" => {
+                    bools.push(key.to_string())
+                }
                 _ => {
                     let v = args.get(i + 1).ok_or_else(|| {
                         Error::config(format!("--{key} needs a value"))
@@ -462,10 +468,22 @@ fn cmd_reproduce(flags: &Flags) -> Result<()> {
         None
     };
 
+    // The suite is only built for the experiments that need it; reaching
+    // for it when the run above was skipped is a bug worth a named error,
+    // not a panic.
+    fn suite_for<'s, T>(suite: &'s Option<T>, what: &str) -> Result<&'s T> {
+        suite.as_ref().ok_or_else(|| {
+            Error::simulation(format!(
+                "reproduce '{what}' needs the scenario×scale suite, \
+                 but no suite run was scheduled for it"
+            ))
+        })
+    }
+
     match experiment {
-        "table2" => println!("{}", exp::table2_markdown(suite.as_ref().unwrap())),
-        "table3" => println!("{}", exp::table3_markdown(suite.as_ref().unwrap())),
-        "fig3" => println!("{}", exp::fig3_markdown(suite.as_ref().unwrap())),
+        "table2" => println!("{}", exp::table2_markdown(suite_for(&suite, "table2")?)),
+        "table3" => println!("{}", exp::table3_markdown(suite_for(&suite, "table3")?)),
+        "fig3" => println!("{}", exp::fig3_markdown(suite_for(&suite, "fig3")?)),
         "fig4" => {
             let rows =
                 exp::tau_sweep(&cfg, backend.as_ref(), scales[0], &exp::TAU_SWEEP)?;
@@ -477,7 +495,7 @@ fn cmd_reproduce(flags: &Flags) -> Result<()> {
             println!("{}", exp::fig5_markdown(&rows));
         }
         "all" => {
-            let suite = suite.as_ref().unwrap();
+            let suite = suite_for(&suite, "all")?;
             println!("{}", exp::table2_markdown(suite));
             println!("{}", exp::table3_markdown(suite));
             println!("{}", exp::fig3_markdown(suite));
@@ -595,6 +613,16 @@ fn cmd_bench_report(flags: &Flags) -> Result<()> {
             snapshot.as_ref()
         )?
     );
+    // `--validate` turns the report into a lint: the measured artifact
+    // (in CI, the committed repo-root snapshot) must carry the expected
+    // schema and every case the baseline tracks, so a malformed or stale
+    // snapshot fails the job instead of rendering `—` cells.
+    if flags.has("validate") {
+        hotpath::validate_snapshot(&measured, &baseline)?;
+        eprintln!(
+            "snapshot OK: {measured_path} covers every case in {baseline_path}"
+        );
+    }
     Ok(())
 }
 

@@ -30,7 +30,6 @@ use crate::config::SimConfig;
 use crate::coordinator::policy::CollabPolicy;
 use crate::coordinator::scrt::{Record, Scrt};
 use crate::coordinator::slcr::process_task;
-use crate::coordinator::srs::srs;
 use crate::coordinator::Scenario;
 use crate::error::{Error, Result};
 use crate::metrics::{MetricsAccum, RunCounters, RunReport, SatSummary, TaskLog};
@@ -39,6 +38,7 @@ use crate::satellite::{InFlight, SatNode};
 use crate::simulator::events::{EventKind, EventQueue};
 use crate::simulator::observer::Observer;
 use crate::simulator::source::PreparedSource;
+use crate::simulator::srs_index::SrsIndex;
 use crate::workload::{SatId, Workload};
 
 /// The priced outcome of serving one task — what an [`InFlight`] records.
@@ -175,6 +175,10 @@ pub struct Engine<'a> {
     /// Reusable all-satellite SRS buffer: one allocation for the whole
     /// run instead of one per collaboration request.
     srs_scratch: Vec<f64>,
+    /// SoA mirror of every satellite's SRS inputs, re-synced after each
+    /// `serve`/`take_completed` mutation; the Alg. 2 snapshot reads this
+    /// flat index instead of striding through the [`SatNode`]s.
+    srs_index: SrsIndex,
     /// Reusable `(bucket, Arc<Record>)` share buffer for the broadcast
     /// fan-out (the queued events hold their own `Arc` clones).
     share_scratch: Vec<(u32, Arc<Record>)>,
@@ -219,6 +223,7 @@ impl<'a> Engine<'a> {
                 .then(|| LinkState::new(cfg.workload.seed)),
             contacts,
             srs_scratch: Vec::new(),
+            srs_index: SrsIndex::new(sats),
             share_scratch: Vec::new(),
         }
     }
@@ -325,13 +330,11 @@ impl<'a> Engine<'a> {
         ))
     }
 
-    /// Current SRS (eq. 11) of one satellite.
+    /// Current SRS (eq. 11) of one satellite, read off the SoA index
+    /// (bit-identical to recomputing from the node state — same counters
+    /// through the same canonical pure functions).
     fn srs_of(&self, sat: SatId, now: f64) -> f64 {
-        srs(
-            self.cfg.reuse.beta,
-            self.nodes[sat].state.reuse_rate(),
-            self.nodes[sat].state.cpu_occupancy(now),
-        )
+        self.srs_index.srs_of(self.cfg.reuse.beta, sat, now)
     }
 
     /// A task arrives: enqueue and start service if the satellite is idle.
@@ -358,6 +361,7 @@ impl<'a> Engine<'a> {
         obs: &mut dyn Observer,
     ) -> Result<()> {
         let log = take_completed(&mut self.nodes[sat], self.wl, now)?;
+        self.srs_index.sync(sat, &self.nodes[sat].state);
         obs.on_task_complete(&log);
         self.metrics.record(log);
 
@@ -395,10 +399,11 @@ impl<'a> Engine<'a> {
         }
         self.nodes[sat].state.last_collab_request = now;
         self.nodes[sat].state.collab_requests += 1;
-        // All-satellite SRS snapshot into the reusable scratch buffer.
+        // All-satellite SRS snapshot: one contiguous pass over the SoA
+        // index into the reusable scratch buffer.
         let mut all_srs = std::mem::take(&mut self.srs_scratch);
-        all_srs.clear();
-        all_srs.extend((0..self.nodes.len()).map(|s| self.srs_of(s, now)));
+        self.srs_index
+            .snapshot_into(self.cfg.reuse.beta, now, &mut all_srs);
         obs.on_collab_request(now, sat, my_srs, &all_srs);
         let decision = policy.select_source(&self.topo, sat, &all_srs, th_co);
         self.srs_scratch = all_srs;
@@ -503,8 +508,8 @@ impl<'a> Engine<'a> {
 
     /// One broadcast record lands: merge it and apply receiver damping.
     /// The `Arc`-shared payload is threaded through by reference — a
-    /// dedup hit costs only the O(1) identity probe, the pd + gray planes
-    /// are cloned inside `merge_broadcast` only on actual insert.
+    /// dedup hit costs only the O(1) identity probe, and even an actual
+    /// insert merely bumps the record's shared payload `Arc`.
     fn on_broadcast_deliver(
         &mut self,
         dst: SatId,
@@ -555,6 +560,7 @@ impl<'a> Engine<'a> {
         };
 
         let (start, completion) = self.nodes[sat].state.serve(now, spec.service_s);
+        self.srs_index.sync(sat, &self.nodes[sat].state);
         self.nodes[sat].in_flight = Some(InFlight {
             task_idx: idx,
             start,

@@ -1,4 +1,14 @@
 //! Discrete-event queue on the virtual clock.
+//!
+//! Since PR 9 the queue is a two-level *calendar* (bucketed/ladder) queue:
+//! a ring of near-future time buckets absorbs the dense head of the
+//! schedule with O(1) amortized push/pop, and a far-future overflow heap
+//! holds everything past the calendar horizon. The pop order is the same
+//! total order the old `BinaryHeap` used — `(f64::total_cmp(time), seq)` —
+//! and because that order is *total* (unique `seq` tie-break), any correct
+//! priority queue pops the identical sequence: bucketing is an indexing
+//! strategy, never an ordering authority (the head-bucket/overflow
+//! comparison at pop time is what decides).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -78,11 +88,69 @@ impl PartialOrd for Event {
     }
 }
 
-/// Min-heap event queue.
-#[derive(Debug, Default)]
+/// Number of calendar buckets. A power of two so the logical-slot →
+/// physical-index map is a mask instead of a modulo.
+const NUM_BUCKETS: usize = 256;
+/// Bounds for the adaptive bucket width (seconds of virtual time).
+const MIN_WIDTH: f64 = 1e-9;
+const MAX_WIDTH: f64 = 1e9;
+/// Pop-gap samples required before the width re-adapts.
+const ADAPT_SAMPLES: u64 = 64;
+
+/// Two-level calendar/ladder event queue with total-order pop.
+///
+/// Level 1 is a ring of [`NUM_BUCKETS`] buckets covering the logical slots
+/// `[cur_slot, cur_slot + NUM_BUCKETS)`, where `slot(t) = ⌊t / width⌋` —
+/// division by a positive constant, `floor` and the saturating `as i64`
+/// cast are each monotone, so bucket order respects time order for every
+/// finite time. Level 2 is the old inverted-`Ord` `BinaryHeap`, holding
+/// events past the calendar horizon and every non-finite time (whose slot
+/// is meaningless). Pops compare the head-bucket minimum against the
+/// overflow minimum under `(total_cmp(time), seq)`, so the popped sequence
+/// is bit-identical to the plain heap's by construction; the head bucket
+/// is sorted lazily (descending, pop from the back) and pushes into a
+/// sorted head binary-insert to keep it sorted. The bucket width adapts to
+/// the observed mean pop gap, but only while the calendar is empty, so a
+/// width change can never re-map a live event.
+#[derive(Debug)]
 pub struct EventQueue {
-    heap: BinaryHeap<Event>,
+    /// Physical bucket ring; index = `slot & (NUM_BUCKETS - 1)`.
+    buckets: Vec<Vec<Event>>,
+    /// Events in `buckets` (the overflow heap tracks its own length).
+    in_buckets: usize,
+    /// First logical slot the calendar covers. Past events (slot <
+    /// `cur_slot`) clamp into the head bucket, which stays correct because
+    /// the pop comparison — not the bucketing — decides order.
+    cur_slot: i64,
+    /// Whether the head bucket is currently sorted descending by
+    /// `(time, seq)` (earliest at the back).
+    head_sorted: bool,
+    /// Virtual seconds per calendar bucket.
+    width: f64,
+    /// Far-future + non-finite-time events, earliest first (inverted Ord).
+    overflow: BinaryHeap<Event>,
     next_seq: u64,
+    /// Pop-gap statistics feeding the width adaptation.
+    last_pop_time: f64,
+    gap_sum: f64,
+    gap_count: u64,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        EventQueue {
+            buckets: vec![Vec::new(); NUM_BUCKETS],
+            in_buckets: 0,
+            cur_slot: 0,
+            head_sorted: false,
+            width: 1.0,
+            overflow: BinaryHeap::new(),
+            next_seq: 0,
+            last_pop_time: f64::NAN,
+            gap_sum: 0.0,
+            gap_count: 0,
+        }
+    }
 }
 
 impl EventQueue {
@@ -90,36 +158,236 @@ impl EventQueue {
         Self::default()
     }
 
+    /// The natural (pop) order: ascending time under the IEEE total order,
+    /// then schedule order. The inverse of `Event::cmp` (which is inverted
+    /// for the max-heap).
+    fn natural(a: &Event, b: &Event) -> Ordering {
+        a.time.total_cmp(&b.time).then(a.seq.cmp(&b.seq))
+    }
+
+    fn earlier(a: &Event, b: &Event) -> bool {
+        Self::natural(a, b) == Ordering::Less
+    }
+
+    fn phys(slot: i64) -> usize {
+        (slot & (NUM_BUCKETS as i64 - 1)) as usize
+    }
+
+    fn slot_of(&self, time: f64) -> i64 {
+        // Saturating f64 → i64 cast: monotone at the extremes, and any
+        // saturated slot lands past the horizon check into the overflow
+        // heap, where ordering is the heap's business.
+        (time / self.width).floor() as i64
+    }
+
+    fn horizon(&self) -> i64 {
+        self.cur_slot.saturating_add(NUM_BUCKETS as i64)
+    }
+
     pub fn push(&mut self, time: f64, kind: EventKind) {
         debug_assert!(time.is_finite(), "non-finite event time");
+        self.push_unchecked(time, kind);
+    }
+
+    /// `push` without the finiteness debug assertion. Non-finite times are
+    /// a scheduling bug, but the queue must order them deterministically
+    /// rather than panic a release run; tests drive this path directly.
+    fn push_unchecked(&mut self, time: f64, kind: EventKind) {
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.heap.push(Event { time, seq, kind });
+        let ev = Event { time, seq, kind };
+        if !time.is_finite() {
+            // A non-finite slot is meaningless: the overflow heap orders
+            // these through the same total order as everything else.
+            self.overflow.push(ev);
+            return;
+        }
+        if self.in_buckets == 0 {
+            self.re_anchor(time);
+        }
+        if self.slot_of(time) >= self.horizon() {
+            self.overflow.push(ev);
+            return;
+        }
+        self.bucket_insert(ev);
+    }
+
+    /// Place a finite-time event whose slot is below the horizon. Past
+    /// events (slot < `cur_slot`) clamp into the head bucket: they still
+    /// pop first there, because the head bucket is ordered internally and
+    /// every later bucket holds strictly later times.
+    fn bucket_insert(&mut self, ev: Event) {
+        let slot = self.slot_of(ev.time).max(self.cur_slot);
+        debug_assert!(slot < self.horizon());
+        let head = slot == self.cur_slot;
+        let bucket = &mut self.buckets[Self::phys(slot)];
+        if head && self.head_sorted {
+            // Keep the sorted head sorted: descending, so find the first
+            // strictly-earlier element and insert before it (equal times
+            // have lower seqs, which are earlier — FIFO preserved).
+            let at = bucket.partition_point(|e| Self::earlier(&ev, e));
+            bucket.insert(at, ev);
+        } else {
+            bucket.push(ev);
+        }
+        self.in_buckets += 1;
+    }
+
+    /// Reset the calendar origin. Only legal while the calendar is empty —
+    /// the one moment the bucket width may also adapt, since no live event
+    /// can be re-mapped by either change.
+    fn re_anchor(&mut self, time: f64) {
+        debug_assert_eq!(self.in_buckets, 0);
+        if self.gap_count >= ADAPT_SAMPLES {
+            let avg = self.gap_sum / self.gap_count as f64;
+            if avg.is_finite() && avg > 0.0 {
+                // Aim for a couple of events per bucket.
+                self.width = (avg * 2.0).clamp(MIN_WIDTH, MAX_WIDTH);
+            }
+            self.gap_sum = 0.0;
+            self.gap_count = 0;
+        }
+        self.cur_slot = self.slot_of(time);
+        self.head_sorted = false;
+    }
+
+    /// With the calendar empty, pull overflow events below the (re-anchored)
+    /// horizon back into buckets so they pop at calendar cost. Stops at the
+    /// first non-finite or beyond-horizon head; a non-finite overflow
+    /// minimum simply stays in the heap and wins pops by comparison.
+    fn migrate_overflow(&mut self) {
+        debug_assert_eq!(self.in_buckets, 0);
+        let anchor = match self.overflow.peek() {
+            Some(ev) if ev.time.is_finite() => ev.time,
+            _ => return,
+        };
+        self.re_anchor(anchor);
+        while let Some(ev) = self.overflow.peek() {
+            if !ev.time.is_finite() || self.slot_of(ev.time) >= self.horizon() {
+                break;
+            }
+            let ev = self.overflow.pop().expect("peeked overflow event");
+            self.bucket_insert(ev);
+        }
+    }
+
+    /// Advance `cur_slot` to the first non-empty bucket and sort it
+    /// (descending) if a push unsorted it. Requires `in_buckets > 0`, which
+    /// bounds the scan: every bucketed event lives in the current window.
+    fn advance_head(&mut self) {
+        debug_assert!(self.in_buckets > 0);
+        if self.buckets[Self::phys(self.cur_slot)].is_empty() {
+            for _ in 0..NUM_BUCKETS {
+                self.cur_slot = self.cur_slot.saturating_add(1);
+                self.head_sorted = false;
+                if !self.buckets[Self::phys(self.cur_slot)].is_empty() {
+                    break;
+                }
+            }
+        }
+        debug_assert!(!self.buckets[Self::phys(self.cur_slot)].is_empty());
+        if !self.head_sorted {
+            self.buckets[Self::phys(self.cur_slot)]
+                .sort_unstable_by(|a, b| Self::natural(b, a));
+            self.head_sorted = true;
+        }
     }
 
     pub fn pop(&mut self) -> Option<Event> {
-        self.heap.pop()
+        if self.in_buckets == 0 {
+            if self.overflow.is_empty() {
+                return None;
+            }
+            self.migrate_overflow();
+        }
+        if self.in_buckets > 0 {
+            self.advance_head();
+        }
+        // The authoritative comparison: head-bucket minimum (back of the
+        // sorted head) vs overflow minimum, under the same total order the
+        // plain heap used — bucketing never decides, only indexes.
+        let take_head = {
+            let head = if self.in_buckets > 0 {
+                self.buckets[Self::phys(self.cur_slot)].last()
+            } else {
+                None
+            };
+            match (head, self.overflow.peek()) {
+                (Some(h), Some(o)) => Self::earlier(h, o),
+                (Some(_), None) => true,
+                (None, _) => false,
+            }
+        };
+        let ev = if take_head {
+            self.in_buckets -= 1;
+            self.buckets[Self::phys(self.cur_slot)]
+                .pop()
+                .expect("non-empty head bucket")
+        } else {
+            self.overflow.pop()?
+        };
+        if ev.time.is_finite() {
+            if self.last_pop_time.is_finite() {
+                let gap = ev.time - self.last_pop_time;
+                if gap.is_finite() && gap > 0.0 {
+                    self.gap_sum += gap;
+                    self.gap_count += 1;
+                }
+            }
+            self.last_pop_time = ev.time;
+        }
+        Some(ev)
     }
 
     /// The earliest queued event without popping it — the sharded engine
     /// peeks to decide whether the head still falls inside the current
-    /// conservative window.
+    /// conservative window. Read-only: an unsorted head bucket is scanned
+    /// linearly instead of being sorted in place (on the pop-then-peek
+    /// pattern the engines use, the head is already sorted and this is the
+    /// O(1) back-of-bucket read).
     pub fn peek(&self) -> Option<&Event> {
-        self.heap.peek()
+        let head = self.calendar_min();
+        match (head, self.overflow.peek()) {
+            (Some(h), Some(o)) => Some(if Self::earlier(h, o) { h } else { o }),
+            (Some(h), None) => Some(h),
+            (None, o) => o,
+        }
+    }
+
+    /// The earliest calendar event, without mutating (`peek` support).
+    fn calendar_min(&self) -> Option<&Event> {
+        if self.in_buckets == 0 {
+            return None;
+        }
+        let mut slot = self.cur_slot;
+        for _ in 0..NUM_BUCKETS {
+            let bucket = &self.buckets[Self::phys(slot)];
+            if !bucket.is_empty() {
+                return if slot == self.cur_slot && self.head_sorted {
+                    bucket.last()
+                } else {
+                    bucket.iter().min_by(|a, b| Self::natural(a, b))
+                };
+            }
+            slot = slot.saturating_add(1);
+        }
+        debug_assert!(false, "in_buckets > 0 but no bucket holds an event");
+        None
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.in_buckets + self.overflow.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn pops_in_time_order() {
@@ -197,5 +465,129 @@ mod tests {
         let order: Vec<u64> =
             std::iter::from_fn(|| heap.pop().map(|e| e.seq)).collect();
         assert_eq!(order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn bucketed_queue_orders_non_finite_times_like_the_total_order() {
+        // The PR 4 total-order pins, driven through the bucketed queue
+        // itself (non-finite times route to the overflow heap, and the pop
+        // comparison must interleave them with finite calendar events at
+        // the IEEE total-order extremes).
+        let mut q = EventQueue::new();
+        q.push_unchecked(f64::NAN.copysign(1.0), EventKind::Completion(0));
+        q.push_unchecked(1.0, EventKind::Completion(1));
+        q.push_unchecked(f64::NEG_INFINITY, EventKind::Completion(2));
+        q.push_unchecked(f64::NAN.copysign(-1.0), EventKind::Completion(3));
+        q.push_unchecked(f64::INFINITY, EventKind::Completion(4));
+        assert_eq!(q.len(), 5);
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop().map(|e| e.seq)).collect();
+        // -NaN < -inf < 1.0 < +inf < +NaN.
+        assert_eq!(order, vec![3, 2, 1, 4, 0]);
+    }
+
+    #[test]
+    fn far_future_events_cross_the_horizon_and_return() {
+        // Times far past the calendar horizon park in the overflow heap
+        // and must migrate back (or pop directly) in exact order, across
+        // several re-anchors.
+        let mut q = EventQueue::new();
+        for i in 0..50u64 {
+            // Descending pushes spanning ~12 orders of magnitude.
+            q.push((50 - i) as f64 * 1e6 + 0.25, EventKind::Completion(i as usize));
+        }
+        for i in 0..50u64 {
+            q.push(i as f64 * 1e-3, EventKind::Completion(i as usize));
+        }
+        let mut last = f64::NEG_INFINITY;
+        let mut n = 0;
+        while let Some(ev) = q.pop() {
+            assert!(ev.time >= last, "pop went backwards: {} < {last}", ev.time);
+            last = ev.time;
+            n += 1;
+        }
+        assert_eq!(n, 100);
+    }
+
+    /// Satellite task (PR 9): the bucketed queue against a kept
+    /// `BinaryHeap<Event>` reference — pop-order identity across randomized
+    /// push/pop streams including same-time `seq` ties, far-future/past
+    /// mixes, and the non-finite total-order cases pinned in PR 4. The two
+    /// structures share the `seq` counter in lockstep, so identity is
+    /// checked down to the exact `(time bits, seq)` of every pop and peek.
+    #[test]
+    fn prop_bucketed_queue_matches_binary_heap_reference() {
+        let key = |e: &Event| (e.time.to_bits(), e.seq);
+        for seed in 0..40u64 {
+            let mut rng = Rng::new(seed ^ 0xE5E7);
+            let mut q = EventQueue::new();
+            let mut reference: BinaryHeap<Event> = BinaryHeap::new();
+            let mut next_seq = 0u64;
+            let mut clock = 0.0f64;
+            let mut last_pushed = 0.0f64;
+            for step in 0..600 {
+                if rng.below(5) < 3 {
+                    let time = match rng.below(12) {
+                        // far future: way past the calendar horizon
+                        0 => clock + 1.0 + rng.f64() * 1e9,
+                        // the past, relative to the pop clock
+                        1 => (clock - rng.f64() * 10.0).max(0.0),
+                        // exact duplicate of an earlier push: seq tie
+                        2 => last_pushed,
+                        // the PR 4 non-finite total-order cases
+                        3 => match rng.below(4) {
+                            0 => f64::NAN.copysign(1.0),
+                            1 => f64::NAN.copysign(-1.0),
+                            2 => f64::INFINITY,
+                            _ => f64::NEG_INFINITY,
+                        },
+                        // near future: lands in the calendar
+                        _ => clock + rng.f64() * 5.0,
+                    };
+                    q.push_unchecked(time, EventKind::Completion(step));
+                    reference.push(Event {
+                        time,
+                        seq: next_seq,
+                        kind: EventKind::Completion(step),
+                    });
+                    next_seq += 1;
+                    if time.is_finite() {
+                        last_pushed = time;
+                    }
+                } else {
+                    let got = q.pop();
+                    let want = reference.pop();
+                    assert_eq!(
+                        got.as_ref().map(key),
+                        want.as_ref().map(key),
+                        "seed {seed} step {step}: pop diverged"
+                    );
+                    if let Some(ev) = &got {
+                        if ev.time.is_finite() {
+                            clock = ev.time.max(clock);
+                        }
+                    }
+                }
+                assert_eq!(
+                    q.peek().map(key),
+                    reference.peek().map(key),
+                    "seed {seed} step {step}: peek diverged"
+                );
+                assert_eq!(q.len(), reference.len(), "seed {seed} step {step}");
+                assert_eq!(q.is_empty(), reference.is_empty());
+            }
+            // Drain: the tails must match too.
+            loop {
+                let got = q.pop();
+                let want = reference.pop();
+                assert_eq!(
+                    got.as_ref().map(key),
+                    want.as_ref().map(key),
+                    "seed {seed} drain: pop diverged"
+                );
+                if got.is_none() {
+                    break;
+                }
+            }
+        }
     }
 }

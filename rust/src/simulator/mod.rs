@@ -39,6 +39,7 @@ pub mod events;
 pub mod observer;
 mod sharded;
 pub mod source;
+pub mod srs_index;
 
 use std::sync::Arc;
 

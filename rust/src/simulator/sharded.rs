@@ -71,6 +71,7 @@ use crate::satellite::{InFlight, SatNode, SatelliteState};
 use crate::simulator::engine::{reuse_service, scratch_service, take_completed};
 use crate::simulator::events::{EventKind, EventQueue};
 use crate::simulator::source::PreparedSource;
+use crate::simulator::srs_index::SrsIndex;
 use crate::workload::{SatId, Workload};
 
 /// How global satellite ids map onto worker shards.
@@ -268,6 +269,10 @@ struct Shard {
     logs: Vec<TaskLog>,
     /// Per-local-satellite SRS checkpoints for the current window.
     srs_journal: Vec<Vec<SrsCheckpoint>>,
+    /// SoA mirror of the local satellites' live SRS inputs (keyed by
+    /// local id), re-synced at the same two mutation points the journal
+    /// checkpoints: serve and the reuse fold of `take_completed`.
+    srs: SrsIndex,
     /// The unresolved Alg. 2 gate this shard paused at, if any.
     pause: Option<PendingGate>,
     /// Shard-local fault counters, bumped by `LinkTimeout` handlers and
@@ -328,12 +333,9 @@ impl Shard {
         let (processed, reused, busy_s) =
             match journal.iter().rev().find(|c| c.time <= t) {
                 Some(c) => (c.tasks_processed, c.tasks_reused, c.busy_s),
-                None => {
-                    // No mutation this window: the live state is the state
-                    // at any instant inside it.
-                    let state = &self.nodes[local].state;
-                    (state.tasks_processed, state.tasks_reused, state.busy_time())
-                }
+                // No SRS-input mutation this window: the live SoA lane is
+                // the state at any instant inside it.
+                None => self.srs.lane(local),
             };
         srs(
             beta,
@@ -432,22 +434,32 @@ impl Shard {
         now: f64,
         quiet_until: f64,
     ) -> Result<bool> {
-        if ctx.journal {
+        // `take_completed` touches the SRS inputs only when the finishing
+        // task was served by reuse (the `tasks_reused` fold); probing the
+        // in-flight flag up front lets non-reuse completions — the common
+        // case — skip both the baseline and the post-mutation checkpoint,
+        // keeping the window journal proportional to *changes* in `rr`,
+        // not to event count. `srs_at` is unaffected: with no mutation
+        // there is nothing for a reader at this instant to rewind.
+        let reused = self.nodes[local]
+            .in_flight
+            .as_ref()
+            .is_some_and(|fl| fl.reused);
+        if ctx.journal && reused {
             self.checkpoint_baseline(local);
         }
         let log = take_completed(&mut self.nodes[local], ctx.wl, now)?;
-        if ctx.journal {
-            self.checkpoint(local, now);
+        if reused {
+            self.srs.sync(local, &self.nodes[local].state);
+            if ctx.journal {
+                self.checkpoint(local, now);
+            }
         }
         self.logs.push(log);
 
         if let Some(policy) = ctx.policy {
             let node = &self.nodes[local];
-            let my_srs = srs(
-                ctx.beta,
-                node.state.reuse_rate(),
-                node.state.cpu_occupancy(now),
-            );
+            let my_srs = self.srs.srs_of(ctx.beta, local, now);
             let cooled = now - node.state.last_collab_request >= ctx.cooldown_s;
             if my_srs >= ctx.th_co {
                 self.nodes[local].collab_armed = true; // recovered: re-arm
@@ -559,6 +571,7 @@ impl Shard {
             self.checkpoint_baseline(local);
         }
         let (start, completion) = self.nodes[local].state.serve(now, spec.service_s);
+        self.srs.sync(local, &self.nodes[local].state);
         if ctx.journal {
             self.checkpoint(local, now);
         }
@@ -667,6 +680,7 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
                 q: EventQueue::new(),
                 logs: Vec::new(),
                 srs_journal: vec![Vec::new(); locals],
+                srs: SrsIndex::new(locals),
                 pause: None,
                 retransmits: 0,
                 dropped_chunks: 0,

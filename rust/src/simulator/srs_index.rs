@@ -1,0 +1,166 @@
+//! Dense SoA mirror of the per-satellite SRS inputs (eq. 11).
+//!
+//! Every Alg. 2 trigger snapshots the SRS of *all* satellites and
+//! `select_source` scans that snapshot. Reading the inputs straight off
+//! the [`SatNode`]s strides through one heap-allocated node per satellite
+//! (server state, SCRT, queues — several cache lines apart); this index
+//! keeps the three SRS inputs — `tasks_reused`, `tasks_processed`,
+//! accumulated busy seconds — in flat parallel arrays so the per-trigger
+//! snapshot is one pass over contiguous memory.
+//!
+//! **Maintenance contract.** The counters only change at two points, and
+//! both engines re-sync the owning lane immediately after each:
+//!
+//! * `SatelliteState::serve` (service start) bumps `tasks_processed` and
+//!   `busy_time`;
+//! * [`take_completed`](crate::simulator::engine) bumps `tasks_reused`
+//!   (only when the completing task was served by reuse).
+//!
+//! Bit-identity is by construction: [`SrsIndex::srs_of`] feeds the
+//! mirrored counters through the *same* canonical pure functions
+//! ([`SatelliteState::reuse_rate_of`], [`SatelliteState::occupancy_of`])
+//! the node path used, so a synced lane yields bit-for-bit the value
+//! `srs(β, state.reuse_rate(), state.cpu_occupancy(now))` would. The
+//! sharded engine's `SrsCheckpoint` reconstruction already runs on those
+//! same statics, which is what lets one index serve both engines.
+//!
+//! [`SatNode`]: crate::satellite::SatNode
+
+use crate::coordinator::srs::srs;
+use crate::satellite::SatelliteState;
+use crate::workload::SatId;
+
+/// Flat SoA copy of every satellite's SRS inputs. See the module docs for
+/// the maintenance contract.
+#[derive(Clone, Debug)]
+pub struct SrsIndex {
+    reused: Vec<usize>,
+    processed: Vec<usize>,
+    busy_s: Vec<f64>,
+}
+
+impl SrsIndex {
+    /// An index for `sats` satellites, all lanes at their start-of-run
+    /// values (zero tasks, zero busy time).
+    pub fn new(sats: usize) -> Self {
+        SrsIndex {
+            reused: vec![0; sats],
+            processed: vec![0; sats],
+            busy_s: vec![0.0; sats],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.processed.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.processed.is_empty()
+    }
+
+    /// Re-sync one satellite's lane from its authoritative server state.
+    /// Call immediately after any mutation of the SRS inputs (`serve`,
+    /// the reuse fold in `take_completed`).
+    #[inline]
+    pub fn sync(&mut self, sat: SatId, state: &SatelliteState) {
+        self.reused[sat] = state.tasks_reused;
+        self.processed[sat] = state.tasks_processed;
+        self.busy_s[sat] = state.busy_time();
+    }
+
+    /// The raw mirrored lane `(tasks_processed, tasks_reused, busy_s)` —
+    /// the same triple the sharded engine's `SrsCheckpoint` journals.
+    #[inline]
+    pub fn lane(&self, sat: SatId) -> (usize, usize, f64) {
+        (self.processed[sat], self.reused[sat], self.busy_s[sat])
+    }
+
+    /// SRS of one satellite at `now`, bit-identical to
+    /// `srs(beta, state.reuse_rate(), state.cpu_occupancy(now))` on a
+    /// synced lane (identical inputs through identical pure functions).
+    #[inline]
+    pub fn srs_of(&self, beta: f64, sat: SatId, now: f64) -> f64 {
+        srs(
+            beta,
+            SatelliteState::reuse_rate_of(self.reused[sat], self.processed[sat]),
+            SatelliteState::occupancy_of(self.busy_s[sat], now),
+        )
+    }
+
+    /// The all-satellite SRS snapshot an Alg. 2 trigger consumes, written
+    /// into the caller's reusable buffer: one pass over three contiguous
+    /// arrays, no per-satellite pointer chasing.
+    pub fn snapshot_into(&self, beta: f64, now: f64, out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(self.len());
+        for s in 0..self.len() {
+            out.push(srs(
+                beta,
+                SatelliteState::reuse_rate_of(self.reused[s], self.processed[s]),
+                SatelliteState::occupancy_of(self.busy_s[s], now),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synced_lane_matches_state_methods_bit_for_bit() {
+        let beta = 0.6;
+        let mut state = SatelliteState::new(3);
+        let mut idx = SrsIndex::new(5);
+        for (arrival, service, reused) in
+            [(0.0, 2.0, false), (1.0, 0.5, true), (7.0, 1.25, true)]
+        {
+            state.serve(arrival, service);
+            idx.sync(3, &state);
+            if reused {
+                state.tasks_reused += 1;
+                idx.sync(3, &state);
+            }
+            for now in [0.0, 1.0, 3.75, 100.0] {
+                let want = srs(beta, state.reuse_rate(), state.cpu_occupancy(now));
+                let got = idx.srs_of(beta, 3, now);
+                assert_eq!(got.to_bits(), want.to_bits(), "now {now}");
+            }
+        }
+        assert_eq!(
+            idx.lane(3),
+            (state.tasks_processed, state.tasks_reused, state.busy_time())
+        );
+    }
+
+    #[test]
+    fn snapshot_matches_per_satellite_reads() {
+        let beta = 0.4;
+        let mut idx = SrsIndex::new(4);
+        let mut states: Vec<SatelliteState> =
+            (0..4).map(SatelliteState::new).collect();
+        for (s, state) in states.iter_mut().enumerate() {
+            state.serve(s as f64, 1.0 + s as f64);
+            state.tasks_reused = s % 2;
+            idx.sync(s, state);
+        }
+        let mut snap = Vec::new();
+        idx.snapshot_into(beta, 10.0, &mut snap);
+        assert_eq!(snap.len(), 4);
+        for s in 0..4 {
+            assert_eq!(snap[s].to_bits(), idx.srs_of(beta, s, 10.0).to_bits());
+            let want = srs(beta, states[s].reuse_rate(), states[s].cpu_occupancy(10.0));
+            assert_eq!(snap[s].to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn fresh_lanes_read_as_idle() {
+        let idx = SrsIndex::new(2);
+        // rr = 0, occupancy = 0 → SRS is the beta-weighted floor.
+        let v = idx.srs_of(0.5, 1, 5.0);
+        let want = srs(0.5, 0.0, 0.0);
+        assert_eq!(v.to_bits(), want.to_bits());
+        assert_eq!(idx.lane(0), (0, 0, 0.0));
+    }
+}

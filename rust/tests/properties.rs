@@ -33,7 +33,7 @@ fn pre(rng: &mut Rng, dim: usize) -> Preprocessed {
 fn record(id: usize, rng: &mut Rng) -> Record {
     Record {
         id,
-        pre: pre(rng, 8),
+        pre: std::sync::Arc::new(pre(rng, 8)),
         task_type: (rng.below(3)) as u16,
         result: rng.below(21) as u32,
         reuse_count: rng.below(10) as u32,
@@ -1048,7 +1048,7 @@ fn prop_quantized_nearest_matches_naive_reference_bitwise() {
             }
             Record {
                 id,
-                pre: p,
+                pre: std::sync::Arc::new(p),
                 task_type: rng.below(3) as u16,
                 result: rng.below(21) as u32,
                 reuse_count: rng.below(10) as u32,
