@@ -380,6 +380,155 @@ impl TopologyConfig {
     }
 }
 
+/// One scripted node outage: satellite `sat` is down (crashed) on the
+/// absolute virtual-time interval `[start, end)` and reboots at `end`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeOutageSpec {
+    /// The crashing satellite (id).
+    pub sat: usize,
+    /// Crash instant, virtual seconds (inclusive).
+    pub start: f64,
+    /// Reboot instant, virtual seconds (exclusive).
+    pub end: f64,
+}
+
+impl NodeOutageSpec {
+    /// Parse a scripted node-outage list from its string encoding:
+    /// `"sat@start..end"` entries separated by commas, e.g.
+    /// `"7@100..200,12@50..80"`. The string form is what keeps the
+    /// TOML-subset parser scalar-only (mirrors [`OutageSpec::parse_list`]).
+    /// An empty string is an empty list.
+    pub fn parse_list(s: &str) -> std::result::Result<Vec<NodeOutageSpec>, String> {
+        let mut out = Vec::new();
+        for entry in s.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let bad = || format!("node outage '{entry}' is not 'sat@start..end'");
+            let (sat, span) = entry.split_once('@').ok_or_else(bad)?;
+            let (start, end) = span.split_once("..").ok_or_else(bad)?;
+            out.push(NodeOutageSpec {
+                sat: sat.trim().parse().map_err(|_| bad())?,
+                start: start.trim().parse().map_err(|_| bad())?,
+                end: end.trim().parse().map_err(|_| bad())?,
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// Node-fault model: satellite crashes, reboots and the Alg. 2 failover
+/// machinery. All defaults describe immortal satellites — the engines
+/// take the legacy (byte-for-byte identical) paths when
+/// [`FaultConfig::node_faults_active`] is `false`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Mean time between random crashes per satellite, seconds.
+    /// `INFINITY` (the default) disables random failures; crash gaps are
+    /// drawn exponentially via the counter-hash so no fate depends on
+    /// event interleaving.
+    pub mtbf_s: f64,
+    /// Downtime before a crashed satellite reboots, seconds.
+    pub downtime_s: f64,
+    /// `true`: the SCRT survives a reboot (persistent storage). `false`
+    /// (default): a reboot is a cold start — the SCRT is wiped and the
+    /// satellite rebuilds reuse state from scratch.
+    pub scrt_persist: bool,
+    /// Scripted absolute node outages (crash at `start`, reboot at `end`).
+    pub node_outages: Vec<NodeOutageSpec>,
+    /// Seconds a requester waits for a collaboration response before
+    /// declaring the source dead and failing over.
+    pub collab_timeout_s: f64,
+    /// Failover re-selections after the first source attempt before the
+    /// requester degrades to local compute.
+    pub max_failover_retries: usize,
+    /// Multiplicative backoff applied to the response timeout per failed
+    /// failover attempt (>= 1).
+    pub failover_backoff: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            mtbf_s: f64::INFINITY,
+            downtime_s: 60.0,
+            scrt_persist: false,
+            node_outages: Vec::new(),
+            collab_timeout_s: 5.0,
+            max_failover_retries: 2,
+            failover_backoff: 2.0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// `true` when any knob can actually crash a satellite. The engines
+    /// take the legacy (byte-for-byte identical) paths when this is
+    /// `false`, so fault-free runs reproduce pre-fault-model reports
+    /// exactly — the same gate shape as [`CommConfig::faults_active`].
+    pub fn node_faults_active(&self) -> bool {
+        self.mtbf_s.is_finite() || !self.node_outages.is_empty()
+    }
+
+    /// Validate the node-fault knobs against grid scale `n`, returning a
+    /// message naming the offending value. Engine-side like
+    /// [`CommConfig::fault_check`] (wrapped as `Error::Simulation`): a
+    /// nonsensical fault model is a property of the *simulation* the
+    /// engines refuse to run.
+    pub fn node_fault_check(&self, n: usize) -> std::result::Result<(), String> {
+        let m = self.mtbf_s;
+        if m.is_nan() || m <= 0.0 {
+            return Err(format!(
+                "mtbf_s={m} out of range: the mean time between node \
+                 failures must be positive (INFINITY = no random crashes)"
+            ));
+        }
+        let d = self.downtime_s;
+        if !(d.is_finite() && d > 0.0) {
+            return Err(format!(
+                "downtime_s={d} out of range: the reboot downtime must be \
+                 finite and positive — a zero-length crash would be \
+                 unobservable"
+            ));
+        }
+        let t = self.collab_timeout_s;
+        if !(t.is_finite() && t > 0.0) {
+            return Err(format!(
+                "collab_timeout_s={t} out of range: the failover response \
+                 timeout must be finite and positive"
+            ));
+        }
+        if self.max_failover_retries > 16 {
+            return Err(format!(
+                "max_failover_retries={} out of range: more than 16 \
+                 failover re-selections per request is never useful",
+                self.max_failover_retries
+            ));
+        }
+        let bo = self.failover_backoff;
+        if !(bo.is_finite() && bo >= 1.0) {
+            return Err(format!(
+                "failover_backoff={bo} out of range: the failover backoff \
+                 factor must be finite and >= 1"
+            ));
+        }
+        let sats = n * n;
+        for o in &self.node_outages {
+            if o.sat >= sats {
+                return Err(format!(
+                    "node outage sat={} outside the {n}x{n} grid",
+                    o.sat
+                ));
+            }
+            if !(o.start.is_finite() && o.end.is_finite() && o.start < o.end) {
+                return Err(format!(
+                    "node outage {}@{}..{} needs a finite interval with \
+                     start < end",
+                    o.sat, o.start, o.end
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Analytic on-board computation cost model (eqs. 6–8).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ComputeConfig {
@@ -457,6 +606,9 @@ pub struct SimConfig {
     /// Time-varying topology model (contact plans); defaults to the
     /// paper's static always-on grid.
     pub topology: TopologyConfig,
+    /// Node-fault model (crashes, reboots, failover); defaults to
+    /// immortal satellites.
+    pub faults: FaultConfig,
     /// Binary weight α balancing communication vs computation cost (eq. 9).
     pub alpha: f64,
 }
@@ -528,6 +680,7 @@ impl SimConfig {
                 seed: 2025,
             },
             topology: TopologyConfig::default(),
+            faults: FaultConfig::default(),
             alpha: 1.0,
         }
     }
@@ -739,6 +892,22 @@ impl SimConfig {
             ("topology", "planes") => self.topology.planes = Some(v.as_usize()?),
             ("topology", "sats_per_plane") => {
                 self.topology.sats_per_plane = Some(v.as_usize()?)
+            }
+            ("faults", "mtbf_s") => self.faults.mtbf_s = v.as_f64()?,
+            ("faults", "downtime_s") => self.faults.downtime_s = v.as_f64()?,
+            ("faults", "scrt_persist") => self.faults.scrt_persist = v.as_bool()?,
+            ("faults", "node_outages") => {
+                self.faults.node_outages =
+                    NodeOutageSpec::parse_list(v.as_str()?).map_err(Error::Config)?
+            }
+            ("faults", "collab_timeout_s") => {
+                self.faults.collab_timeout_s = v.as_f64()?
+            }
+            ("faults", "max_failover_retries") => {
+                self.faults.max_failover_retries = v.as_usize()?
+            }
+            ("faults", "failover_backoff") => {
+                self.faults.failover_backoff = v.as_f64()?
             }
             ("sim", "alpha") => self.alpha = v.as_f64()?,
             _ => return unknown(),
@@ -1140,6 +1309,139 @@ sats_per_plane = 5
             .unwrap_err()
             .to_string();
         assert!(err.contains("torus"), "bad mode echoed: {err}");
+    }
+
+    #[test]
+    fn paper_default_has_immortal_satellites() {
+        // The node-fault model must be off by default: fault-free runs
+        // take the legacy paths and reproduce existing goldens.
+        let c = SimConfig::paper_default(5);
+        assert!(!c.faults.node_faults_active());
+        c.faults.node_fault_check(5).unwrap();
+    }
+
+    #[test]
+    fn node_faults_active_detects_each_knob() {
+        let base = FaultConfig::default();
+        let mut c = base.clone();
+        c.mtbf_s = 600.0;
+        assert!(c.node_faults_active());
+        let mut c = base.clone();
+        c.node_outages = vec![NodeOutageSpec {
+            sat: 3,
+            start: 10.0,
+            end: 40.0,
+        }];
+        assert!(c.node_faults_active());
+        // A negative MTBF must still route into the checker.
+        let mut c = base;
+        c.mtbf_s = -5.0;
+        assert!(c.node_faults_active());
+        assert!(c.node_fault_check(5).is_err());
+    }
+
+    #[test]
+    fn node_fault_check_names_each_bad_value() {
+        let base = FaultConfig::default();
+
+        let mut c = base.clone();
+        c.mtbf_s = 0.0;
+        let err = c.node_fault_check(5).unwrap_err();
+        assert!(err.contains("mtbf_s=0"), "value named: {err}");
+        c.mtbf_s = -3.0;
+        let err = c.node_fault_check(5).unwrap_err();
+        assert!(err.contains("mtbf_s=-3"), "value named: {err}");
+
+        let mut c = base.clone();
+        c.downtime_s = 0.0;
+        let err = c.node_fault_check(5).unwrap_err();
+        assert!(err.contains("downtime_s=0"), "value named: {err}");
+        c.downtime_s = f64::INFINITY;
+        let err = c.node_fault_check(5).unwrap_err();
+        assert!(err.contains("downtime_s=inf"), "value named: {err}");
+
+        let mut c = base.clone();
+        c.collab_timeout_s = -1.0;
+        let err = c.node_fault_check(5).unwrap_err();
+        assert!(err.contains("collab_timeout_s=-1"), "value named: {err}");
+
+        let mut c = base.clone();
+        c.max_failover_retries = 100;
+        let err = c.node_fault_check(5).unwrap_err();
+        assert!(err.contains("max_failover_retries=100"), "value named: {err}");
+
+        let mut c = base.clone();
+        c.failover_backoff = 0.5;
+        let err = c.node_fault_check(5).unwrap_err();
+        assert!(err.contains("failover_backoff=0.5"), "value named: {err}");
+
+        let mut c = base.clone();
+        c.node_outages = vec![NodeOutageSpec {
+            sat: 99,
+            start: 0.0,
+            end: 1.0,
+        }];
+        let err = c.node_fault_check(5).unwrap_err();
+        assert!(err.contains("sat=99"), "satellite named: {err}");
+
+        let mut c = base;
+        c.node_outages = vec![NodeOutageSpec {
+            sat: 0,
+            start: 5.0,
+            end: 5.0,
+        }];
+        let err = c.node_fault_check(5).unwrap_err();
+        assert!(err.contains("start < end"), "interval rule named: {err}");
+    }
+
+    #[test]
+    fn node_outage_list_parses_and_rejects_garbage() {
+        let specs = NodeOutageSpec::parse_list("7@100..200, 12@50..80").unwrap();
+        assert_eq!(
+            specs,
+            vec![
+                NodeOutageSpec {
+                    sat: 7,
+                    start: 100.0,
+                    end: 200.0
+                },
+                NodeOutageSpec {
+                    sat: 12,
+                    start: 50.0,
+                    end: 80.0
+                },
+            ]
+        );
+        assert!(NodeOutageSpec::parse_list("").unwrap().is_empty());
+        for bad in ["7", "7@100", "x@1..2", "7@a..b"] {
+            let err = NodeOutageSpec::parse_list(bad).unwrap_err();
+            assert!(err.contains(bad), "bad entry echoed: {err}");
+            assert!(err.contains("sat@start..end"), "format named: {err}");
+        }
+    }
+
+    #[test]
+    fn toml_accepts_node_fault_keys() {
+        let text = r#"
+[faults]
+mtbf_s = 900.0
+downtime_s = 45.0
+scrt_persist = true
+node_outages = "7@100..200"
+collab_timeout_s = 3.0
+max_failover_retries = 4
+failover_backoff = 1.5
+"#;
+        let c = SimConfig::from_toml_str(text).unwrap();
+        assert_eq!(c.faults.mtbf_s, 900.0);
+        assert_eq!(c.faults.downtime_s, 45.0);
+        assert!(c.faults.scrt_persist);
+        assert_eq!(c.faults.node_outages.len(), 1);
+        assert_eq!(c.faults.collab_timeout_s, 3.0);
+        assert_eq!(c.faults.max_failover_retries, 4);
+        assert_eq!(c.faults.failover_backoff, 1.5);
+        assert!(c.faults.node_faults_active());
+        c.faults.node_fault_check(c.network.n).unwrap();
     }
 
     #[test]

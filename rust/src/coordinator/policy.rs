@@ -17,7 +17,9 @@
 //!   whole-network flood, **no damping** — exactly the "redundant
 //!   cooperation" behaviour the paper blames for its poor performance.
 
-use crate::coordinator::sccr::{select_source, AreaPolicy, CollabDecision};
+use crate::coordinator::sccr::{
+    select_source, select_source_where, AreaPolicy, CollabDecision,
+};
 use crate::network::topology::GridTopology;
 use crate::workload::SatId;
 
@@ -74,6 +76,22 @@ pub trait CollabPolicy: Sync {
         th_co: f64,
     ) -> Option<CollabDecision> {
         select_source(topo, req, all_srs, th_co, self.area_policy())
+    }
+
+    /// Failover source selection: the node-fault model re-runs Alg. 2 with
+    /// crashed satellites filtered out (`alive` is the liveness predicate
+    /// at the retry instant). The unfiltered [`Self::select_source`] stays
+    /// the fault-free entry point so that path is byte-identical to the
+    /// pre-fault code.
+    fn select_source_alive(
+        &self,
+        topo: &GridTopology,
+        req: SatId,
+        all_srs: &[f64],
+        th_co: f64,
+        alive: &dyn Fn(SatId) -> bool,
+    ) -> Option<CollabDecision> {
+        select_source_where(topo, req, all_srs, th_co, self.area_policy(), alive)
     }
 }
 
@@ -168,6 +186,25 @@ mod tests {
         assert!(d.expanded);
         assert!(SCCR_INIT_POLICY
             .select_source(&topo, req, &srs, 0.5)
+            .is_none());
+    }
+
+    #[test]
+    fn liveness_filtered_selection_skips_dead_sources() {
+        let topo = GridTopology::new(5);
+        let mut srs = vec![0.2; 25];
+        let req = topo.sat_at(2, 2);
+        let best = topo.sat_at(1, 2);
+        let backup = topo.sat_at(2, 1);
+        srs[best] = 0.9;
+        srs[backup] = 0.7;
+        let d = SCCR_POLICY
+            .select_source_alive(&topo, req, &srs, 0.5, &|s| s != best)
+            .unwrap();
+        assert_eq!(d.source, backup, "failover must route around the crash");
+        // With everyone dead the cascade's final reselection terminates.
+        assert!(SCCR_POLICY
+            .select_source_alive(&topo, req, &srs, 0.5, &|_| false)
             .is_none());
     }
 }

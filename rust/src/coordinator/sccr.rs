@@ -44,12 +44,25 @@ pub enum AreaPolicy {
 }
 
 /// `find_SRS_max` over a candidate set, excluding the requester (a
-/// satellite cannot be its own data source).
-fn srs_max(area: &[SatId], req: SatId, srs: &[f64]) -> Option<SatId> {
+/// satellite cannot be its own data source) and anything `eligible`
+/// rejects (failover excludes satellites that are down).
+///
+/// Keyed through [`f64::total_cmp`], not `partial_cmp().unwrap()`: an SRS
+/// lane can go NaN under adversarial workloads (0/0 in eq. 11 feeds), and
+/// a comparator panic inside `max_by` would take the whole run down. Ties
+/// break toward the **highest id**, which is exactly what the old
+/// comparator produced on the (always id-ascending) area lists — `max_by`
+/// keeps the last of equal maxima — so fault-free goldens are unchanged.
+fn srs_max<F: Fn(SatId) -> bool>(
+    area: &[SatId],
+    req: SatId,
+    srs: &[f64],
+    eligible: &F,
+) -> Option<SatId> {
     area.iter()
         .copied()
-        .filter(|&s| s != req)
-        .max_by(|&a, &b| srs[a].partial_cmp(&srs[b]).unwrap())
+        .filter(|&s| s != req && eligible(s))
+        .max_by(|&a, &b| srs[a].total_cmp(&srs[b]).then(a.cmp(&b)))
 }
 
 /// Algorithm 2. `srs` holds the current SRS value of every satellite.
@@ -61,11 +74,26 @@ pub fn select_source(
     th_co: f64,
     policy: AreaPolicy,
 ) -> Option<CollabDecision> {
+    select_source_where(topo, req, srs, th_co, policy, |_| true)
+}
+
+/// Algorithm 2 restricted to an eligibility predicate — the failover path
+/// of the node-fault model re-runs the search with crashed satellites
+/// excluded. `select_source` is the `|_| true` specialisation, so the
+/// fault-free path runs byte-identical logic.
+pub fn select_source_where<F: Fn(SatId) -> bool>(
+    topo: &GridTopology,
+    req: SatId,
+    srs: &[f64],
+    th_co: f64,
+    policy: AreaPolicy,
+    eligible: F,
+) -> Option<CollabDecision> {
     debug_assert_eq!(srs.len(), topo.len());
 
     if policy == AreaPolicy::GlobalSrsPriority {
         let area: Vec<SatId> = topo.all().collect();
-        let source = srs_max(&area, req, srs)?;
+        let source = srs_max(&area, req, srs, &eligible)?;
         return Some(CollabDecision {
             source,
             area,
@@ -75,7 +103,7 @@ pub fn select_source(
 
     // lines 1–3: initial area + its SRS maximum
     let area = topo.area(req, 1);
-    if let Some(s_max) = srs_max(&area, req, srs) {
+    if let Some(s_max) = srs_max(&area, req, srs, &eligible) {
         if srs[s_max] > th_co {
             // lines 4–5
             return Some(CollabDecision {
@@ -92,7 +120,7 @@ pub fn select_source(
 
     // lines 6–10: expand once and retry
     let expanded = topo.expand_area(&area);
-    if let Some(s_max) = srs_max(&expanded, req, srs) {
+    if let Some(s_max) = srs_max(&expanded, req, srs, &eligible) {
         if srs[s_max] > th_co {
             return Some(CollabDecision {
                 source: s_max,
@@ -189,6 +217,71 @@ mod tests {
             select_source(&t, 0, &srs, 0.5, AreaPolicy::GlobalSrsPriority).unwrap();
         assert_eq!(d.source, far);
         assert_eq!(d.area.len(), 25, "broadcast area is the whole network");
+    }
+
+    #[test]
+    fn nan_srs_lanes_do_not_panic_and_never_yield_a_source() {
+        // The old comparator was `partial_cmp().unwrap()`: any NaN SRS
+        // lane (0/0 in an eq. 11 feed) panicked inside `max_by`. With
+        // total_cmp a positive NaN ranks above every finite value, wins
+        // the argmax, and then fails the strict `srs > th_co` gate — the
+        // collaboration terminates deterministically instead of crashing.
+        let t = topo();
+        let req = t.sat_at(2, 2);
+        let all_nan = uniform(25, f64::NAN);
+        assert_eq!(
+            select_source(&t, req, &all_nan, 0.5, AreaPolicy::WithExpansion),
+            None,
+            "all-NaN SRS must terminate, not panic"
+        );
+        let mut mixed = uniform(25, f64::NAN);
+        mixed[t.sat_at(1, 2)] = 0.9;
+        assert_eq!(
+            select_source(&t, req, &mixed, 0.5, AreaPolicy::WithExpansion),
+            None,
+            "a NaN argmax never clears the threshold"
+        );
+        // GlobalSrsPriority has no threshold, so there a NaN lane *can*
+        // be picked — but deterministically (highest NaN id), not a panic.
+        let g = select_source(&t, req, &all_nan, 0.5, AreaPolicy::GlobalSrsPriority)
+            .unwrap();
+        assert_eq!(g.source, 24);
+    }
+
+    #[test]
+    fn equal_srs_ties_break_toward_the_highest_id() {
+        let t = topo();
+        let srs = uniform(25, 0.9); // everyone equally attractive
+        let req = t.sat_at(2, 2);
+        let d = select_source(&t, req, &srs, 0.5, AreaPolicy::WithExpansion).unwrap();
+        // Initial area of (2,2) is rows 1..=3 × cols 1..=3; the old
+        // `max_by` kept the last of equal maxima on the id-ascending area
+        // list, i.e. sat_at(3,3). The explicit tie-break must match.
+        assert_eq!(d.source, t.sat_at(3, 3));
+        let g = select_source(&t, req, &srs, 0.5, AreaPolicy::GlobalSrsPriority)
+            .unwrap();
+        assert_eq!(g.source, 24, "global tie goes to the highest id");
+    }
+
+    #[test]
+    fn eligibility_filter_excludes_down_sources() {
+        let t = topo();
+        let mut srs = uniform(25, 0.2);
+        let req = t.sat_at(2, 2);
+        let best = t.sat_at(1, 2);
+        let second = t.sat_at(3, 2);
+        srs[best] = 0.9;
+        srs[second] = 0.8;
+        let d = select_source_where(&t, req, &srs, 0.5, AreaPolicy::WithExpansion, |s| {
+            s != best // `best` crashed
+        })
+        .unwrap();
+        assert_eq!(d.source, second, "failover picks the best live source");
+        // Everyone in reach down: the collaboration terminates.
+        assert_eq!(
+            select_source_where(&t, req, &srs, 0.5, AreaPolicy::WithExpansion, |_| false),
+            None
+        );
     }
 
     #[test]

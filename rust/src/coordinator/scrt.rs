@@ -289,6 +289,13 @@ pub enum ScrtOp {
         time: f64,
         evicted: Option<(u32, Record)>,
     },
+    /// `wipe` cleared the whole table (a crash cold start). Every victim
+    /// is retained in full so a reconstruction at a pre-crash time still
+    /// sees — and can broadcast — the pre-crash table.
+    Wiped {
+        victims: Vec<(u32, Record)>,
+        time: f64,
+    },
 }
 
 /// Ascending eviction/broadcast value key: `(N_t, recency, id)`.
@@ -759,6 +766,20 @@ impl Scrt {
                         stash.insert(victim.id, victim.clone());
                     }
                 }
+                ScrtOp::Wiped { victims, time } if *time > t => {
+                    // Undoing a post-`t` crash wipe restores the whole
+                    // pre-crash table. Victims that were themselves
+                    // inserted after `t` are removed again by their own
+                    // (older-than-the-wipe) `Inserted` undo later in this
+                    // reverse walk.
+                    for (bucket, victim) in victims {
+                        keys.insert(
+                            victim.id,
+                            (*bucket, victim.reuse_count, victim.last_used),
+                        );
+                        stash.insert(victim.id, victim.clone());
+                    }
+                }
                 _ => {}
             }
         }
@@ -785,6 +806,42 @@ impl Scrt {
                 (bucket, rec)
             })
             .collect()
+    }
+
+    /// Remove every record: a crash under the cold-start (wipe) SCRT
+    /// policy. Journaled as one [`ScrtOp::Wiped`] op retaining every
+    /// victim in full, so retroactive reads ([`Scrt::top_tau_at`]) at a
+    /// pre-crash time still reconstruct the pre-crash table — the sharded
+    /// engine depends on that when a source shard processes a crash
+    /// before a cross-shard Alg. 2 read resolves. Returns the number of
+    /// records wiped. The eviction counter is cumulative across reboots
+    /// (observability, not reuse state) and the feature stride survives —
+    /// the workload's record shape does not change across a crash.
+    pub fn wipe(&mut self, now: f64) -> usize {
+        let n = self.len();
+        if n == 0 {
+            return 0;
+        }
+        if self.journal.is_some() {
+            let mut victims = Vec::with_capacity(n);
+            for b in 0..self.buckets.len() {
+                for slot in 0..self.buckets[b].slots.len() {
+                    victims.push((b as u32, self.rebuild_record(b as u32, slot)));
+                }
+            }
+            if let Some(journal) = &mut self.journal {
+                journal.push(ScrtOp::Wiped { victims, time: now });
+            }
+        }
+        for b in &mut self.buckets {
+            b.slots.clear();
+            b.qmeta.clear();
+            b.feats.clear();
+            b.qcodes.clear();
+        }
+        self.index.clear();
+        self.order.clear();
+        n
     }
 
     /// All records (diagnostics / tests), as borrowed views.
@@ -1173,6 +1230,57 @@ mod tests {
         let evicted = s.insert(0, rec(2, 0.2, 4, 3.0));
         assert_eq!(evicted, Some(1));
         assert_eq!(top_ids(&s, 3, 1.0), vec![0]);
+    }
+
+    #[test]
+    fn wipe_clears_the_table_and_journals_the_victims() {
+        let mut s = Scrt::new(2, 10);
+        s.enable_journal();
+        s.insert(0, rec(0, 0.1, 5, 0.0));
+        s.insert(1, rec(1, 0.2, 2, 1.0));
+        s.mark_reused(0, 0, 2.0);
+        // Crash at t=4: the live table is empty, but the t=3 view must
+        // reconstruct the whole pre-crash table (the sharded engine reads
+        // source SCRTs retroactively across a crash wipe).
+        assert_eq!(s.wipe(4.0), 2);
+        assert!(s.is_empty());
+        assert!(s.top_tau(3).is_empty());
+        let at3 = s.top_tau_at(3, 3.0);
+        assert_eq!(
+            at3.iter().map(|(_, r)| r.id).collect::<Vec<_>>(),
+            vec![0, 1]
+        );
+        assert_eq!(at3[0].1.reuse_count, 6, "the t=2 bump survives");
+        assert_eq!(at3[0].1.pre.pd, vec![0.1f32; 12], "payload retained");
+        // A pre-crash read before the bump also undoes the bump through
+        // the restored victim.
+        let at1 = s.top_tau_at(3, 1.0);
+        assert_eq!(at1[0].1.reuse_count, 5);
+        // Post-wipe inserts rebuild a cold table; a post-wipe read sees
+        // only them.
+        s.insert(0, rec(7, 0.3, 0, 5.0));
+        assert_eq!(top_ids(&s, 3, 6.0), vec![7]);
+        // ... and the t=3 view still excludes the post-crash record.
+        assert_eq!(top_ids(&s, 3, 3.0), vec![0, 1]);
+        // Wiping an empty table is a no-op (no journal entry).
+        let mut empty = Scrt::new(2, 4);
+        empty.enable_journal();
+        assert_eq!(empty.wipe(1.0), 0);
+    }
+
+    #[test]
+    fn wipe_then_reinsert_reconstructs_both_epochs() {
+        // A record inserted, wiped, then re-merged: the pre-crash view
+        // sees the old copy, the post-crash view the new one.
+        let mut s = Scrt::new(1, 4);
+        s.enable_journal();
+        s.insert(0, rec(0, 0.1, 3, 0.0));
+        s.wipe(2.0);
+        s.insert(0, rec(0, 0.1, 0, 4.0));
+        assert_eq!(top_ids(&s, 2, 1.0), vec![0]);
+        assert_eq!(s.top_tau_at(2, 1.0)[0].1.reuse_count, 3, "old epoch");
+        assert_eq!(top_ids(&s, 2, 3.0), Vec::<RecordId>::new(), "mid-crash");
+        assert_eq!(s.top_tau_at(2, 5.0)[0].1.reuse_count, 0, "new epoch");
     }
 
     #[test]

@@ -369,6 +369,24 @@ pub fn run_suite(opts: &HotpathOpts) -> Result<Bencher> {
             .unwrap();
         black_box(r.total_tasks);
     });
+    // Same fixture under aggressive node faults (random crashes roughly
+    // once per satellite over the ~17 s horizon, 2 s reboots that wipe
+    // the SCRT, short collaboration timeouts): the cost of crash/reboot
+    // event churn, liveness-filtered source selection and the failover
+    // retry cascade on top of the ideal-link event loop above.
+    let mut crashy = mid.clone();
+    crashy.faults.mtbf_s = 15.0;
+    crashy.faults.downtime_s = 2.0;
+    crashy.faults.collab_timeout_s = 1.5;
+    b.bench("event_loop_5x5_125_crashy", || {
+        let r = Simulation::new(&crashy, &backend5, Scenario::Sccr)
+            .aggregate_only()
+            .with_workload(&wl5)
+            .with_prepared(&prep5)
+            .run()
+            .unwrap();
+        black_box(r.total_tasks);
+    });
     // Same fixture under a time-varying Walker contact plan on the
     // 4-shard conservative engine: every broadcast goes through the
     // contact-gated chunk planner and every window boundary re-queries
@@ -718,6 +736,7 @@ mod tests {
             "event_loop_5x5_125",
             "event_loop_5x5_125_t4",
             "event_loop_5x5_125_lossy",
+            "event_loop_5x5_125_crashy",
             "event_loop_walker_t4",
         ] {
             assert!(names.contains(&expect), "missing bench '{expect}'");

@@ -17,7 +17,9 @@ use std::collections::HashMap;
 use std::process::ExitCode;
 
 use ccrsat::compute::{ComputeBackend, NativeBackend, PjrtBackend};
-use ccrsat::config::{OutageSpec, SimConfig, TopologyMode, WalkerKind};
+use ccrsat::config::{
+    NodeOutageSpec, OutageSpec, SimConfig, TopologyMode, WalkerKind,
+};
 use ccrsat::coordinator::Scenario;
 use ccrsat::harness::experiments as exp;
 use ccrsat::harness::hotpath;
@@ -96,6 +98,19 @@ COMMON OPTIONS:
                          extra=<S>, gs=<K>, pass-period=<S>, pass-duty=<F>
     --outages <LIST>     scripted link outages 'a-b@start..end[,...]'
                          (satellite ids, seconds; composes with --topology)
+    --node-outages <L>   scripted satellite crashes 'sat@start..end[,...]'
+                         (crash at start, reboot at end; seconds)
+    --mtbf <S>           mean time between random crashes per satellite in
+                         seconds (default inf: no random crashes)
+    --downtime <S>       reboot delay after a random crash (default 60)
+    --scrt-persist       SCRT survives crashes (non-volatile storage);
+                         default: wiped — reboots are cold starts
+    --collab-timeout <S> response timeout before a requester declares its
+                         collaboration source dead (default 5)
+    --failover-retries <R>  source reselections before a requester degrades
+                         to local compute (default 2, max 16)
+    --failover-backoff <X>  multiplicative response-timeout backoff per
+                         failover attempt (default 2.0, min 1.0)
     --json               emit machine-readable JSON instead of text
     --csv                emit CSV (reproduce/sweep)
     --help               this help
@@ -130,9 +145,8 @@ impl Flags {
                 .ok_or_else(|| Error::config(format!("unexpected argument '{a}'")))?;
             match key {
                 "json" | "csv" | "help" | "quiet" | "scale" | "check"
-                | "validate" | "streaming" | "aggregate-only" => {
-                    bools.push(key.to_string())
-                }
+                | "validate" | "streaming" | "aggregate-only"
+                | "scrt-persist" => bools.push(key.to_string()),
                 _ => {
                     let v = args.get(i + 1).ok_or_else(|| {
                         Error::config(format!("--{key} needs a value"))
@@ -255,6 +269,32 @@ fn load_config(flags: &Flags) -> Result<SimConfig> {
     if let Some(list) = flags.get("outages") {
         cfg.topology.outages =
             OutageSpec::parse_list(list).map_err(Error::config)?;
+    }
+    // Node-fault overrides (see `FaultConfig`): any of these switches the
+    // engines onto the crash/reboot/failover path when it makes
+    // `node_faults_active()` true. Structural validation (ranges, ids)
+    // stays in `FaultConfig::node_fault_check`, which both engines run.
+    if let Some(mtbf) = flags.parse_f64("mtbf")? {
+        cfg.faults.mtbf_s = mtbf;
+    }
+    if let Some(downtime) = flags.parse_f64("downtime")? {
+        cfg.faults.downtime_s = downtime;
+    }
+    if flags.has("scrt-persist") {
+        cfg.faults.scrt_persist = true;
+    }
+    if let Some(timeout) = flags.parse_f64("collab-timeout")? {
+        cfg.faults.collab_timeout_s = timeout;
+    }
+    if let Some(retries) = flags.parse_usize("failover-retries")? {
+        cfg.faults.max_failover_retries = retries;
+    }
+    if let Some(backoff) = flags.parse_f64("failover-backoff")? {
+        cfg.faults.failover_backoff = backoff;
+    }
+    if let Some(list) = flags.get("node-outages") {
+        cfg.faults.node_outages =
+            NodeOutageSpec::parse_list(list).map_err(Error::config)?;
     }
     cfg.validate()?;
     Ok(cfg)

@@ -51,6 +51,21 @@ pub struct RunCounters {
     pub stranded_chunks: u64,
     /// Seconds chunks spent waiting for a contact window to open.
     pub contact_wait_s: f64,
+    /// Satellite crashes (scripted + MTBF), node-fault model.
+    pub crashes: u64,
+    /// Tasks lost to crashes: queued/in-flight work dropped by a crash
+    /// plus arrivals at a down satellite.
+    pub lost_tasks: u64,
+    /// Failover reselections: collaboration requests re-running Alg. 2
+    /// after a source-side response timeout.
+    pub failover_reselections: u64,
+    /// Collaboration requests that exhausted every failover retry and
+    /// degraded to local compute.
+    pub timeout_fallbacks: u64,
+    /// Reboots that came back with an empty SCRT (`scrt_persist = false`).
+    pub cold_scrt_rebuilds: u64,
+    /// Chunks a crashed *sender* never transmitted (no wire contact).
+    pub crash_dropped_chunks: u64,
 }
 
 /// Per-satellite summary at the end of a run.
@@ -147,6 +162,18 @@ pub struct RunReport {
     /// Fraction of link engagement spent transmitting rather than waiting
     /// for a contact: `airtime / (airtime + wait)`, 1.0 when nothing waited.
     pub contact_utilization: f64,
+    /// Satellite crashes (0 for the immortal legacy constellation).
+    pub crashes: u64,
+    /// Tasks lost to crashes (dropped queues/in-flight + dead arrivals).
+    pub lost_tasks: u64,
+    /// Failover reselections after a collaboration response timeout.
+    pub failover_reselections: u64,
+    /// Collaborations that exhausted failover retries (local fallback).
+    pub timeout_fallbacks: u64,
+    /// Reboots with a wiped SCRT (cold starts).
+    pub cold_scrt_rebuilds: u64,
+    /// Chunks a crashed sender never put on the wire.
+    pub crash_dropped_chunks: u64,
     pub mean_latency: f64,
     pub p95_latency: f64,
     pub per_satellite: Vec<SatSummary>,
@@ -206,6 +233,18 @@ impl RunReport {
             ("stranded_chunks", Json::num(self.stranded_chunks as f64)),
             ("contact_wait_s", Json::num(self.contact_wait_s)),
             ("contact_utilization", Json::num(self.contact_utilization)),
+            ("crashes", Json::num(self.crashes as f64)),
+            ("lost_tasks", Json::num(self.lost_tasks as f64)),
+            (
+                "failover_reselections",
+                Json::num(self.failover_reselections as f64),
+            ),
+            ("timeout_fallbacks", Json::num(self.timeout_fallbacks as f64)),
+            ("cold_scrt_rebuilds", Json::num(self.cold_scrt_rebuilds as f64)),
+            (
+                "crash_dropped_chunks",
+                Json::num(self.crash_dropped_chunks as f64),
+            ),
             ("mean_latency_s", Json::num(self.mean_latency)),
             ("p95_latency_s", Json::num(self.p95_latency)),
             ("wallclock_s", Json::num(self.wallclock_s)),
@@ -360,6 +399,12 @@ impl MetricsAccum {
                 counters.comm_seconds
                     / (counters.comm_seconds + counters.contact_wait_s)
             },
+            crashes: counters.crashes,
+            lost_tasks: counters.lost_tasks,
+            failover_reselections: counters.failover_reselections,
+            timeout_fallbacks: counters.timeout_fallbacks,
+            cold_scrt_rebuilds: counters.cold_scrt_rebuilds,
+            crash_dropped_chunks: counters.crash_dropped_chunks,
             mean_latency: stats::mean(&self.latencies),
             p95_latency: stats::percentile(&self.latencies, 95.0),
             per_satellite,
@@ -656,6 +701,45 @@ mod tests {
         assert!(json.contains("\"stranded_chunks\""));
         assert!(json.contains("\"contact_wait_s\""));
         assert!(json.contains("\"contact_utilization\""));
+    }
+
+    #[test]
+    fn node_fault_counters_flow_into_the_report_and_json() {
+        let counters = RunCounters {
+            crashes: 3,
+            lost_tasks: 11,
+            failover_reselections: 2,
+            timeout_fallbacks: 1,
+            cold_scrt_rebuilds: 3,
+            crash_dropped_chunks: 8,
+            ..RunCounters::default()
+        };
+        let r = aggregate(
+            Scenario::Sccr,
+            5,
+            vec![mk_task(0, false, true, 1.0)],
+            vec![mk_sat(1, 0.5)],
+            1.0,
+            &counters,
+            0.0,
+        );
+        assert_eq!(r.crashes, 3);
+        assert_eq!(r.lost_tasks, 11);
+        assert_eq!(r.failover_reselections, 2);
+        assert_eq!(r.timeout_fallbacks, 1);
+        assert_eq!(r.cold_scrt_rebuilds, 3);
+        assert_eq!(r.crash_dropped_chunks, 8);
+        let json = r.to_json().to_string_pretty();
+        for key in [
+            "\"crashes\"",
+            "\"lost_tasks\"",
+            "\"failover_reselections\"",
+            "\"timeout_fallbacks\"",
+            "\"cold_scrt_rebuilds\"",
+            "\"crash_dropped_chunks\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in JSON");
+        }
     }
 
     #[test]

@@ -115,6 +115,12 @@ pub struct LossyPlan {
     /// Unlike drops these never touch the wire: no bytes, no airtime, no
     /// timeout event.
     pub stranded_chunks: u64,
+    /// Chunks abandoned because the broadcasting satellite was down at
+    /// their transmit start (node-fault model): a dead sender puts nothing
+    /// on the wire and detects nothing, so — like stranding — these
+    /// schedule neither a delivery nor a timeout. Always 0 on the
+    /// fault-free path.
+    pub crash_dropped_chunks: u64,
     /// When the network falls quiet: the latest scheduled delivery or
     /// timeout (`now` if every chunk deduped away).
     pub quiet_until: f64,
@@ -453,6 +459,56 @@ impl CommModel {
         record_ids: &[usize],
         now: f64,
     ) -> LossyPlan {
+        self.plan_lossy_broadcast_with_faults(
+            topo,
+            contacts,
+            &crate::network::faults::NodeFaultPlan::none(topo.len()),
+            false,
+            link,
+            src,
+            area,
+            record_ids,
+            now,
+        )
+    }
+
+    /// [`Self::plan_lossy_broadcast`] under the node-fault model. Three
+    /// additional rules, all pure queries of the pre-resolved `faults`
+    /// plan (so the schedule stays engine-independent):
+    ///
+    /// * a chunk whose transmit would start while the **source** is down
+    ///   is abandoned without touching the wire (`crash_dropped_chunks`) —
+    ///   a dead sender can neither transmit nor detect, so like stranding
+    ///   it schedules no event and the lookahead bound holds trivially;
+    /// * a chunk arriving while its **destination** is down is a failed
+    ///   attempt exactly like a wire loss: the bytes and airtime are paid,
+    ///   the sender times out at the arrival instant and retries with
+    ///   backoff (the retry may outlive the downtime and succeed);
+    /// * under the cold-start storage policy (`wipe_possession`, i.e.
+    ///   `scrt_persist = false`) a destination crash **invalidates** the
+    ///   possession stamps of chunks delivered before it — the stamp is
+    ///   mutated back to "never held" so the next broadcast re-sends them.
+    ///   The mutation matters: a query-side exclusion would leave the old
+    ///   arrival stamp in place and re-send on every subsequent broadcast
+    ///   forever. With `scrt_persist = true` the buffers live in
+    ///   non-volatile storage and possession survives reboots untouched.
+    ///
+    /// With an empty fault plan every added predicate is `false` and the
+    /// computation is bit-for-bit the plain lossy path — which is how the
+    /// wrapper above keeps the fault-free goldens frozen.
+    #[allow(clippy::too_many_arguments)]
+    pub fn plan_lossy_broadcast_with_faults(
+        &self,
+        topo: &GridTopology,
+        contacts: &ContactPlan,
+        faults: &crate::network::faults::NodeFaultPlan,
+        wipe_possession: bool,
+        link: &mut LinkState,
+        src: SatId,
+        area: &[SatId],
+        record_ids: &[usize],
+        now: f64,
+    ) -> LossyPlan {
         let chunk = self.chunk_bytes_effective();
         let chunk_bits = chunk * 8.0;
         let t_intra = chunk_bits / self.eff_intra_rate_bps();
@@ -506,6 +562,7 @@ impl CommModel {
             handovers: 0,
             contact_wait_s: 0.0,
             stranded_chunks: 0,
+            crash_dropped_chunks: 0,
             quiet_until: now,
         };
         for &(dst, depth, t_edge, parent) in &members {
@@ -519,6 +576,16 @@ impl CommModel {
                 }
                 for c in 0..total_chunks {
                     let j = slot * total_chunks + c;
+                    if wipe_possession
+                        && held[c] <= now
+                        && faults.crashes_within(dst, held[c], now)
+                    {
+                        // The destination crashed after this chunk landed
+                        // and its storage wipes across reboots: the
+                        // possession stamp is stale. Reset it so the
+                        // chunk is re-sent below.
+                        held[c] = f64::INFINITY;
+                    }
                     if held[c] <= now {
                         // Content-id dedup: the destination already holds
                         // this chunk from an earlier broadcast.
@@ -546,6 +613,13 @@ impl CommModel {
                         } else {
                             queued
                         };
+                        if faults.is_down(src, start) {
+                            // Dead sender: the chunk never touches the
+                            // wire and nothing can detect its absence, so
+                            // no event is scheduled (see the method docs).
+                            plan.crash_dropped_chunks += 1;
+                            break;
+                        }
                         if start > queued {
                             plan.handovers += 1;
                             plan.contact_wait_s += start - queued;
@@ -562,7 +636,7 @@ impl CommModel {
                             j as u64,
                             attempt as u64,
                         );
-                        if u < fail_p {
+                        if u < fail_p || faults.is_down(dst, arr) {
                             let dropped = attempt == self.cfg.max_retries;
                             plan.timeouts.push(ChunkTimeout {
                                 time: arr,
@@ -1089,6 +1163,167 @@ mod tests {
             assert_eq!(d.time, c.time);
             assert_eq!(d.dst, c.dst);
         }
+    }
+
+    /// A scripted-only fault plan (mtbf off) over a 5×5 grid.
+    fn fault_plan(outages: &[(usize, f64, f64)]) -> crate::network::NodeFaultPlan {
+        let fc = crate::config::FaultConfig {
+            node_outages: outages
+                .iter()
+                .map(|&(sat, start, end)| crate::config::NodeOutageSpec {
+                    sat,
+                    start,
+                    end,
+                })
+                .collect(),
+            ..crate::config::FaultConfig::default()
+        };
+        crate::network::NodeFaultPlan::new(&fc, 0, 25, f64::INFINITY)
+    }
+
+    #[test]
+    fn empty_fault_plan_reproduces_the_plain_lossy_schedule() {
+        // The wrapper's bit-identity claim: with no faults every added
+        // predicate is false, even under the wipe policy.
+        let (topo, m) = lossy_model(0.3, 3);
+        let cp = ContactPlan::always_on(5);
+        let src = topo.sat_at(1, 2);
+        let area = topo.area(src, 2);
+        let mut a = LinkState::new(77);
+        let mut b = a.clone();
+        let pa = m.plan_lossy_broadcast(&topo, &cp, &mut a, src, &area, &[0, 1], 1.5);
+        let pb = m.plan_lossy_broadcast_with_faults(
+            &topo,
+            &cp,
+            &fault_plan(&[]),
+            true,
+            &mut b,
+            src,
+            &area,
+            &[0, 1],
+            1.5,
+        );
+        assert_eq!(format!("{pa:?}"), format!("{pb:?}"));
+        assert_eq!(pb.crash_dropped_chunks, 0);
+    }
+
+    #[test]
+    fn dead_source_abandons_untransmitted_chunks() {
+        let (topo, m) = lossy_model(0.0, 3);
+        let cp = ContactPlan::always_on(5);
+        let src = topo.sat_at(2, 2);
+        let area = topo.area(src, 1);
+        let per_rec = m.chunks_per_record();
+        let receivers = area.len() - 1;
+        let total = (receivers * 2 * per_rec) as u64;
+
+        // Source down for the whole transfer: nothing touches the wire.
+        let faults = fault_plan(&[(src, 0.0, 1e9)]);
+        let mut link = LinkState::new(21);
+        let plan = m.plan_lossy_broadcast_with_faults(
+            &topo, &cp, &faults, false, &mut link, src, &area, &[0, 1], 0.0,
+        );
+        assert_eq!(plan.crash_dropped_chunks, total);
+        assert!(plan.deliveries.is_empty() && plan.timeouts.is_empty());
+        assert_eq!(plan.bytes, 0.0);
+        assert_eq!(plan.quiet_until, 0.0, "a silent transfer leaves no quiet period");
+
+        // Crash mid-transfer: the early chunks go out, the tail is
+        // abandoned, and (loss 0, fresh link) every chunk is exactly one
+        // of delivered / crash-dropped.
+        let t_intra = m.hop_seconds(m.chunk_bytes_effective());
+        let faults = fault_plan(&[(src, 5.0 * t_intra, 1e9)]);
+        let mut link = LinkState::new(21);
+        let plan = m.plan_lossy_broadcast_with_faults(
+            &topo, &cp, &faults, false, &mut link, src, &area, &[0, 1], 0.0,
+        );
+        assert!(plan.crash_dropped_chunks > 0, "the tail must be abandoned");
+        assert!(!plan.deliveries.is_empty(), "the head must have been sent");
+        assert_eq!(plan.deliveries.len() as u64 + plan.crash_dropped_chunks, total);
+    }
+
+    #[test]
+    fn dead_destination_arrivals_time_out_and_retry_past_the_reboot() {
+        let (topo, m) = lossy_model(0.0, 3);
+        let cp = ContactPlan::always_on(5);
+        let src = topo.sat_at(2, 2);
+        let dead = topo.sat_at(2, 3); // intra-plane last hop
+        let t_intra = m.hop_seconds(m.chunk_bytes_effective());
+        let reboot = 3.0 * t_intra;
+        let faults = fault_plan(&[(dead, 0.0, reboot)]);
+        let mut link = LinkState::new(33);
+        let area = topo.area(src, 1);
+        let plan = m.plan_lossy_broadcast_with_faults(
+            &topo, &cp, &faults, false, &mut link, src, &area, &[0], 0.0,
+        );
+        assert!(plan.retransmits > 0, "arrivals during the downtime must fail");
+        assert_eq!(plan.dropped_chunks, 0, "retries outlive a 3-slot downtime");
+        let per_rec = m.chunks_per_record();
+        assert_eq!(plan.deliveries.len(), (area.len() - 1) * per_rec);
+        for d in plan.deliveries.iter().filter(|d| d.dst == dead) {
+            assert!(d.time >= reboot, "delivered into the downtime: {}", d.time);
+        }
+        assert_eq!(
+            plan.timeouts.len() as u64,
+            plan.retransmits + plan.dropped_chunks
+        );
+    }
+
+    #[test]
+    fn wipe_policy_invalidates_possession_across_a_destination_crash() {
+        let (topo, m) = lossy_model(0.0, 3);
+        let cp = ContactPlan::always_on(5);
+        let src = topo.sat_at(2, 2);
+        let victim = topo.sat_at(2, 3);
+        let area = topo.area(src, 1);
+        let per_rec = m.chunks_per_record();
+        let mut link = LinkState::new(55);
+        let first = m.plan_lossy_broadcast_with_faults(
+            &topo,
+            &cp,
+            &fault_plan(&[]),
+            true,
+            &mut link,
+            src,
+            &area,
+            &[0],
+            0.0,
+        );
+        assert_eq!(first.deliveries.len(), (area.len() - 1) * per_rec);
+        let crash = first.quiet_until + 1.0;
+        let faults = fault_plan(&[(victim, crash, crash + 5.0)]);
+        let later = crash + 10.0;
+
+        // persist policy: possession lives in non-volatile storage — the
+        // whole re-broadcast dedups away, crash or no crash.
+        let mut persist = link.clone();
+        let p = m.plan_lossy_broadcast_with_faults(
+            &topo, &cp, &faults, false, &mut persist, src, &area, &[0], later,
+        );
+        assert!(p.deliveries.is_empty());
+
+        // wipe policy: exactly the victim's chunks are re-sent...
+        let mut wipe = link.clone();
+        let w = m.plan_lossy_broadcast_with_faults(
+            &topo, &cp, &faults, true, &mut wipe, src, &area, &[0], later,
+        );
+        assert_eq!(w.deliveries.len(), per_rec);
+        assert!(w.deliveries.iter().all(|d| d.dst == victim));
+        // ...and the stamp was genuinely reset (not excluded per query): a
+        // third broadcast after the re-delivery dedups everything again.
+        let third = m.plan_lossy_broadcast_with_faults(
+            &topo,
+            &cp,
+            &faults,
+            true,
+            &mut wipe,
+            src,
+            &area,
+            &[0],
+            w.quiet_until + 1.0,
+        );
+        assert!(third.deliveries.is_empty());
+        assert!(third.dedup_saved_bytes > 0.0);
     }
 
     #[test]

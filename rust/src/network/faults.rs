@@ -1,0 +1,214 @@
+//! Deterministic node-fault plan: when each satellite is down.
+//!
+//! The whole fault schedule is resolved **before the run starts** from
+//! pure inputs — the scripted [`NodeOutageSpec`] list plus MTBF-style
+//! random crashes drawn from the counter-hash ([`hash_unit`]) — so both
+//! engines derive bit-identical crash/reboot instants regardless of event
+//! interleaving or shard count. That is the same determinism pattern the
+//! lossy comm layer uses for chunk fates (PR 6), lifted from links to
+//! nodes.
+//!
+//! Random crash gaps are exponential with mean `mtbf_s`, drawn per
+//! `(satellite, crash index)` under the reserved stream id
+//! [`NODE_FAULT_STREAM`] (a transfer counter can never reach `u64::MAX`,
+//! so node-fault draws and chunk-fate draws can never collide even though
+//! they share a seed). Generation is bounded by the workload horizon (the
+//! last task arrival): a satellite that would next crash after the final
+//! arrival simply never does, which both guarantees termination and keeps
+//! the plan identical across engines (the horizon is a pure function of
+//! the workload).
+
+use crate::config::FaultConfig;
+use crate::util::rng::hash_unit;
+use crate::workload::SatId;
+
+/// Reserved first hash coordinate for node-fault draws. Chunk-fate draws
+/// key their first coordinate by a transfer counter that starts at 0 and
+/// increments per broadcast; it can never reach `u64::MAX`, so the two
+/// draw families are disjoint by construction.
+pub const NODE_FAULT_STREAM: u64 = u64::MAX;
+
+/// The resolved fault schedule: per-satellite sorted, coalesced
+/// `[crash, reboot)` down intervals. Pure and engine-independent — every
+/// query is a function of `(sat, t)` only.
+#[derive(Clone, Debug, Default)]
+pub struct NodeFaultPlan {
+    /// `intervals[sat]` = sorted, non-overlapping `[crash, reboot)` spans.
+    intervals: Vec<Vec<(f64, f64)>>,
+}
+
+impl NodeFaultPlan {
+    /// Resolve the fault schedule for `sats` satellites up to `horizon`
+    /// (the last task arrival). Scripted outages are taken verbatim;
+    /// random crashes chain exponential gaps after the previous reboot,
+    /// stopping once a crash would land past the horizon. Overlapping
+    /// spans (scripted × random) are coalesced so each crash/reboot pair
+    /// is observable exactly once.
+    pub fn new(cfg: &FaultConfig, seed: u64, sats: usize, horizon: f64) -> Self {
+        let mut intervals: Vec<Vec<(f64, f64)>> = vec![Vec::new(); sats];
+        for o in &cfg.node_outages {
+            if o.sat < sats && o.start <= horizon {
+                intervals[o.sat].push((o.start, o.end));
+            }
+        }
+        if cfg.mtbf_s.is_finite() {
+            for (sat, spans) in intervals.iter_mut().enumerate() {
+                let mut t = 0.0;
+                let mut k: u64 = 0;
+                loop {
+                    let u = hash_unit(seed, NODE_FAULT_STREAM, sat as u64, k, 0);
+                    // Exponential gap with mean mtbf_s; u < 1 always, so
+                    // ln(1 - u) is finite and the gap is positive.
+                    let gap = cfg.mtbf_s * -(1.0 - u).ln();
+                    let crash = t + gap;
+                    if !(crash <= horizon) {
+                        break;
+                    }
+                    spans.push((crash, crash + cfg.downtime_s));
+                    t = crash + cfg.downtime_s;
+                    k += 1;
+                }
+            }
+        }
+        for spans in &mut intervals {
+            spans.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+            // Coalesce overlapping/adjacent spans so a satellite is never
+            // "crashed while already down".
+            let mut merged: Vec<(f64, f64)> = Vec::with_capacity(spans.len());
+            for &(s, e) in spans.iter() {
+                match merged.last_mut() {
+                    Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                    _ => merged.push((s, e)),
+                }
+            }
+            *spans = merged;
+        }
+        NodeFaultPlan { intervals }
+    }
+
+    /// A plan with no faults at all (the legacy immortal constellation).
+    pub fn none(sats: usize) -> Self {
+        NodeFaultPlan {
+            intervals: vec![Vec::new(); sats],
+        }
+    }
+
+    /// Every coalesced `[crash, reboot)` interval of `sat`, in time order.
+    pub fn spans(&self, sat: SatId) -> &[(f64, f64)] {
+        &self.intervals[sat]
+    }
+
+    /// Is `sat` down (crashed, not yet rebooted) at virtual time `t`?
+    /// Crash instants are inclusive, reboot instants exclusive — a
+    /// satellite rebooting at `t` is up at `t`.
+    pub fn is_down(&self, sat: SatId, t: f64) -> bool {
+        self.intervals[sat]
+            .iter()
+            .any(|&(s, e)| s <= t && t < e)
+    }
+
+    /// Does `sat` crash at any instant in the half-open window
+    /// `[t0, t1)`? Used to invalidate chunk possession across a wipe and
+    /// to detect a source dying inside a failover response window.
+    pub fn crashes_within(&self, sat: SatId, t0: f64, t1: f64) -> bool {
+        self.intervals[sat]
+            .iter()
+            .any(|&(s, _)| t0 <= s && s < t1)
+    }
+
+    /// `true` when no satellite ever goes down.
+    pub fn is_empty(&self) -> bool {
+        self.intervals.iter().all(Vec::is_empty)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NodeOutageSpec;
+
+    fn cfg() -> FaultConfig {
+        FaultConfig::default()
+    }
+
+    #[test]
+    fn scripted_outages_appear_verbatim() {
+        let mut c = cfg();
+        c.node_outages = vec![
+            NodeOutageSpec {
+                sat: 3,
+                start: 10.0,
+                end: 40.0,
+            },
+            NodeOutageSpec {
+                sat: 7,
+                start: 5.0,
+                end: 8.0,
+            },
+        ];
+        let plan = NodeFaultPlan::new(&c, 1, 25, 1000.0);
+        assert_eq!(plan.spans(3), &[(10.0, 40.0)]);
+        assert_eq!(plan.spans(7), &[(5.0, 8.0)]);
+        assert!(plan.is_down(3, 10.0), "crash instant inclusive");
+        assert!(plan.is_down(3, 39.999));
+        assert!(!plan.is_down(3, 40.0), "reboot instant exclusive");
+        assert!(!plan.is_down(0, 10.0));
+        assert!(plan.crashes_within(3, 0.0, 20.0));
+        assert!(!plan.crashes_within(3, 10.5, 20.0));
+        assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn mtbf_draws_are_pure_and_bounded_by_the_horizon() {
+        let mut c = cfg();
+        c.mtbf_s = 100.0;
+        c.downtime_s = 10.0;
+        let a = NodeFaultPlan::new(&c, 42, 25, 500.0);
+        let b = NodeFaultPlan::new(&c, 42, 25, 500.0);
+        for sat in 0..25 {
+            assert_eq!(a.spans(sat), b.spans(sat), "draws must be pure");
+        }
+        assert!(!a.is_empty(), "mtbf 100 over a 500 s horizon must crash");
+        for sat in 0..25 {
+            for &(s, e) in a.spans(sat) {
+                assert!(s <= 500.0, "crash {s} past the horizon");
+                assert!((e - s - 10.0).abs() < 1e-12 || e - s > 10.0);
+            }
+            // Spans are sorted and disjoint.
+            for w in a.spans(sat).windows(2) {
+                assert!(w[0].1 < w[1].0, "overlap: {:?}", w);
+            }
+        }
+        // A different seed draws a different schedule somewhere.
+        let other = NodeFaultPlan::new(&c, 43, 25, 500.0);
+        assert!((0..25).any(|s| a.spans(s) != other.spans(s)));
+    }
+
+    #[test]
+    fn overlapping_scripted_and_random_spans_coalesce() {
+        let mut c = cfg();
+        c.node_outages = vec![
+            NodeOutageSpec {
+                sat: 0,
+                start: 10.0,
+                end: 30.0,
+            },
+            NodeOutageSpec {
+                sat: 0,
+                start: 20.0,
+                end: 50.0,
+            },
+        ];
+        let plan = NodeFaultPlan::new(&c, 1, 4, 1000.0);
+        assert_eq!(plan.spans(0), &[(10.0, 50.0)]);
+    }
+
+    #[test]
+    fn infinite_mtbf_and_no_outages_is_empty() {
+        let plan = NodeFaultPlan::new(&cfg(), 7, 25, 1e6);
+        assert!(plan.is_empty());
+        for sat in 0..25 {
+            assert!(!plan.is_down(sat, 0.0));
+        }
+    }
+}

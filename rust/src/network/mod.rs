@@ -16,11 +16,16 @@
 //!   Its lossy sibling gates every chunk on the contact plan, and
 //!   [`CommModel::lookahead_at`] is the per-window conservative bound the
 //!   sharded engine runs on.
+//! * [`faults`] — the deterministic node-fault plan: when each satellite
+//!   is crashed, resolved entirely before the run from scripted outages
+//!   and counter-hash MTBF draws so both engines see identical fates.
 
 #![deny(missing_docs)]
 
 pub mod comm;
+pub mod faults;
 pub mod topology;
 
 pub use comm::{CommModel, LinkState, LossyPlan};
+pub use faults::NodeFaultPlan;
 pub use topology::{ContactPlan, ContactWindow, GridTopology};

@@ -87,6 +87,11 @@ pub struct SatNode {
     /// by record id. Only ever indexed by key (never iterated), so the
     /// map's internal order cannot leak into results.
     pub reassembly: HashMap<usize, ChunkAssembly>,
+    /// Crashed and not yet rebooted: arrivals are lost, service and
+    /// collaboration are suspended. Driven by the pre-resolved
+    /// [`crate::network::NodeFaultPlan`]; always `false` on the
+    /// fault-free path.
+    pub down: bool,
 }
 
 impl SatNode {
@@ -99,7 +104,38 @@ impl SatNode {
             in_flight: None,
             collab_armed: true,
             reassembly: HashMap::new(),
+            down: false,
         }
+    }
+
+    /// Crash at virtual time `now`: the in-flight task and every queued
+    /// task are lost (returns how many), and under the cold-start policy
+    /// (`wipe_scrt`) the SCRT and partial-transfer reassembly buffers are
+    /// cleared — the persist policy models non-volatile storage holding
+    /// both. The server clock (`next_free`) and accumulated `busy_time`
+    /// are deliberately *not* rewound: the dropped task's service was
+    /// already accounted when it started, and both engines share this
+    /// choice through the common `SatelliteState` (see
+    /// `docs/ARCHITECTURE.md`, "Node faults & recovery").
+    pub fn crash(&mut self, now: f64, wipe_scrt: bool) -> u64 {
+        let mut lost = self.queue.len() as u64;
+        self.queue.clear();
+        if self.in_flight.take().is_some() {
+            lost += 1;
+        }
+        if wipe_scrt {
+            self.scrt.wipe(now);
+            self.reassembly.clear();
+        }
+        self.down = true;
+        lost
+    }
+
+    /// Reboot: resume accepting tasks. The Alg. 2 hysteresis re-arms so a
+    /// (possibly cold) satellite may request collaboration again.
+    pub fn reboot(&mut self) {
+        self.down = false;
+        self.collab_armed = true;
     }
 
     /// Register one delivered chunk of `record_id`. Returns `true` exactly

@@ -33,7 +33,7 @@ use crate::coordinator::slcr::process_task;
 use crate::coordinator::Scenario;
 use crate::error::{Error, Result};
 use crate::metrics::{MetricsAccum, RunCounters, RunReport, SatSummary, TaskLog};
-use crate::network::{CommModel, ContactPlan, GridTopology, LinkState};
+use crate::network::{CommModel, ContactPlan, GridTopology, LinkState, NodeFaultPlan};
 use crate::satellite::{InFlight, SatNode};
 use crate::simulator::events::{EventKind, EventQueue};
 use crate::simulator::observer::Observer;
@@ -172,6 +172,10 @@ pub struct Engine<'a> {
     link: Option<LinkState>,
     /// When each ISL is up (degenerate always-on plan for static configs).
     contacts: ContactPlan,
+    /// Pre-resolved node-fault schedule (empty for the legacy immortal
+    /// constellation). Resolved once from pure inputs before the run, so
+    /// every crash/reboot fate is engine-independent.
+    faults: NodeFaultPlan,
     /// Reusable all-satellite SRS buffer: one allocation for the whole
     /// run instead of one per collaboration request.
     srs_scratch: Vec<f64>,
@@ -203,6 +207,15 @@ impl<'a> Engine<'a> {
         let nodes = (0..sats)
             .map(|s| SatNode::new(s, num_buckets, cap))
             .collect();
+        // The fault horizon is the last task arrival — a pure function of
+        // the workload, so both engines resolve the identical plan, and a
+        // finite horizon guarantees MTBF crash generation terminates.
+        let horizon = wl.tasks.iter().fold(0.0f64, |a, t| a.max(t.arrival));
+        let faults = if cfg.faults.node_faults_active() {
+            NodeFaultPlan::new(&cfg.faults, cfg.workload.seed, sats, horizon)
+        } else {
+            NodeFaultPlan::none(sats)
+        };
         let c_comp = cfg.compute.capability_flops;
         Engine {
             cfg,
@@ -219,9 +232,12 @@ impl<'a> Engine<'a> {
             network_quiet_until: f64::NEG_INFINITY,
             collab: RunCounters::default(),
             metrics: MetricsAccum::new(keep_logs),
-            link: (cfg.comm.faults_active() || contacts.is_dynamic())
-                .then(|| LinkState::new(cfg.workload.seed)),
+            link: (cfg.comm.faults_active()
+                || contacts.is_dynamic()
+                || cfg.faults.node_faults_active())
+            .then(|| LinkState::new(cfg.workload.seed)),
             contacts,
+            faults,
             srs_scratch: Vec::new(),
             srs_index: SrsIndex::new(sats),
             share_scratch: Vec::new(),
@@ -261,7 +277,20 @@ impl<'a> Engine<'a> {
         if let Err(msg) = self.cfg.topology.check(self.cfg.network.n) {
             return Err(Error::simulation(msg));
         }
+        if let Err(msg) = self.cfg.faults.node_fault_check(self.cfg.network.n) {
+            return Err(Error::simulation(msg));
+        }
         let wl = self.wl;
+        // Crash/reboot events are seeded BEFORE arrivals (satellite order,
+        // then task order) so a crash and an arrival at the identical
+        // instant tie-break the same way in both engines: the crash wins
+        // and the arriving task is lost.
+        for sat in 0..self.nodes.len() {
+            for &(crash, reboot) in self.faults.spans(sat) {
+                self.q.push(crash, EventKind::CrashAt(sat));
+                self.q.push(reboot, EventKind::RebootAt(sat));
+            }
+        }
         for (idx, task) in wl.tasks.iter().enumerate() {
             self.q.push(task.arrival, EventKind::Arrival(idx));
         }
@@ -269,8 +298,48 @@ impl<'a> Engine<'a> {
             let now = ev.time;
             match ev.kind {
                 EventKind::Arrival(idx) => self.on_arrival(idx, now, source)?,
-                EventKind::Completion(sat) => {
-                    self.on_completion(sat, now, source, obs)?
+                EventKind::Completion { sat, task } => {
+                    // Lazy cancellation: a crash clears `in_flight`, and a
+                    // dropped task is never re-served, so a completion
+                    // whose task doesn't match the current in-flight one
+                    // is a stale ghost of a crashed service.
+                    if self.nodes[sat]
+                        .in_flight
+                        .as_ref()
+                        .is_some_and(|fl| fl.task_idx == task)
+                    {
+                        self.on_completion(sat, now, source, obs)?
+                    }
+                }
+                EventKind::CrashAt(sat) => {
+                    let lost = self.nodes[sat]
+                        .crash(now, !self.cfg.faults.scrt_persist);
+                    self.collab.crashes += 1;
+                    self.collab.lost_tasks += lost;
+                }
+                EventKind::RebootAt(sat) => {
+                    self.nodes[sat].reboot();
+                    if !self.cfg.faults.scrt_persist {
+                        self.collab.cold_scrt_rebuilds += 1;
+                    }
+                }
+                EventKind::CollabTimeout {
+                    req,
+                    attempt,
+                    fallback,
+                } => {
+                    debug_assert!(
+                        req < self.nodes.len()
+                            && attempt <= self.cfg.faults.max_failover_retries
+                            && fallback
+                                == (attempt == self.cfg.faults.max_failover_retries),
+                        "fallback marks exactly the final failover attempt"
+                    );
+                    if fallback {
+                        self.collab.timeout_fallbacks += 1;
+                    } else {
+                        self.collab.failover_reselections += 1;
+                    }
                 }
                 EventKind::BroadcastDeliver {
                     dst,
@@ -345,6 +414,11 @@ impl<'a> Engine<'a> {
         source: &mut dyn PreparedSource,
     ) -> Result<()> {
         let sat = self.wl.tasks[idx].satellite;
+        if self.nodes[sat].down {
+            // A crashed satellite accepts nothing: the task is lost.
+            self.collab.lost_tasks += 1;
+            return Ok(());
+        }
         self.nodes[sat].queue.push_back(idx);
         if self.nodes[sat].in_flight.is_none() {
             self.start_service(sat, now, source)?;
@@ -405,9 +479,58 @@ impl<'a> Engine<'a> {
         self.srs_index
             .snapshot_into(self.cfg.reuse.beta, now, &mut all_srs);
         obs.on_collab_request(now, sat, my_srs, &all_srs);
-        let decision = policy.select_source(&self.topo, sat, &all_srs, th_co);
+        // Failover cascade — a single pass when node faults are off. The
+        // whole cascade is resolved here, at the request instant, from the
+        // SRS(t0) snapshot and the pre-resolved fault plan (a pure rule,
+        // so both engines derive the identical outcome): attempt `k` at
+        // `t_try` re-runs Alg. 2 excluding satellites down at `t_try`, and
+        // succeeds iff the chosen source survives the response window
+        // `collab_timeout_s · backoff^k`. A source crash inside the window
+        // is detected at its end (a `CollabTimeout` event — reselection,
+        // or the final fallback to local compute); a *requester* crash
+        // before the detection instant evaporates the cascade with it.
+        let mut t_try = now;
+        let mut chosen = None;
+        for attempt in 0..=self.cfg.faults.max_failover_retries {
+            let faults = &self.faults;
+            let alive_at = t_try;
+            let decision = policy.select_source_alive(
+                &self.topo,
+                sat,
+                &all_srs,
+                th_co,
+                &|s| !faults.is_down(s, alive_at),
+            );
+            let Some(decision) = decision else {
+                break; // no live source clears th_co: terminate (Alg. 2)
+            };
+            if self.faults.is_empty() {
+                chosen = Some((decision, t_try));
+                break;
+            }
+            let window = self.cfg.faults.collab_timeout_s
+                * self.cfg.faults.failover_backoff.powi(attempt as i32);
+            let t_det = t_try + window;
+            if !self.faults.crashes_within(decision.source, t_try, t_det) {
+                chosen = Some((decision, t_try));
+                break;
+            }
+            if self.faults.crashes_within(sat, t_try, t_det) {
+                break; // the requester dies before it could detect
+            }
+            let fallback = attempt == self.cfg.faults.max_failover_retries;
+            self.q.push(
+                t_det,
+                EventKind::CollabTimeout {
+                    req: sat,
+                    attempt,
+                    fallback,
+                },
+            );
+            t_try = t_det;
+        }
         self.srs_scratch = all_srs;
-        let Some(decision) = decision else {
+        let Some((decision, t_go)) = chosen else {
             self.collab.aborted_collabs += 1;
             return;
         };
@@ -429,14 +552,19 @@ impl<'a> Engine<'a> {
             // fates, retries, dedup) here and replay its fixed schedule.
             let record_ids: Vec<usize> =
                 records.iter().map(|(_, r)| r.id).collect();
-            let plan = self.comm.plan_lossy_broadcast(
+            // The transfer resolves at the successful attempt's instant
+            // `t_go` (== `now` whenever node faults are off), with the
+            // fault plan filtering dead endpoints chunk by chunk.
+            let plan = self.comm.plan_lossy_broadcast_with_faults(
                 &self.topo,
                 &self.contacts,
+                &self.faults,
+                !self.cfg.faults.scrt_persist,
                 &mut link,
                 decision.source,
                 &decision.area,
                 &record_ids,
-                now,
+                t_go,
             );
             self.link = Some(link);
             self.collab.transfer_bytes += plan.bytes;
@@ -445,6 +573,7 @@ impl<'a> Engine<'a> {
             self.collab.handovers += plan.handovers;
             self.collab.contact_wait_s += plan.contact_wait_s;
             self.collab.stranded_chunks += plan.stranded_chunks;
+            self.collab.crash_dropped_chunks += plan.crash_dropped_chunks;
             self.network_quiet_until = plan.quiet_until;
             let mut shared = std::mem::take(&mut self.share_scratch);
             shared.clear();
@@ -570,7 +699,7 @@ impl<'a> Engine<'a> {
             reused_from_scene: spec.reused_from_scene,
             reused_from_sat: spec.reused_from_sat,
         });
-        self.q.push(completion, EventKind::Completion(sat));
+        self.q.push(completion, EventKind::Completion { sat, task: idx });
         Ok(())
     }
 }

@@ -21,8 +21,31 @@ use crate::workload::SatId;
 pub enum EventKind {
     /// A task arrives at its satellite (index into the workload task vec).
     Arrival(usize),
-    /// The satellite's in-flight task completes.
-    Completion(SatId),
+    /// The satellite's in-flight task completes. `task` is the workload
+    /// index the completion was scheduled for: a crash drops the in-flight
+    /// task but cannot unschedule this event, so the handler ignores a
+    /// completion whose task no longer matches the satellite's in-flight
+    /// state (lazy cancellation — a dropped task is never re-served, so
+    /// the match is unique).
+    Completion { sat: SatId, task: usize },
+    /// The satellite crashes: its in-flight task and queue are lost and
+    /// (under the wipe policy) the SCRT is cleared. Pre-seeded from the
+    /// [`crate::network::NodeFaultPlan`] at run start.
+    CrashAt(SatId),
+    /// A crashed satellite reboots and resumes accepting tasks.
+    RebootAt(SatId),
+    /// A failover response timeout fires at a requester whose selected
+    /// collaboration source died before answering: attempt `attempt` of
+    /// the failover cascade is declared failed. `fallback` marks retry
+    /// exhaustion — the requester degrades to local compute.
+    CollabTimeout {
+        /// The waiting requester.
+        req: SatId,
+        /// Zero-based failover attempt index that just timed out.
+        attempt: usize,
+        /// Final attempt: no further source is tried.
+        fallback: bool,
+    },
     /// One broadcast record reaches a destination satellite. Broadcasts are
     /// *streamed*: record `k` of a τ-record share arrives after `k+1`
     /// payload transmission times, so receivers start benefiting before the
@@ -392,9 +415,9 @@ mod tests {
     #[test]
     fn pops_in_time_order() {
         let mut q = EventQueue::new();
-        q.push(3.0, EventKind::Completion(0));
-        q.push(1.0, EventKind::Completion(1));
-        q.push(2.0, EventKind::Completion(2));
+        q.push(3.0, EventKind::CrashAt(0));
+        q.push(1.0, EventKind::CrashAt(1));
+        q.push(2.0, EventKind::CrashAt(2));
         assert_eq!(q.peek().map(|e| e.time), Some(1.0));
         let order: Vec<f64> = std::iter::from_fn(|| q.pop().map(|e| e.time)).collect();
         assert_eq!(order, vec![1.0, 2.0, 3.0]);
@@ -404,12 +427,12 @@ mod tests {
     #[test]
     fn equal_times_fifo_by_seq() {
         let mut q = EventQueue::new();
-        q.push(1.0, EventKind::Completion(10));
-        q.push(1.0, EventKind::Completion(20));
-        q.push(1.0, EventKind::Completion(30));
+        q.push(1.0, EventKind::CrashAt(10));
+        q.push(1.0, EventKind::CrashAt(20));
+        q.push(1.0, EventKind::CrashAt(30));
         let sats: Vec<usize> = std::iter::from_fn(|| {
             q.pop().map(|e| match e.kind {
-                EventKind::Completion(s) => s,
+                EventKind::CrashAt(s) => s,
                 _ => unreachable!(),
             })
         })
@@ -422,7 +445,7 @@ mod tests {
     #[should_panic(expected = "non-finite event time")]
     fn push_rejects_nan_time_in_debug() {
         let mut q = EventQueue::new();
-        q.push(f64::NAN, EventKind::Completion(0));
+        q.push(f64::NAN, EventKind::CrashAt(0));
     }
 
     #[test]
@@ -434,7 +457,7 @@ mod tests {
         let mk = |time: f64, seq: u64| Event {
             time,
             seq,
-            kind: EventKind::Completion(0),
+            kind: EventKind::CrashAt(0),
         };
         // Sign-controlled NaNs: `f64::NAN`'s sign bit is unspecified, so
         // pin it explicitly with copysign.
@@ -456,7 +479,7 @@ mod tests {
         let mk = |seq: u64| Event {
             time: f64::NAN,
             seq,
-            kind: EventKind::Completion(0),
+            kind: EventKind::CrashAt(0),
         };
         let mut heap = BinaryHeap::new();
         heap.push(mk(2));
@@ -474,11 +497,11 @@ mod tests {
         // comparison must interleave them with finite calendar events at
         // the IEEE total-order extremes).
         let mut q = EventQueue::new();
-        q.push_unchecked(f64::NAN.copysign(1.0), EventKind::Completion(0));
-        q.push_unchecked(1.0, EventKind::Completion(1));
-        q.push_unchecked(f64::NEG_INFINITY, EventKind::Completion(2));
-        q.push_unchecked(f64::NAN.copysign(-1.0), EventKind::Completion(3));
-        q.push_unchecked(f64::INFINITY, EventKind::Completion(4));
+        q.push_unchecked(f64::NAN.copysign(1.0), EventKind::CrashAt(0));
+        q.push_unchecked(1.0, EventKind::CrashAt(1));
+        q.push_unchecked(f64::NEG_INFINITY, EventKind::CrashAt(2));
+        q.push_unchecked(f64::NAN.copysign(-1.0), EventKind::CrashAt(3));
+        q.push_unchecked(f64::INFINITY, EventKind::CrashAt(4));
         assert_eq!(q.len(), 5);
         let order: Vec<u64> = std::iter::from_fn(|| q.pop().map(|e| e.seq)).collect();
         // -NaN < -inf < 1.0 < +inf < +NaN.
@@ -493,10 +516,10 @@ mod tests {
         let mut q = EventQueue::new();
         for i in 0..50u64 {
             // Descending pushes spanning ~12 orders of magnitude.
-            q.push((50 - i) as f64 * 1e6 + 0.25, EventKind::Completion(i as usize));
+            q.push((50 - i) as f64 * 1e6 + 0.25, EventKind::CrashAt(i as usize));
         }
         for i in 0..50u64 {
-            q.push(i as f64 * 1e-3, EventKind::Completion(i as usize));
+            q.push(i as f64 * 1e-3, EventKind::CrashAt(i as usize));
         }
         let mut last = f64::NEG_INFINITY;
         let mut n = 0;
@@ -543,11 +566,11 @@ mod tests {
                         // near future: lands in the calendar
                         _ => clock + rng.f64() * 5.0,
                     };
-                    q.push_unchecked(time, EventKind::Completion(step));
+                    q.push_unchecked(time, EventKind::CrashAt(step));
                     reference.push(Event {
                         time,
                         seq: next_seq,
-                        kind: EventKind::Completion(step),
+                        kind: EventKind::CrashAt(step),
                     });
                     next_seq += 1;
                     if time.is_finite() {

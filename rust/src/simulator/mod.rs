@@ -375,6 +375,13 @@ impl<'a> Simulation<'a> {
                  compare Simulation::run against the sharded engine instead",
             ));
         }
+        // And for satellite crash/reboot fault injection.
+        if self.cfg.faults.node_faults_active() {
+            return Err(Error::simulation(
+                "run_reference does not model node faults — \
+                 compare Simulation::run against the sharded engine instead",
+            ));
+        }
 
         let owned_wl;
         let wl = match self.workload {
@@ -461,7 +468,7 @@ impl<'a> Simulation<'a> {
                         )?;
                     }
                 }
-                EventKind::Completion(sat) => {
+                EventKind::Completion { sat, .. } => {
                     let fl = in_flight[sat]
                         .take()
                         .ok_or_else(|| Error::simulation("completion w/o task"))?;
@@ -626,6 +633,14 @@ impl<'a> Simulation<'a> {
                     states[dst].last_collab_request =
                         states[dst].last_collab_request.max(now);
                 }
+                // The guards above refuse lossy-link, contact-plan and
+                // node-fault configs, so the chunked-transfer and fault
+                // event kinds can never be scheduled in this loop.
+                other => {
+                    return Err(Error::simulation(format!(
+                        "unexpected event kind in the reference loop: {other:?}"
+                    )))
+                }
             }
         }
 
@@ -741,7 +756,7 @@ impl<'a> Simulation<'a> {
             reused_from_scene,
             reused_from_sat,
         });
-        q.push(completion, EventKind::Completion(sat));
+        q.push(completion, EventKind::Completion { sat, task: idx });
         Ok(())
     }
 }

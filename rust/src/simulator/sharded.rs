@@ -66,7 +66,7 @@ use crate::coordinator::srs::srs;
 use crate::coordinator::Scenario;
 use crate::error::{Error, Result};
 use crate::metrics::{fold_sharded, RunCounters, RunReport, SatSummary, TaskLog};
-use crate::network::{CommModel, ContactPlan, GridTopology, LinkState};
+use crate::network::{CommModel, ContactPlan, GridTopology, LinkState, NodeFaultPlan};
 use crate::satellite::{InFlight, SatNode, SatelliteState};
 use crate::simulator::engine::{reuse_service, scratch_service, take_completed};
 use crate::simulator::events::{EventKind, EventQueue};
@@ -253,6 +253,10 @@ struct ShardCtx<'a, S: PreparedSource + ?Sized> {
     cooldown_s: f64,
     scratch_s: f64,
     lookup_s: f64,
+    /// Does the SCRT survive a crash (non-volatile storage)? `false` is
+    /// the cold-start policy: a crash wipes the table and the reassembly
+    /// buffers.
+    scrt_persist: bool,
 }
 
 /// One worker shard: the satellites it owns, their private event queue,
@@ -275,12 +279,18 @@ struct Shard {
     srs: SrsIndex,
     /// The unresolved Alg. 2 gate this shard paused at, if any.
     pause: Option<PendingGate>,
-    /// Shard-local fault counters, bumped by `LinkTimeout` handlers and
-    /// summed into the run counters at the end — integer sums commute,
-    /// so the totals match the single-threaded engine's exactly no
-    /// matter how timeouts interleave across shards.
+    /// Shard-local fault counters, bumped by `LinkTimeout` /
+    /// `CrashAt` / `RebootAt` / `CollabTimeout` handlers and summed into
+    /// the run counters at the end — integer sums commute, so the totals
+    /// match the single-threaded engine's exactly no matter how the
+    /// events interleave across shards.
     retransmits: u64,
     dropped_chunks: u64,
+    crashes: u64,
+    lost_tasks: u64,
+    cold_scrt_rebuilds: u64,
+    failover_reselections: u64,
+    timeout_fallbacks: u64,
 }
 
 impl Shard {
@@ -372,15 +382,57 @@ impl Shard {
                     let sat = ctx.wl.tasks[idx].satellite;
                     debug_assert_eq!(self.part.shard_of(sat), self.id, "foreign arrival");
                     let local = self.part.local_of(sat);
-                    self.nodes[local].queue.push_back(idx);
-                    if self.nodes[local].in_flight.is_none() {
-                        self.start_service(ctx, local, now)?;
+                    if self.nodes[local].down {
+                        // A task arriving at a crashed satellite is lost —
+                        // same rule as the single-threaded engine.
+                        self.lost_tasks += 1;
+                    } else {
+                        self.nodes[local].queue.push_back(idx);
+                        if self.nodes[local].in_flight.is_none() {
+                            self.start_service(ctx, local, now)?;
+                        }
                     }
                 }
-                EventKind::Completion(sat) => {
+                EventKind::Completion { sat, task } => {
                     let local = self.part.local_of(sat);
-                    if self.on_completion(ctx, local, now, quiet_until)? {
+                    // Lazy cancellation: a crash drops the in-flight task
+                    // but leaves its completion event queued; the stale
+                    // event no longer matches the (empty or different)
+                    // in-flight slot and is ignored. A dropped task index
+                    // is never re-served, so a false match is impossible.
+                    if self.nodes[local]
+                        .in_flight
+                        .as_ref()
+                        .is_some_and(|fl| fl.task_idx == task)
+                        && self.on_completion(ctx, local, now, quiet_until)?
+                    {
                         return Ok(()); // paused at an unresolved gate
+                    }
+                }
+                EventKind::CrashAt(sat) => {
+                    let local = self.part.local_of(sat);
+                    self.lost_tasks += self.nodes[local].crash(now, !ctx.scrt_persist);
+                    self.crashes += 1;
+                }
+                EventKind::RebootAt(sat) => {
+                    let local = self.part.local_of(sat);
+                    self.nodes[local].reboot();
+                    if !ctx.scrt_persist {
+                        self.cold_scrt_rebuilds += 1;
+                    }
+                }
+                EventKind::CollabTimeout { req, fallback, .. } => {
+                    // Pure counter bump — the failover cascade itself was
+                    // resolved by the coordinator when the request fired.
+                    debug_assert_eq!(
+                        self.part.shard_of(req),
+                        self.id,
+                        "foreign collab timeout"
+                    );
+                    if fallback {
+                        self.timeout_fallbacks += 1;
+                    } else {
+                        self.failover_reselections += 1;
                     }
                 }
                 EventKind::BroadcastDeliver {
@@ -584,7 +636,7 @@ impl Shard {
             reused_from_scene: spec.reused_from_scene,
             reused_from_sat: spec.reused_from_sat,
         });
-        self.q.push(completion, EventKind::Completion(sat));
+        self.q.push(completion, EventKind::Completion { sat, task: idx });
         Ok(())
     }
 }
@@ -630,6 +682,18 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
     if let Err(msg) = cfg.topology.check(cfg.network.n) {
         return Err(Error::simulation(msg));
     }
+    if let Err(msg) = cfg.faults.node_fault_check(cfg.network.n) {
+        return Err(Error::simulation(msg));
+    }
+    // Node-fault plan, resolved up front exactly as in `Engine::new`: the
+    // MTBF horizon is the last task arrival — a pure function of the
+    // workload — so both engines draw identical crash schedules.
+    let horizon = wl.tasks.iter().fold(0.0f64, |a, t| a.max(t.arrival));
+    let faults = if cfg.faults.node_faults_active() {
+        NodeFaultPlan::new(&cfg.faults, cfg.workload.seed, sats, horizon)
+    } else {
+        NodeFaultPlan::none(sats)
+    };
 
     let cap = cfg.cache_capacity_records();
     let num_buckets = backend.num_buckets();
@@ -658,6 +722,7 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
         cooldown_s: cfg.reuse.collab_cooldown_s,
         scratch_s: cfg.compute.task_flops / c_comp,
         lookup_s: cfg.compute.lookup_fixed_s + cfg.compute.lookup_flops / c_comp,
+        scrt_persist: cfg.faults.scrt_persist,
     };
 
     let part = PartitionMap::new(partition, sats, shard_count);
@@ -684,10 +749,26 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
                 pause: None,
                 retransmits: 0,
                 dropped_chunks: 0,
+                crashes: 0,
+                lost_tasks: 0,
+                cold_scrt_rebuilds: 0,
+                failover_reselections: 0,
+                timeout_fallbacks: 0,
             }
         })
         .collect();
 
+    // Seed the crash/reboot schedule first, in ascending satellite order
+    // with each satellite's spans in time order — the same push order as
+    // the single-threaded engine, so a crash landing at the same instant
+    // as an arrival wins the (time, seq) tie on both engines.
+    for sat in 0..sats {
+        let shard = &mut shards[part.shard_of(sat)];
+        for &(crash, reboot) in faults.spans(sat) {
+            shard.q.push(crash, EventKind::CrashAt(sat));
+            shard.q.push(reboot, EventKind::RebootAt(sat));
+        }
+    }
     // Seed the arrivals, in task order per shard (same relative order as
     // the single-threaded engine's global arrival pushes).
     for (idx, task) in wl.tasks.iter().enumerate() {
@@ -703,8 +784,10 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
     // keeps the ideal-link planner (and its exact golden outputs)
     // untouched. A dynamic contact plan forces the chunked planner even
     // with loss off, mirroring `Engine::new`.
-    let mut link = (cfg.comm.faults_active() || contacts.is_dynamic())
-        .then(|| LinkState::new(cfg.workload.seed));
+    let mut link = (cfg.comm.faults_active()
+        || contacts.is_dynamic()
+        || cfg.faults.node_faults_active())
+    .then(|| LinkState::new(cfg.workload.seed));
     let mut pending: Vec<Vec<PendingEvent>> =
         (0..shard_count).map(|_| Vec::new()).collect();
 
@@ -818,9 +901,53 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
                             shard.srs_at(local_idx, t, ctx.beta);
                     }
                 }
-                match gate_policy.select_source(&topo, req_sat, &all_srs, ctx.th_co) {
+                // Failover cascade — the same pure rule as the
+                // single-threaded engine, resolved against the SRS(t)
+                // snapshot with crashed satellites filtered out at each
+                // retry instant. `CollabTimeout` events are state-free
+                // requester-local counter bumps, so they go straight into
+                // the paused requester shard's queue even when the
+                // detection instant falls inside this window.
+                let mut t_try = t;
+                let mut chosen = None;
+                for attempt in 0..=cfg.faults.max_failover_retries {
+                    let alive_at = t_try;
+                    let decision = gate_policy.select_source_alive(
+                        &topo,
+                        req_sat,
+                        &all_srs,
+                        ctx.th_co,
+                        &|s| !faults.is_down(s, alive_at),
+                    );
+                    let Some(decision) = decision else { break };
+                    if faults.is_empty() {
+                        chosen = Some((decision, t_try));
+                        break;
+                    }
+                    let timeout = cfg.faults.collab_timeout_s
+                        * cfg.faults.failover_backoff.powi(attempt as i32);
+                    let t_det = t_try + timeout;
+                    if !faults.crashes_within(decision.source, t_try, t_det) {
+                        chosen = Some((decision, t_try));
+                        break;
+                    }
+                    if faults.crashes_within(req_sat, t_try, t_det) {
+                        break; // the requester itself dies waiting
+                    }
+                    let fallback = attempt == cfg.faults.max_failover_retries;
+                    shards[i].q.push(
+                        t_det,
+                        EventKind::CollabTimeout {
+                            req: req_sat,
+                            attempt,
+                            fallback,
+                        },
+                    );
+                    t_try = t_det;
+                }
+                match chosen {
                     None => collab.aborted_collabs += 1,
-                    Some(decision) => {
+                    Some((decision, t_go)) => {
                         let records = shards[part.shard_of(decision.source)].nodes
                             [part.local_of(decision.source)]
                             .scrt
@@ -844,14 +971,16 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
                                 // schedule is identical across K.
                                 let record_ids: Vec<usize> =
                                     records.iter().map(|(_, r)| r.id).collect();
-                                let plan = comm.plan_lossy_broadcast(
+                                let plan = comm.plan_lossy_broadcast_with_faults(
                                     &topo,
                                     &contacts,
+                                    &faults,
+                                    !cfg.faults.scrt_persist,
                                     link,
                                     decision.source,
                                     &decision.area,
                                     &record_ids,
-                                    t,
+                                    t_go,
                                 );
                                 collab.transfer_bytes += plan.bytes;
                                 collab.comm_seconds += plan.airtime_s;
@@ -859,6 +988,7 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
                                 collab.handovers += plan.handovers;
                                 collab.contact_wait_s += plan.contact_wait_s;
                                 collab.stranded_chunks += plan.stranded_chunks;
+                                collab.crash_dropped_chunks += plan.crash_dropped_chunks;
                                 quiet_until = plan.quiet_until;
                                 let shared: Vec<(u32, Arc<Record>)> = records
                                     .into_iter()
@@ -957,6 +1087,12 @@ pub(crate) fn run_sharded<S: PreparedSource + ?Sized>(
     // the totals match the single-threaded handler's sequential bumps.
     collab.retransmits = shards.iter().map(|s| s.retransmits).sum();
     collab.dropped_chunks = shards.iter().map(|s| s.dropped_chunks).sum();
+    collab.crashes = shards.iter().map(|s| s.crashes).sum();
+    collab.lost_tasks = shards.iter().map(|s| s.lost_tasks).sum();
+    collab.cold_scrt_rebuilds = shards.iter().map(|s| s.cold_scrt_rebuilds).sum();
+    collab.failover_reselections =
+        shards.iter().map(|s| s.failover_reselections).sum();
+    collab.timeout_fallbacks = shards.iter().map(|s| s.timeout_fallbacks).sum();
     let makespan = metrics.makespan();
     let per_satellite: Vec<SatSummary> = (0..sats)
         .map(|s| {

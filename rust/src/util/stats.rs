@@ -24,7 +24,9 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // IEEE total order: a NaN sample (a poisoned latency upstream) sorts
+    // to the extremes instead of panicking the whole report.
+    sorted.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -73,6 +75,17 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn percentile_orders_nan_samples_without_panicking() {
+        // Regression: the sort used `partial_cmp().unwrap()`, so one NaN
+        // sample panicked the whole metrics report. Under the total order
+        // a +NaN sorts above +inf, so finite percentiles stay sensible.
+        let xs = [2.0, f64::NAN.copysign(1.0), 1.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert!(percentile(&xs, 100.0).is_nan());
     }
 
     #[test]

@@ -203,7 +203,10 @@ pub fn build_workload(cfg: &SimConfig) -> Workload {
         }
     }
 
-    tasks.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    // Total order so a degenerate arrival draw can never panic the sort;
+    // the sort is stable, so equal arrivals keep their generation order
+    // (ascending satellite id) and task ids stay deterministic.
+    tasks.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
     // Ids in arrival order: `task.id == index in tasks` — the simulator and
     // record-provenance lookups rely on this invariant.
     for (i, t) in tasks.iter_mut().enumerate() {
@@ -227,6 +230,33 @@ mod tests {
         cfg.workload.raw_h = 16;
         cfg.workload.raw_w = 16;
         cfg
+    }
+
+    #[test]
+    fn arrival_sort_is_total_and_stable() {
+        // Regression: the arrival sort used `partial_cmp().unwrap()`, so a
+        // degenerate (NaN) arrival panicked `build_workload`. The total
+        // order places NaN at the axis extreme and, being stable, equal
+        // arrivals keep their generation order.
+        use crate::workload::ImageData;
+        let mk = |satellite: usize, arrival: f64| Task {
+            id: 0,
+            satellite,
+            arrival,
+            scene: 0,
+            class_id: 0,
+            task_type: 0,
+            raw: ImageData::new(1, 1, vec![0.0; 3]),
+        };
+        let mut tasks = vec![
+            mk(0, 2.0),
+            mk(1, f64::NAN.copysign(1.0)),
+            mk(2, 2.0),
+            mk(3, 1.0),
+        ];
+        tasks.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        let order: Vec<usize> = tasks.iter().map(|t| t.satellite).collect();
+        assert_eq!(order, vec![3, 0, 2, 1]);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! float summation order — fails here first.
 
 use ccrsat::compute::NativeBackend;
-use ccrsat::config::{OutageSpec, SimConfig, TopologyMode};
+use ccrsat::config::{NodeOutageSpec, OutageSpec, SimConfig, TopologyMode};
 use ccrsat::coordinator::Scenario;
 use ccrsat::metrics::RunReport;
 use ccrsat::simulator::{
@@ -53,6 +53,12 @@ fn assert_aggregates_identical(a: &RunReport, b: &RunReport, label: &str) {
     assert_eq!(a.stranded_chunks, b.stranded_chunks, "{label}");
     assert_eq!(a.contact_wait_s, b.contact_wait_s, "{label}");
     assert_eq!(a.contact_utilization, b.contact_utilization, "{label}");
+    assert_eq!(a.crashes, b.crashes, "{label}");
+    assert_eq!(a.lost_tasks, b.lost_tasks, "{label}");
+    assert_eq!(a.failover_reselections, b.failover_reselections, "{label}");
+    assert_eq!(a.timeout_fallbacks, b.timeout_fallbacks, "{label}");
+    assert_eq!(a.cold_scrt_rebuilds, b.cold_scrt_rebuilds, "{label}");
+    assert_eq!(a.crash_dropped_chunks, b.crash_dropped_chunks, "{label}");
     assert_eq!(a.mean_latency, b.mean_latency, "{label}");
     assert_eq!(a.p95_latency, b.p95_latency, "{label}");
 }
@@ -384,6 +390,157 @@ fn engines_reject_bad_topology_configs_naming_the_value() {
             }
         }
     }
+}
+
+#[test]
+fn engines_reject_degenerate_node_fault_configs_naming_the_value() {
+    // Same contract as the link-fault and topology checks: both engines
+    // must reject a nonsensical node-fault model up front with an
+    // `Error::Simulation` naming the offending value.
+    let mutations: Vec<(Box<dyn Fn(&mut SimConfig)>, &str)> = vec![
+        (Box::new(|c| c.faults.mtbf_s = 0.0), "mtbf_s=0"),
+        (Box::new(|c| c.faults.mtbf_s = f64::NAN), "mtbf_s=NaN"),
+        (
+            Box::new(|c| {
+                c.faults.mtbf_s = 1000.0;
+                c.faults.downtime_s = 0.0;
+            }),
+            "downtime_s=0",
+        ),
+        (
+            Box::new(|c| {
+                c.faults.mtbf_s = 1000.0;
+                c.faults.collab_timeout_s = -1.0;
+            }),
+            "collab_timeout_s=-1",
+        ),
+        (
+            Box::new(|c| {
+                c.faults.mtbf_s = 1000.0;
+                c.faults.max_failover_retries = 17;
+            }),
+            "max_failover_retries=17",
+        ),
+        (
+            Box::new(|c| {
+                c.faults.mtbf_s = 1000.0;
+                c.faults.failover_backoff = 0.5;
+            }),
+            "failover_backoff=0.5",
+        ),
+        (
+            // Satellite 99 does not exist on a 3×3 grid.
+            Box::new(|c| {
+                c.faults.node_outages =
+                    NodeOutageSpec::parse_list("99@1..2").unwrap();
+            }),
+            "sat=99",
+        ),
+        (
+            Box::new(|c| {
+                c.faults.node_outages =
+                    NodeOutageSpec::parse_list("5@9..3").unwrap();
+            }),
+            "start < end",
+        ),
+    ];
+    for (mutate, needle) in &mutations {
+        let mut c = cfg(3, 12);
+        mutate(&mut c);
+        let backend = NativeBackend::new(&c);
+        for threads in [None, Some(2)] {
+            let mut sim = Simulation::new(&c, &backend, Scenario::Sccr);
+            if let Some(k) = threads {
+                sim = sim.threads(k);
+            }
+            match sim.run() {
+                Err(ccrsat::Error::Simulation(msg)) => {
+                    assert!(
+                        msg.contains(needle),
+                        "threads {threads:?}: expected '{needle}' in: {msg}"
+                    );
+                }
+                other => panic!(
+                    "threads {threads:?} ({needle}): expected Error::Simulation, got {other:?}"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn reference_monolith_refuses_node_fault_configs() {
+    // The kept pre-refactor monolith predates the node-fault model: it
+    // must refuse a crash-injecting config rather than silently report
+    // fault-free numbers for it.
+    let mut c = cfg(3, 12);
+    c.faults.mtbf_s = 500.0;
+    let backend = NativeBackend::new(&c);
+    let refr = Simulation::new(&c, &backend, Scenario::Sccr).run_reference();
+    match refr {
+        Err(ccrsat::Error::Simulation(msg)) => {
+            assert!(
+                msg.contains("node faults"),
+                "unexpected message: {msg}"
+            );
+        }
+        other => panic!("expected Error::Simulation, got {other:?}"),
+    }
+}
+
+#[test]
+fn failover_exhaustion_terminates_and_counts_fallbacks() {
+    // Every satellite except the center crashes briefly every 3 s
+    // (staggered), so any source a surviving requester selects has a
+    // crash inside every failover window: the bounded cascade must
+    // exhaust its retries and degrade to local compute — terminating,
+    // counting the fallbacks, and staying bit-identical when sharded.
+    let mut c = cfg(3, 60);
+    // SRS = β·rr + (1−β)(1−C) is exactly th_co = 0.5 on a fresh idle
+    // satellite; raise the threshold so nearly every completion at the
+    // surviving requester fires the Alg. 2 gate.
+    c.reuse.th_co = 0.95;
+    c.faults.collab_timeout_s = 5.0;
+    c.faults.failover_backoff = 1.0;
+    c.faults.downtime_s = 1.0; // inert for scripted spans; must be valid
+    let center = 4usize; // 3×3 grid center never crashes
+    let mut spec = String::new();
+    for sat in (0..9).filter(|&s| s != center) {
+        for k in 0..2000 {
+            let start = k as f64 * 3.0 + sat as f64 * 0.1;
+            spec.push_str(&format!("{sat}@{start}..{},", start + 0.5));
+        }
+    }
+    c.faults.node_outages =
+        NodeOutageSpec::parse_list(spec.trim_end_matches(',')).unwrap();
+    let backend = NativeBackend::new(&c);
+    let wl = build_workload(&c);
+    let prep = prepare(&backend, &wl).unwrap();
+    // SRS Priority floods and its global source search cannot come up
+    // empty while any other satellite is alive, so the cascade (not the
+    // selection) is what decides every one of its requests.
+    let single = Simulation::new(&c, &backend, Scenario::SrsPriority)
+        .with_workload(&wl)
+        .with_prepared(&prep)
+        .run()
+        .unwrap();
+    assert!(single.crashes > 0, "the outage script must crash satellites");
+    assert!(
+        single.timeout_fallbacks > 0,
+        "every window holds a source crash: some cascade must exhaust \
+         its retries ({} reselections, {} aborted)",
+        single.failover_reselections,
+        single.aborted_collabs
+    );
+    let sharded = Simulation::new(&c, &backend, Scenario::SrsPriority)
+        .with_workload(&wl)
+        .with_prepared(&prep)
+        .threads(2)
+        .run()
+        .unwrap();
+    assert_aggregates_identical(&sharded, &single, "failover exhaustion");
+    assert_satellites_identical(&sharded, &single, "failover exhaustion");
+    assert_logs_identical(&sharded, &single, "failover exhaustion");
 }
 
 #[test]

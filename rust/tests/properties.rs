@@ -11,7 +11,7 @@ use ccrsat::coordinator::scrt::{Record, Scrt};
 use ccrsat::coordinator::srs::srs;
 use ccrsat::coordinator::Scenario;
 use ccrsat::network::{CommModel, GridTopology};
-use ccrsat::config::{OutageSpec, SimConfig, TopologyMode};
+use ccrsat::config::{NodeOutageSpec, OutageSpec, SimConfig, TopologyMode};
 use ccrsat::simulator::{
     prepare, prepare_sequential, PreparedSource, ShardPartition, Simulation,
     StreamConfig, StreamingSource,
@@ -360,6 +360,12 @@ fn assert_reports_bit_identical(
     assert_eq!(a.broadcast_records, b.broadcast_records, "{label}");
     assert_eq!(a.retransmits, b.retransmits, "{label}");
     assert_eq!(a.dropped_chunks, b.dropped_chunks, "{label}");
+    assert_eq!(a.crashes, b.crashes, "{label}");
+    assert_eq!(a.lost_tasks, b.lost_tasks, "{label}");
+    assert_eq!(a.failover_reselections, b.failover_reselections, "{label}");
+    assert_eq!(a.timeout_fallbacks, b.timeout_fallbacks, "{label}");
+    assert_eq!(a.cold_scrt_rebuilds, b.cold_scrt_rebuilds, "{label}");
+    assert_eq!(a.crash_dropped_chunks, b.crash_dropped_chunks, "{label}");
     assert_eq!(a.dedup_saved_mb, b.dedup_saved_mb, "{label}");
     assert_eq!(a.handovers, b.handovers, "{label}");
     assert_eq!(a.stranded_chunks, b.stranded_chunks, "{label}");
@@ -617,6 +623,151 @@ fn prop_shard_partitions_are_pure_relabelings() {
                 .with_prepared(&prep)
                 .run()
                 .unwrap();
+            for part in [ShardPartition::RoundRobin, ShardPartition::Blocks] {
+                for threads in [1usize, 2, 4] {
+                    let sharded = Simulation::new(cfg, &backend, scenario)
+                        .with_workload(&wl)
+                        .with_prepared(&prep)
+                        .threads(threads)
+                        .partition(part)
+                        .run()
+                        .unwrap();
+                    assert_reports_bit_identical(
+                        &single,
+                        &sharded,
+                        &format!(
+                            "{variant} {scenario} {} K={threads}",
+                            part.name()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Node-fault sweep: across workload seeds, crash intensities (off,
+/// sparse, aggressive), both SCRT reboot policies (cold-start wipe and
+/// persisted table), shard counts K ∈ {1, 2, 4} and every scenario, the
+/// sharded engine's full `RunReport` — aggregates, fault counters,
+/// per-satellite summaries, per-task logs — is bit-identical to the
+/// single-threaded engine's. With faults off (`node_faults_active()` is
+/// false) the run must additionally land on the reference monolith's
+/// exact numbers: the fault machinery is invisible until switched on.
+#[test]
+fn prop_node_fault_sweep_bit_identical_and_fault_free_reproduces_goldens() {
+    let mut case_rng = Rng::new(0xFA17);
+    let mut crashes = 0u64;
+    for case in 0..2u64 {
+        let mut base = SimConfig::paper_default(3);
+        base.workload.total_tasks = 36 + case_rng.below(17);
+        base.workload.seed = 51_000 + case;
+        // Smaller tiles keep the debug-mode render cost sane; identity is
+        // independent of tile size.
+        base.workload.raw_h = 32;
+        base.workload.raw_w = 32;
+        let backend = NativeBackend::new(&base);
+        let wl = build_workload(&base);
+        let prep = prepare(&backend, &wl).unwrap();
+        // At 0.3 arrivals/s per satellite the ~40-task horizon is tens of
+        // seconds, so per-satellite MTBFs of 40 s / 8 s yield a sparse and
+        // an aggressive crash schedule inside the run.
+        for mtbf in [f64::INFINITY, 40.0, 8.0] {
+            let mut cfg = base.clone();
+            cfg.faults.mtbf_s = mtbf;
+            cfg.faults.downtime_s = 2.0;
+            cfg.faults.collab_timeout_s = 1.5;
+            // Alternate the reboot policy so both the cold-start wipe and
+            // the persisted-SCRT paths are swept.
+            cfg.faults.scrt_persist = case == 1;
+            for scenario in Scenario::ALL {
+                let single = Simulation::new(&cfg, &backend, scenario)
+                    .with_workload(&wl)
+                    .with_prepared(&prep)
+                    .run()
+                    .unwrap();
+                crashes += single.crashes;
+                if mtbf.is_infinite() {
+                    assert_eq!(single.crashes, 0, "case {case} {scenario}");
+                    let golden = Simulation::new(&cfg, &backend, scenario)
+                        .with_workload(&wl)
+                        .with_prepared(&prep)
+                        .run_reference()
+                        .unwrap();
+                    assert_reports_bit_identical(
+                        &golden,
+                        &single,
+                        &format!("case {case} {scenario} faults-off vs reference"),
+                    );
+                }
+                for threads in [1usize, 2, 4] {
+                    let sharded = Simulation::new(&cfg, &backend, scenario)
+                        .with_workload(&wl)
+                        .with_prepared(&prep)
+                        .threads(threads)
+                        .run()
+                        .unwrap();
+                    assert_reports_bit_identical(
+                        &single,
+                        &sharded,
+                        &format!(
+                            "case {case} {scenario} mtbf={mtbf} K={threads}"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    assert!(
+        crashes > 0,
+        "no satellite ever crashed: the node-fault sweep is vacuous"
+    );
+}
+
+/// Scripted crashes compose with everything else: a `--node-outages`
+/// schedule that downs satellites mid-run stays bit-identical between
+/// the single-threaded and sharded engines across every scenario,
+/// K ∈ {1, 2, 4}, both shard partitions, and both a static grid and a
+/// duty-cycled Walker contact plan (node faults stacked on top of link
+/// windows). Every scripted span must actually fire — the crash counter
+/// equals the schedule length, so the sweep can't silently go vacuous.
+#[test]
+fn prop_scripted_crashes_stay_bit_identical_across_shards_and_topologies() {
+    let mut grid = SimConfig::paper_default(3);
+    grid.workload.total_tasks = 40;
+    grid.workload.seed = 61_000;
+    // Smaller tiles keep the debug-mode render cost sane; identity is
+    // independent of tile size.
+    grid.workload.raw_h = 32;
+    grid.workload.raw_w = 32;
+    grid.faults.node_outages =
+        NodeOutageSpec::parse_list("4@2..6,0@5..9,8@1..4").unwrap();
+    grid.faults.collab_timeout_s = 1.5;
+
+    let mut walker = grid.clone();
+    walker.topology.mode = TopologyMode::Walker;
+    walker.topology.duty = 0.6;
+    walker.topology.period_s = 30.0;
+    walker.comm.chunk_bytes = 6e6;
+    // The Walker variant also wipes the SCRT on reboot so the cold-start
+    // path is exercised under a dynamic contact plan.
+    walker.faults.scrt_persist = false;
+    grid.faults.scrt_persist = true;
+
+    for (variant, cfg) in [("grid", &grid), ("walker", &walker)] {
+        let backend = NativeBackend::new(cfg);
+        let wl = build_workload(cfg);
+        let prep = prepare(&backend, &wl).unwrap();
+        for scenario in Scenario::ALL {
+            let single = Simulation::new(cfg, &backend, scenario)
+                .with_workload(&wl)
+                .with_prepared(&prep)
+                .run()
+                .unwrap();
+            assert_eq!(
+                single.crashes, 3,
+                "{variant} {scenario}: every scripted span fires once"
+            );
             for part in [ShardPartition::RoundRobin, ShardPartition::Blocks] {
                 for threads in [1usize, 2, 4] {
                     let sharded = Simulation::new(cfg, &backend, scenario)
